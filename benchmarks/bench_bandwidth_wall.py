@@ -1,0 +1,65 @@
+"""Fig. 1(b) — the O(T) bandwidth wall: per-token decode cost grows with
+visible history T under dense attention, and flattens once the working set is
+capped at W* (diagnostic sweep, single decode step timed directly)."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import print_rows, row
+from repro.configs import get_reduced
+from repro.core.descriptor import empty_descriptor
+from repro.models import registry
+
+
+def _step_time(cfg, params, T, window, B=4, bt=8, iters=20):
+    # the capped working set gathers only ceil(W/bt)+1 blocks per step —
+    # KV-RM's explicit working-set boundary; dense gathers the full history
+    NB = min(T, window) // bt + 1
+    P = B * NB + 2
+    pools = registry.init_decode_pools(cfg, batch=B, num_blocks=P, block_tokens=bt)
+    d = empty_descriptor(B, NB, 1, NB + 1)
+    tbl = np.zeros((B, NB), np.int32)
+    for b in range(B):
+        tbl[b] = 1 + b * NB + np.arange(NB)
+    wb = max(0, ((T - min(T, window)) // bt) * bt)
+    d = d._replace(block_table=tbl,
+                   window_base=np.full(B, wb, np.int32),
+                   seq_lens=np.full(B, T - 1, np.int32),
+                   slot_active=np.ones(B, np.int32),
+                   write_block=tbl[:, -1], write_offset=np.zeros(B, np.int32))
+    d = jax.tree.map(jnp.asarray, d)
+    cfgw = cfg.replace(serving=cfg.serving.__class__(near_window=window))
+    tok = jnp.zeros((B,), jnp.int32)
+
+    @jax.jit
+    def step(params, tok, pools, d):
+        logits, pools, _ = registry.decode_step(params, cfgw, tok, pools, d)
+        return jnp.argmax(logits, -1), pools
+
+    out, pools = step(params, tok, pools, d)       # compile
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out, pools = step(params, tok, pools, d)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def run():
+    cfg = get_reduced("qwen2.5-32b")
+    params = registry.init_params(jax.random.PRNGKey(0), cfg)
+    rows = []
+    W = 64
+    for T in (64, 128, 256, 512, 1024):
+        dense = _step_time(cfg, params, T, window=T)
+        capped = _step_time(cfg, params, T, window=W)
+        rows.append(row(f"bandwidth_wall/T={T}", dense * 1e6,
+                        dense_us=dense * 1e6, capped_us=capped * 1e6,
+                        ratio=dense / max(capped, 1e-9)))
+    return rows
+
+
+if __name__ == "__main__":
+    print_rows(run())

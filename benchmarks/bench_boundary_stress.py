@@ -1,0 +1,50 @@
+"""Fig. 7 — boundary stress: (a-c) concurrency sweep auditing the
+single-commit invariant and control-plane share; (d-f) fragmentation regimes
+for descriptor merging."""
+import numpy as np
+
+from benchmarks.common import engine, print_rows, row, run_workload
+from repro.core.transport import MergeStagedTransport
+from repro.data import traces
+
+
+def run():
+    rows = []
+    # (a-c) concurrency sweep
+    for B in (4, 8, 16, 32):
+        eng = engine("paged_merge", batch=B, max_seq=128, pool_budget=0.75)
+        reqs = traces.mixed_length_workload(traces.TraceConfig(
+            n_requests=2 * B, token_scale=0.2, vocab=eng.cfg.vocab_size, seed=B))
+        run_workload(eng, reqs)
+        a = eng.audit()
+        rows.append(row(f"stress/concurrency/B={B}",
+                        eng.latency_stats()["mean_ms"] * 1e3,
+                        single_commit=int(a["single_commit_per_step"]),
+                        compilations=a["compilations"],
+                        submit_share=a["submit_share"],
+                        frame_commit_us=a["frame_commit_us"],
+                        tok_s=eng.throughput(),
+                        p99_ms=eng.latency_stats()["p99_ms"]))
+    # (d-f) fragmentation regimes
+    rng = np.random.default_rng(0)
+    regimes = {
+        "contiguous": list(range(1, 33)),
+        "mild": [b + (i // 8) * 4 for i, b in enumerate(range(1, 33))],
+        "strong": [b + (i // 2) * 3 for i, b in enumerate(range(1, 33))],
+        "adversarial": list(rng.permutation(np.arange(1, 400))[:32]),
+    }
+    for name, blocks in regimes.items():
+        for merging in (True, False):
+            t = MergeStagedTransport(block_bytes=4096,
+                                     merge_threshold_bytes=128 * 1024,
+                                     max_hold_steps=2, max_trains=64)
+            _, groups = t.reduce(blocks, merging=merging)
+            tag = "merged" if merging else "unmerged"
+            rows.append(row(f"stress/frag/{name}/{tag}", 0.0,
+                            dma_groups=groups,
+                            avg_bytes=t.stats.avg_group_bytes))
+    return rows
+
+
+if __name__ == "__main__":
+    print_rows(run())

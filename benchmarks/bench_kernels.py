@@ -1,0 +1,61 @@
+"""Kernel-level microbench: jnp reference paged decode attention under
+merged-contiguous vs fragmented block tables, and prefill flash vs dense.
+(Wall numbers are CPU-reference; TPU behavior is covered by the dry-run
+roofline — this tracks relative regressions.)"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import print_rows, row
+from repro.kernels import ref
+from repro.models.common import attention_blocked, attention_dense
+
+
+def _time(f, *a, iters=10):
+    out = f(*a)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = f(*a)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run():
+    rows = []
+    B, H, KVh, hd, BT, NB = 8, 8, 2, 64, 16, 32
+    P = B * NB + 2
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, H, hd), jnp.bfloat16)
+    pk = jax.random.normal(ks[1], (P, BT, KVh, hd), jnp.bfloat16)
+    pv = jax.random.normal(ks[2], (P, BT, KVh, hd), jnp.bfloat16)
+    wb = jnp.zeros(B, jnp.int32)
+    seq = jnp.full((B,), NB * BT - 1, jnp.int32)
+    act = jnp.ones(B, jnp.int32)
+
+    fn = jax.jit(lambda q, pk, pv, tbl: ref.paged_decode_attention_ref(
+        q, pk, pv, tbl, wb, seq, act, near_window=NB * BT)[0])
+    tbl_c = jnp.asarray(np.stack([1 + b * NB + np.arange(NB) for b in range(B)])
+                        .astype(np.int32))
+    rng = np.random.default_rng(0)
+    tbl_f = jnp.asarray(np.stack([rng.permutation(np.arange(1, P))[:NB]
+                                  for _ in range(B)]).astype(np.int32))
+    rows.append(row("kernel/paged_decode/contiguous", _time(fn, q, pk, pv, tbl_c)))
+    rows.append(row("kernel/paged_decode/fragmented", _time(fn, q, pk, pv, tbl_f)))
+
+    S = 512
+    qq = jax.random.normal(ks[0], (2, S, H, hd), jnp.bfloat16)
+    kk = jax.random.normal(ks[1], (2, S, KVh, hd), jnp.bfloat16)
+    vv = jax.random.normal(ks[2], (2, S, KVh, hd), jnp.bfloat16)
+    f_blk = jax.jit(lambda q, k, v: attention_blocked(q, k, v, causal=True,
+                                                      q_block=128, kv_block=128))
+    f_dn = jax.jit(lambda q, k, v: attention_dense(q, k, v, causal=True))
+    rows.append(row("kernel/prefill/blocked", _time(f_blk, qq, kk, vv)))
+    rows.append(row("kernel/prefill/dense", _time(f_dn, qq, kk, vv)))
+    return rows
+
+
+if __name__ == "__main__":
+    print_rows(run())

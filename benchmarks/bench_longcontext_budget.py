@@ -1,0 +1,34 @@
+"""Fig. 5 — long-context scaling under full vs tight-20% KV budgets
+(bounded-budget far-view path keeps reserved bytes and control costs flat
+as context grows)."""
+from benchmarks.common import engine, print_rows, row, run_workload
+from repro.data import traces
+from repro.core.scheduler import Request
+import numpy as np
+
+
+def run():
+    rows = []
+    for ctx in (128, 256, 512):
+        for budget, tag in ((1.0, "full"), (0.8, "tight20")):
+            eng = engine("full", batch=2, max_seq=ctx + 64, near_window=32,
+                         farview_cap=8, sv_chunk=16, pool_budget=budget)
+            rng = np.random.default_rng(ctx)
+            for i in range(3):
+                eng.submit(Request(
+                    rid=i, prompt=rng.integers(0, 200, size=ctx // 2).astype(np.int32),
+                    gen_len=24))
+            run_workload(eng, [])
+            a = eng.audit()
+            lat = eng.latency_stats()
+            rows.append(row(f"longctx/ctx={ctx}/{tag}", lat["mean_ms"] * 1e3,
+                            tok_s=eng.throughput(), p99_ms=lat["p99_ms"],
+                            peak_reserved_kv=a["peak_reserved_kv"],
+                            frame_commit_us=a["frame_commit_us"],
+                            submit_share=a["submit_share"],
+                            dma_groups=a["dma_groups_per_step"]))
+    return rows
+
+
+if __name__ == "__main__":
+    print_rows(run())

@@ -1,0 +1,23 @@
+"""Table 4 — predictable-regime sanity: homogeneous lengths, steady width.
+The static arena is expected to be at/near the frontier here; KV-RM must stay
+within a small margin (the paper's balance check)."""
+from benchmarks.common import engine, print_rows, row, run_workload
+from repro.data import traces
+
+
+def run():
+    rows = []
+    for mode in ("arena", "paged", "paged_merge", "full"):
+        eng = engine(mode, batch=8, max_seq=128)
+        reqs = traces.predictable_workload(traces.TraceConfig(
+            n_requests=16, token_scale=0.25, vocab=eng.cfg.vocab_size, seed=5))
+        run_workload(eng, reqs)
+        lat = eng.latency_stats()
+        rows.append(row(f"predictable/{mode}", lat["mean_ms"] * 1e3,
+                        tok_s=eng.throughput(), p99_ms=lat["p99_ms"],
+                        finished=len(eng.sched.finished)))
+    return rows
+
+
+if __name__ == "__main__":
+    print_rows(run())

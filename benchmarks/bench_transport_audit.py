@@ -1,0 +1,24 @@
+"""Fig. 6(a-b) — endpoint transport audit: DMA groups/step and average merged
+transfer size, with vs without descriptor merging, same paged workload."""
+from benchmarks.common import engine, print_rows, row, run_workload
+from repro.data import traces
+
+
+def run():
+    rows = []
+    for mode in ("paged", "paged_merge"):
+        eng = engine(mode, batch=8, max_seq=256, pool_budget=0.6)
+        reqs = traces.mixed_length_workload(traces.TraceConfig(
+            n_requests=24, token_scale=0.3, vocab=eng.cfg.vocab_size, seed=7))
+        run_workload(eng, reqs)
+        st = eng.transport.stats
+        rows.append(row(f"transport/{mode}", 0.0,
+                        dma_groups_per_step=st.groups_per_step,
+                        avg_dma_bytes=st.avg_group_bytes,
+                        unmerged_groups_per_step=st.unmerged_groups_per_step,
+                        max_groups=st.max_groups))
+    return rows
+
+
+if __name__ == "__main__":
+    print_rows(run())

@@ -1,0 +1,51 @@
+"""Shared benchmark helpers: engine factory, workload runners, CSV rows."""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import numpy as np
+
+from repro.configs import get_reduced
+from repro.core.engine import EngineConfig, KVRMEngine
+from repro.data import traces
+from repro.models import registry
+
+ARCH = "qwen2.5-32b"      # bench model family (paper uses qwen2.5-7B)
+_PARAM_CACHE = {}
+
+
+def engine(mode: str, *, batch=8, max_seq=256, near_window=None,
+           block_tokens=8, pool_budget=1.0, arch=ARCH, seed=0, **kw) -> KVRMEngine:
+    key = (arch, seed)
+    if key not in _PARAM_CACHE:
+        cfg = get_reduced(arch)
+        _PARAM_CACHE[key] = (cfg, registry.init_params(jax.random.PRNGKey(seed), cfg))
+    cfg, params = _PARAM_CACHE[key]
+    return KVRMEngine(cfg, params, EngineConfig(
+        mode=mode, batch=batch, max_seq=max_seq, near_window=near_window,
+        block_tokens=block_tokens, pool_budget_frac=pool_budget, **kw))
+
+
+def run_workload(eng: KVRMEngine, reqs, warmup: int = 3, replay_scale=None):
+    for r in reqs:
+        eng.submit(r)
+    if replay_scale is not None:
+        t0 = time.perf_counter()
+        eng.run(max_steps=200_000,
+                now_fn=lambda: (time.perf_counter() - t0) / replay_scale)
+    else:
+        eng.run(max_steps=200_000)
+    return eng
+
+
+def row(name: str, us: float, **derived) -> Tuple[str, float, dict]:
+    return (name, us, derived)
+
+
+def print_rows(rows: List[Tuple[str, float, dict]]):
+    for name, us, derived in rows:
+        dv = ";".join(f"{k}={v:.4g}" if isinstance(v, float) else f"{k}={v}"
+                      for k, v in derived.items())
+        print(f"{name},{us:.2f},{dv}")

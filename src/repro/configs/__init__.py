@@ -1,0 +1,39 @@
+"""Architecture config registry: ``get_config(arch_id)`` / ``get_reduced(arch_id)``."""
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig, ServingConfig, ShapeConfig, SHAPES
+from repro.configs import (  # noqa: F401
+    zamba2_7b, kimi_k2_1t_a32b, deepseek_v3_671b, qwen2_5_32b, qwen3_32b,
+    yi_34b, nemotron_4_15b, internvl2_26b, xlstm_125m, seamless_m4t_medium,
+)
+
+_MODULES = {
+    "zamba2-7b": zamba2_7b,
+    "kimi-k2-1t-a32b": kimi_k2_1t_a32b,
+    "deepseek-v3-671b": deepseek_v3_671b,
+    "qwen2.5-32b": qwen2_5_32b,
+    "qwen3-32b": qwen3_32b,
+    "yi-34b": yi_34b,
+    "nemotron-4-15b": nemotron_4_15b,
+    "internvl2-26b": internvl2_26b,
+    "xlstm-125m": xlstm_125m,
+    "seamless-m4t-medium": seamless_m4t_medium,
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_MODULES)}")
+    return _MODULES[arch_id].CONFIG
+
+
+def get_reduced(arch_id: str) -> ModelConfig:
+    return _MODULES[arch_id].reduced()
+
+
+__all__ = [
+    "ModelConfig", "ServingConfig", "ShapeConfig", "SHAPES",
+    "ARCH_IDS", "get_config", "get_reduced",
+]

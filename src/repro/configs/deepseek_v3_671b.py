@@ -1,0 +1,36 @@
+"""deepseek-v3-671b — MLA, 1 shared + 256 routed top-8 experts [arXiv:2412.19437]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="deepseek-v3-671b",
+    family="moe",
+    n_layers=61,
+    d_model=7168,
+    n_heads=128,
+    n_kv_heads=128,          # MLA: logical kv heads == heads; paged payload is the latent
+    head_dim=128,
+    d_ff=2048,               # per-expert FFN width
+    vocab_size=129280,
+    n_experts=256,
+    top_k=8,
+    n_shared_experts=1,
+    first_k_dense=3,
+    dense_d_ff=18432,
+    use_mla=True,
+    kv_lora_rank=512,
+    q_lora_rank=1536,
+    qk_rope_dim=64,
+    qk_nope_dim=128,
+    v_head_dim=128,
+    rope_theta=10000.0,
+)
+
+
+def reduced() -> ModelConfig:
+    return CONFIG.replace(
+        n_layers=3, d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
+        d_ff=32, vocab_size=256, n_experts=8, top_k=2, n_shared_experts=1,
+        first_k_dense=1, dense_d_ff=128,
+        kv_lora_rank=32, q_lora_rank=48, qk_rope_dim=8, qk_nope_dim=16,
+        v_head_dim=16,
+    )

@@ -1,0 +1,27 @@
+"""internvl2-26b — InternViT + InternLM2 backbone [arXiv:2404.16821].
+
+The ViT frontend is a STUB per assignment: ``input_specs()`` provides
+precomputed patch embeddings; only the LM backbone is modeled.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="internvl2-26b",
+    family="vlm",
+    n_layers=48,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=16384,
+    vocab_size=92553,
+    frontend="vision_stub",
+    rope_theta=1000000.0,
+)
+
+
+def reduced() -> ModelConfig:
+    return CONFIG.replace(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=128, vocab_size=256,
+    )

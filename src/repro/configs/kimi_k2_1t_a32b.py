@@ -1,0 +1,28 @@
+"""kimi-k2-1t-a32b — trillion-param MoE, 384 experts top-8 [arXiv:2501.kimi2]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="kimi-k2-1t-a32b",
+    family="moe",
+    n_layers=61,
+    d_model=7168,
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=2048,               # per-expert FFN width
+    vocab_size=163840,
+    n_experts=384,
+    top_k=8,
+    n_shared_experts=1,
+    first_k_dense=1,
+    dense_d_ff=18432,
+    rope_theta=50000.0,
+)
+
+
+def reduced() -> ModelConfig:
+    return CONFIG.replace(
+        n_layers=3, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=32, vocab_size=256, n_experts=8, top_k=2, n_shared_experts=1,
+        first_k_dense=1, dense_d_ff=128,
+    )

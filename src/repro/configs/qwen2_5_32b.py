@@ -1,0 +1,23 @@
+"""qwen2.5-32b — dense GQA with QKV bias [hf:Qwen/Qwen2.5 family]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="qwen2.5-32b",
+    family="dense",
+    n_layers=64,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=27648,
+    vocab_size=152064,
+    qkv_bias=True,
+    rope_theta=1000000.0,
+)
+
+
+def reduced() -> ModelConfig:
+    return CONFIG.replace(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=128, vocab_size=256,
+    )

@@ -1,0 +1,34 @@
+"""xlstm-125m — alternating sLSTM + mLSTM blocks [arXiv:2405.04517].
+
+Attention-free: no KV cache exists, recurrent state is O(1) per session.
+KV-RM's pager manages per-session state slots but the window/far-view/
+transport-merging machinery is inapplicable (see DESIGN.md §4).
+"""
+from repro.configs.base import ModelConfig
+
+_PATTERN = tuple("m" if i % 2 == 0 else "s" for i in range(12))
+
+CONFIG = ModelConfig(
+    arch_id="xlstm-125m",
+    family="ssm",
+    n_layers=12,
+    d_model=768,
+    n_heads=4,
+    n_kv_heads=4,
+    head_dim=192,            # 768 / 4
+    d_ff=0,                  # xLSTM blocks integrate their own projections
+    vocab_size=50304,
+    ssm_expand=2,
+    ssm_conv=4,
+    ssm_headdim=192,
+    xlstm_pattern=_PATTERN,
+    sub_quadratic=True,
+)
+
+
+def reduced() -> ModelConfig:
+    return CONFIG.replace(
+        n_layers=4, d_model=64, n_heads=2, n_kv_heads=2, head_dim=32,
+        vocab_size=256, ssm_headdim=32,
+        xlstm_pattern=("m", "s", "m", "s"),
+    )

@@ -1,0 +1,29 @@
+"""zamba2-7b — hybrid Mamba2 + shared attention blocks [arXiv:2411.15242]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="zamba2-7b",
+    family="hybrid",
+    n_layers=81,
+    d_model=3584,
+    n_heads=32,
+    n_kv_heads=32,
+    head_dim=112,            # 3584 / 32
+    d_ff=14336,
+    vocab_size=32000,
+    ssm_state=64,
+    ssm_expand=2,
+    ssm_conv=4,
+    ssm_headdim=64,
+    shared_attn_every=6,     # one shared attention block applied every 6 mamba layers
+    rope_theta=10000.0,
+    sub_quadratic=True,      # Mamba2 state + KV-RM near-window shared attention
+)
+
+
+def reduced() -> ModelConfig:
+    return CONFIG.replace(
+        n_layers=6, d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
+        d_ff=128, vocab_size=256, ssm_state=8, ssm_headdim=16,
+        shared_attn_every=3,
+    )

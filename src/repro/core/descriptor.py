@@ -1,0 +1,94 @@
+"""FrameDescriptor — the single per-step committed descriptor (paper §4.2).
+
+The device consumes exactly one committed descriptor per decode step. The host
+expresses all runtime variability (EOS churn, admission, window slide, far-view
+selection) as *mapping edits* that the pager seals with one ``Frame`` commit;
+the result is this fixed-shape pytree. Executable shape never changes.
+
+Granularity (paper's BLOCKALIGN): the pager allocates in *page blocks* of
+``block_pages`` contiguous pages. The kernel-visible near-window table is a
+block table, so each grid step moves one burst-friendly block (~tau bytes)
+instead of a fragmented page — this is the merge-staged transport contract
+realized as an HBM->VMEM copy schedule (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+class FrameDescriptor(NamedTuple):
+    """Fixed-shape, device-consumed view of one decode step.
+
+    B = engine batch width (fixed), NB = near-window blocks (fixed),
+    CAP = far-view cap (fixed), MT = max transport trains (fixed).
+    All integer arrays are int32.
+    """
+    # --- near window (block granularity) ---
+    block_table: jnp.ndarray     # (B, NB)  physical block ids, oldest->newest
+    window_base: jnp.ndarray     # (B,)     absolute pos of block_table[:,0] token 0
+    seq_lens: jnp.ndarray        # (B,)     logical length BEFORE this step's token
+    slot_active: jnp.ndarray     # (B,)     1 if slot serves a live request
+    # --- this step's KV write ---
+    write_block: jnp.ndarray     # (B,)     physical block receiving the new K/V
+    write_offset: jnp.ndarray    # (B,)     token offset within that block
+    # --- merged transport trains (stats + Pallas copy schedule) ---
+    train_start: jnp.ndarray     # (B, MT)  physical start block of each train
+    train_len: jnp.ndarray       # (B, MT)  blocks per train (0 = unused)
+    train_dst: jnp.ndarray       # (B, MT)  destination block offset in window
+    # --- far view (optional policy; zero-filled when disabled) ---
+    far_table: jnp.ndarray       # (B, CAP) chunk indices into per-slot far pool
+    far_valid: jnp.ndarray       # (B, CAP) 1 if entry holds a real summary
+    # far-view chunk summarization for THIS step (sealed in the same commit)
+    far_chunk_blocks: jnp.ndarray  # (B, CB) blocks of the just-completed chunk
+    far_chunk_tokens: jnp.ndarray  # (B,)    valid tokens in that chunk
+    far_do_summarize: jnp.ndarray  # (B,)    1 if a chunk completed this step
+    far_write_idx: jnp.ndarray     # (B,)    far-pool slot receiving the summary
+    # --- commit metadata ---
+    epoch: jnp.ndarray           # ()       frame epoch counter (single commit audit)
+
+    @property
+    def batch(self) -> int:
+        return self.block_table.shape[0]
+
+    @property
+    def n_blocks(self) -> int:
+        return self.block_table.shape[1]
+
+
+def empty_descriptor(batch: int, n_blocks: int, cap: int, max_trains: int,
+                     chunk_blocks: int = 1, np_mod=np) -> FrameDescriptor:
+    """Host-side zeroed descriptor (numpy for cheap in-place edits)."""
+    z = lambda *s: np_mod.zeros(s, np_mod.int32)
+    return FrameDescriptor(
+        block_table=z(batch, n_blocks),
+        window_base=z(batch),
+        seq_lens=z(batch),
+        slot_active=z(batch),
+        write_block=z(batch),
+        write_offset=z(batch),
+        train_start=z(batch, max_trains),
+        train_len=z(batch, max_trains),
+        train_dst=z(batch, max_trains),
+        far_table=z(batch, cap),
+        far_valid=z(batch, cap),
+        far_chunk_blocks=z(batch, chunk_blocks),
+        far_chunk_tokens=z(batch),
+        far_do_summarize=z(batch),
+        far_write_idx=z(batch),
+        epoch=np_mod.zeros((), np_mod.int32),
+    )
+
+
+def descriptor_geometry(serving, max_seq: int):
+    """Static shape parameters implied by a ServingConfig."""
+    page, near = serving.page_size, serving.near_window
+    # block_pages chosen so one block ~ tau bytes is decided by the engine per
+    # model (depends on kv_width); geometry here is token-level.
+    return {
+        "page_size": page,
+        "near_window": near,
+        "max_pages": max_seq // page + 1,
+    }

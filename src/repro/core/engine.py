@@ -1,0 +1,418 @@
+"""KVRMEngine — fixed-shape decode serving under the descriptor transport
+interface (paper §4), plus the static-arena baseline on the SAME executor.
+
+Modes (Table 5 attribution rows):
+  * arena       — static-graph baseline: worst-case contiguous per-slot
+                  reservation, no paging, no merging.
+  * paged       — + KV pager (RESERVE/ALIAS/TRIM/FRAME), unmerged transport.
+  * paged_merge — + merge-staged descriptor transport (core KV-RM path).
+  * full        — + far-view summarization (optional bounded-budget policy).
+
+Invariants audited every run: the decode step is compiled ONCE (no retrace
+after warm-up), exactly one Frame commit per step, bounded host control share.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.descriptor import FrameDescriptor, empty_descriptor
+from repro.core.farview import FarViewPolicy
+from repro.core.pager import BlockPager
+from repro.core.scheduler import Request, Scheduler
+from repro.core.transport import MergeStagedTransport, StagedDescriptor, merge_runs
+from repro.models import registry
+
+MODES = ("arena", "paged", "paged_merge", "full")
+
+
+@dataclass
+class EngineConfig:
+    mode: str = "paged_merge"
+    batch: int = 8                   # fixed slot width B
+    max_seq: int = 512               # worst-case sequence length
+    near_window: Optional[int] = None   # W* (kernel width); None = max_seq (dense)
+    block_tokens: int = 16           # BLOCKALIGN quantum (tokens)
+    pool_budget_frac: float = 1.0    # paged pool size vs worst case
+    farview_cap: int = 16
+    sv_chunk: int = 64
+    span_blocks: int = 4             # placement span (BLOCKALIGN granularity)
+    greedy: bool = True
+    debug_logits: bool = False       # capture per-step logits (tests only)
+
+
+@dataclass
+class StepMetrics:
+    wall: float = 0.0
+    host: float = 0.0                # control-plane time (submit+frame)
+    frame_commit: float = 0.0
+    dma_groups: int = 0
+    active: int = 0
+    emitted: int = 0
+
+
+class KVRMEngine:
+    def __init__(self, cfg: ModelConfig, params, ecfg: EngineConfig):
+        assert ecfg.mode in MODES
+        self.cfg = cfg
+        self.params = params
+        self.e = ecfg
+        self.paged_arch = registry.uses_paged_kv(cfg)
+
+        bt = ecfg.block_tokens
+        self.bt = bt
+        self.W = ecfg.near_window or ecfg.max_seq
+        self.NB = -(-self.W // bt) + 1
+        self.MT = self.NB + 1
+        self.blocks_per_seq = -(-ecfg.max_seq // bt) + 1
+        worst = ecfg.batch * self.blocks_per_seq
+        if ecfg.mode == "arena":
+            self.num_blocks = worst + 1
+        else:
+            self.num_blocks = max(self.NB * ecfg.batch,
+                                  int(worst * ecfg.pool_budget_frac)) + 1
+
+        # per-layer payload bytes (transport accounting uses the real model)
+        self.bytes_per_token = registry.paged_payload_bytes_per_token(cfg)
+        self.block_bytes = bt * self.bytes_per_token
+        n_layers_paged = max(1, registry.n_paged_layers(cfg))
+        self.pool_bytes_total = (self.num_blocks - 1) * self.block_bytes * n_layers_paged
+
+        self.farview = ecfg.mode == "full" and self.paged_arch and cfg.family != "hybrid"
+        self.cap = ecfg.farview_cap if self.farview else 1
+        self.max_chunks = (-(-max(1, ecfg.max_seq - self.W) // ecfg.sv_chunk) + 1
+                           if self.farview else 0)
+        self.chunk_blocks = max(1, ecfg.sv_chunk // bt)
+
+        # --- device state ---
+        self.pools = registry.init_decode_pools(
+            cfg, batch=ecfg.batch, num_blocks=self.num_blocks, block_tokens=bt,
+            max_chunks=self.max_chunks,
+            enc_len=ecfg.max_seq if cfg.family == "encdec" else 0)
+        if cfg.family == "encdec":
+            self.pools["enc_len"] = jnp.zeros((ecfg.batch,), jnp.int32)
+
+        # --- host control plane ---
+        self.sched = Scheduler(ecfg.batch)
+        self.pager = (BlockPager(self.num_blocks, bt, self.block_bytes,
+                                 span_blocks=ecfg.span_blocks)
+                      if ecfg.mode != "arena" else None)
+        self.transport = MergeStagedTransport(
+            block_bytes=self.block_bytes,
+            merge_threshold_bytes=cfg.serving.merge_threshold_bytes,
+            max_hold_steps=cfg.serving.max_hold_steps, max_trains=self.MT)
+        self.fv = (FarViewPolicy(ecfg.batch, self.max_chunks, self.cap,
+                                 ecfg.sv_chunk, bt) if self.farview else None)
+
+        # arena bookkeeping: slot -> fixed block range
+        self._arena_base = [1 + i * self.blocks_per_seq for i in range(ecfg.batch)]
+        self._slot_len = np.zeros(ecfg.batch, np.int64)   # tokens in cache
+        self._slot_sid = -np.ones(ecfg.batch, np.int64)
+        self._last_token = np.zeros(ecfg.batch, np.int64)
+
+        # --- compiled decode step (ONE compilation; invariant audit) ---
+        cfg_dec = cfg.replace(serving=cfg.serving.__class__(
+            page_size=cfg.serving.page_size, near_window=self.W,
+            farview_cap=self.cap, sv_chunk=ecfg.sv_chunk,
+            merge_threshold_bytes=cfg.serving.merge_threshold_bytes,
+            max_hold_steps=cfg.serving.max_hold_steps,
+            enable_farview=self.farview))
+        self._cfg_dec = cfg_dec
+
+        dbg = ecfg.debug_logits
+
+        def _step(params, tokens, pools, descr):
+            logits, pools, fu = registry.decode_step(params, cfg_dec, tokens,
+                                                     pools, descr)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return nxt, pools, fu, (logits if dbg else jnp.zeros((), jnp.int32))
+
+        self._step_fn = jax.jit(_step, donate_argnums=(2,))
+        self._compiles = 0
+        self.debug_logits: List[np.ndarray] = []
+
+        # metrics
+        self.metrics: List[StepMetrics] = []
+        self.frames_committed = 0
+        self.steps_run = 0
+        self.peak_reserved_kv = 0
+        self.peak_active_kv = 0
+        self.cum_wall = 0.0
+        self._rid_to_sid: Dict[int, int] = {}
+
+        # encdec: encoder-side prefill executor (separate from the audited
+        # decode path; populates immutable cross-attention KV per admission)
+        if cfg.family == "encdec":
+            def _encode(params, enc_embeds):
+                from repro.models import encdec as ed
+                enc_out = ed.encode(params, cfg, enc_embeds)
+                return ed.cross_kv(params, cfg, enc_out)
+            self._encode_fn = jax.jit(_encode)
+            self._set_cross = jax.jit(
+                lambda pools, slot_onehot, ck, cv, elen: {
+                    **pools,
+                    "cross_k": jnp.where(slot_onehot[None, :, None, None, None],
+                                         ck, pools["cross_k"]),
+                    "cross_v": jnp.where(slot_onehot[None, :, None, None, None],
+                                         cv, pools["cross_v"]),
+                    "enc_len": jnp.where(slot_onehot, elen, pools["enc_len"]),
+                })
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.sched.submit(req)
+
+    # ------------------------------------------------------------------
+    def _admit(self, now: float) -> None:
+        for slot, req, sid in self.sched.admit(now):
+            self._slot_len[slot] = 0
+            self._last_token[slot] = int(req.prompt[0]) if len(req.prompt) else 0
+            if self.pager is not None:
+                self.pager.open_session(sid)
+                self._slot_sid[slot] = sid
+                if req.prefix_of is not None and req.prefix_len >= self.bt:
+                    src_sid = self._rid_to_sid.get(req.prefix_of)
+                    if src_sid is not None and src_sid in self.pager.sessions:
+                        self.pager.alias(src_sid, sid, req.prefix_len)
+                        self._slot_len[slot] = self.pager.sessions[sid].length
+                        req.prompt_pos = int(self._slot_len[slot])
+                self._rid_to_sid[req.rid] = sid
+            if self.fv is not None:
+                self.fv.reset_slot(slot)
+            if self.cfg.family == "encdec":
+                enc = getattr(req, "enc_embeds", None)
+                if enc is None:
+                    enc = np.random.default_rng(req.rid).normal(
+                        size=(1, 8, self.cfg.d_model)).astype(np.float32)
+                ck, cv = self._encode_fn(self.params, jnp.asarray(enc))
+                se = ck.shape[2]
+                pad = self.pools["cross_k"].shape[2] - se
+                ck = jnp.pad(ck, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))[:, 0]
+                cv = jnp.pad(cv, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))[:, 0]
+                onehot = jnp.arange(self.e.batch) == slot
+                self.pools = self._set_cross(
+                    self.pools, onehot, ck[:, None], cv[:, None],
+                    jnp.full((self.e.batch,), se, jnp.int32))
+
+    # ------------------------------------------------------------------
+    def _window_blocks(self, slot: int) -> (List[int], int):
+        """Physical blocks covering the near window + window_base (tokens)."""
+        t = int(self._slot_len[slot])              # position of current token
+        lo = max(0, t + 1 - self.W)
+        wb = (lo // self.bt) * self.bt
+        if self.e.mode == "arena":
+            base = self._arena_base[slot]
+            first = wb // self.bt
+            return [base + first + i for i in range(self.NB)], wb
+        sid = int(self._slot_sid[slot])
+        s = self.pager.sessions[sid]
+        trimmed = s.trimmed_prefix_blocks
+        wb = max(wb, trimmed * self.bt)
+        first_local = wb // self.bt - trimmed
+        blocks = s.blocks[first_local:first_local + self.NB]
+        return blocks + [0] * (self.NB - len(blocks)), wb
+
+    # ------------------------------------------------------------------
+    def step(self, now: float = float("inf")) -> StepMetrics:
+        t0 = time.perf_counter()
+        m = StepMetrics()
+        self.sched.step_idx = self.steps_run
+
+        # ---- Shift: retire EOS (handled at end of prev step), admit
+        self._admit(now)
+        active = self.sched.active_slots()
+        m.active = len(active)
+
+        B = self.e.batch
+        descr = empty_descriptor(B, self.NB, self.cap, self.MT,
+                                 chunk_blocks=self.chunk_blocks)
+        tokens = np.zeros(B, np.int32)
+
+        for slot in active:
+            req = self.sched.request_at(slot)
+            tokens[slot] = self.sched.next_token(slot, int(self._last_token[slot]))
+            t = int(self._slot_len[slot])
+            descr.seq_lens[slot] = t
+            descr.slot_active[slot] = 1
+
+            # ---- Stage: BLOCKALIGN reservation (prefetch-1 lookahead)
+            if self.e.mode == "arena":
+                base = self._arena_base[slot]
+                bi, off = divmod(t, self.bt)
+                descr.write_block[slot] = base + bi
+                descr.write_offset[slot] = off
+            else:
+                sid = int(self._slot_sid[slot])
+                self.pager.reserve(sid, 2)        # this token + lookahead
+                blk, off = self.pager.append_token(sid)
+                descr.write_block[slot] = blk
+                descr.write_offset[slot] = off
+
+            # ---- far-view: chunk completion -> summarize + trim
+            if self.fv is not None:
+                sid = int(self._slot_sid[slot])
+                s = self.pager.sessions[sid]
+                n_done = int(self.fv.n_chunks[slot])
+                chunk_end = (n_done + 1) * self.e.sv_chunk
+                if t + 1 - self.W >= chunk_end:
+                    first_local = (n_done * self.e.sv_chunk) // self.bt \
+                        - s.trimmed_prefix_blocks
+                    cb = s.blocks[first_local:first_local + self.chunk_blocks]
+                    descr.far_chunk_blocks[slot, :len(cb)] = cb
+                    descr.far_chunk_tokens[slot] = self.e.sv_chunk
+                    descr.far_do_summarize[slot] = 1
+                    descr.far_write_idx[slot] = self.fv.on_chunk_summarized(slot)
+                    # TRIM the summarized blocks (bounded budget)
+                    self.pager.trim(sid, prefix_blocks=first_local + self.chunk_blocks)
+                tbl, val = self.fv.select(slot)
+                descr.far_table[slot] = tbl
+                descr.far_valid[slot] = val
+
+            # ---- window table + Reduce (train merging)
+            blocks, wb = self._window_blocks(slot)
+            descr.block_table[slot, :len(blocks)] = blocks
+            descr.window_base[slot] = wb
+            merging = self.e.mode in ("paged_merge", "full") or self.e.mode == "arena"
+            trains, groups = self.transport.reduce(
+                blocks, far_blocks=int(descr.far_valid[slot].sum() > 0),
+                merging=merging)
+            self.transport.fill_train_arrays(
+                trains, descr.train_start, descr.train_len, descr.train_dst, slot)
+            m.dma_groups += groups
+
+        # ---- Frame: single atomic commit
+        tf0 = time.perf_counter()
+        if self.pager is not None:
+            frame = self.pager.frame()
+            descr = descr._replace(epoch=np.int32(frame["epoch"]))
+            self.frames_committed += 1
+        else:
+            descr = descr._replace(epoch=np.int32(self.steps_run + 1))
+        m.frame_commit = time.perf_counter() - tf0
+
+        jdescr = FrameDescriptor(*[jnp.asarray(a) for a in descr])
+        m.host = time.perf_counter() - t0
+
+        # ---- device: one engine call, fixed shapes
+        nxt, self.pools, fu, lg = self._step_fn(self.params, jnp.asarray(tokens),
+                                                self.pools, jdescr)
+        nxt = np.asarray(jax.block_until_ready(nxt))
+        if self.e.debug_logits:
+            self.debug_logits.append(np.asarray(lg, np.float32))
+
+        # ---- post: bookkeeping, EOS retirement (burst-safe)
+        for slot in active:
+            self._slot_len[slot] += 1
+            if self.sched.is_prefilling(slot):
+                continue
+            self._last_token[slot] = int(nxt[slot])
+            req_t = self.sched.request_at(slot)
+            if req_t is not None and req_t.first_token_step < 0:
+                req_t.ttft_wall = self.cum_wall
+            if self.e.debug_logits:
+                req = self.sched.request_at(slot)
+                if not hasattr(req, "logit_trace"):
+                    req.logit_trace = []
+                req.logit_trace.append(np.asarray(lg[slot], np.float32))
+            if self.sched.record_output(slot, int(nxt[slot])):
+                m.emitted += 1
+                self.sched.requests[self.sched.slots[slot].rid].finish_wall = \
+                    self.cum_wall
+                self.sched.retire(slot)
+                if self.pager is not None:
+                    self.pager.trim(int(self._slot_sid[slot]), close=True)
+                    self._slot_sid[slot] = -1
+                self._slot_len[slot] = 0
+            else:
+                m.emitted += 1
+        if self.fv is not None:
+            self.fv.observe_utility(np.asarray(fu), np.asarray(descr.far_table))
+
+        self.steps_run += 1
+        m.wall = time.perf_counter() - t0
+        self.cum_wall += m.wall
+        self.peak_reserved_kv = max(self.peak_reserved_kv, self.reserved_kv_bytes())
+        self.peak_active_kv = max(self.peak_active_kv, self.active_kv_bytes())
+        self.metrics.append(m)
+        return m
+
+    # ------------------------------------------------------------------
+    def run(self, max_steps: int = 10_000, now_fn=None) -> None:
+        while (self.sched.waiting or self.sched.active_slots()) \
+                and self.steps_run < max_steps:
+            self.step(now=now_fn() if now_fn else float("inf"))
+
+    # ------------------------------------------------------------------
+    # audits & metrics
+    # ------------------------------------------------------------------
+    def audit(self) -> dict:
+        steps = [m for m in self.metrics if m.active > 0]
+        walls = np.array([m.wall for m in steps]) if steps else np.zeros(1)
+        hosts = np.array([m.host for m in steps]) if steps else np.zeros(1)
+        commits = np.array([m.frame_commit for m in steps]) if steps else np.zeros(1)
+        ncomp = getattr(self._step_fn, "_cache_size", lambda: -1)()
+        return {
+            "mode": self.e.mode,
+            "steps": len(steps),
+            "compilations": ncomp,
+            "single_commit_per_step": (self.pager is None
+                                       or self.frames_committed == self.steps_run),
+            "frames_committed": self.frames_committed,
+            "submit_share": float(hosts.sum() / max(walls.sum(), 1e-12)),
+            "frame_commit_us": float(commits.mean() * 1e6),
+            "dma_groups_per_step": self.transport.stats.groups_per_step,
+            "avg_dma_bytes": self.transport.stats.avg_group_bytes,
+            "unmerged_groups_per_step": self.transport.stats.unmerged_groups_per_step,
+            "reserved_kv_bytes": self.reserved_kv_bytes(),
+            "active_kv_bytes": self.active_kv_bytes(),
+            "peak_reserved_kv": self.peak_reserved_kv,
+            "peak_active_kv": self.peak_active_kv,
+        }
+
+    def reserved_kv_bytes(self) -> int:
+        n_layers = max(1, registry.n_paged_layers(self.cfg))
+        if self.e.mode == "arena":
+            return (self.num_blocks - 1) * self.block_bytes * n_layers
+        return self.pager.reserved_bytes() * n_layers
+
+    def active_kv_bytes(self) -> int:
+        n_layers = max(1, registry.n_paged_layers(self.cfg))
+        if self.e.mode == "arena":
+            return int(self._slot_len.sum()) * self.bytes_per_token * n_layers
+        return self.pager.active_tokens() * self.bytes_per_token * n_layers
+
+    def latency_stats(self, skip: int = 3) -> dict:
+        active = [m for m in self.metrics if m.active > 0]
+        walls = np.array([m.wall for m in active[skip:]])
+        if walls.size == 0:
+            walls = np.array([m.wall for m in active]) if active else np.zeros(1)
+        q = lambda p: float(np.percentile(walls * 1e3, p))
+        return {"p50_ms": q(50), "p95_ms": q(95), "p99_ms": q(99),
+                "p999_ms": q(99.9), "mean_ms": float(walls.mean() * 1e3),
+                "max_ms": float(walls.max() * 1e3)}
+
+    def throughput(self, skip: int = 3) -> float:
+        steps = [m for m in self.metrics if m.active > 0][skip:]
+        if not steps:
+            steps = [m for m in self.metrics if m.active > 0]
+        tok = sum(m.emitted for m in steps)
+        wall = sum(m.wall for m in steps)
+        return tok / max(wall, 1e-12)
+
+    def request_latency_stats(self) -> dict:
+        """Request-level completion / time-to-first-token (wall seconds,
+        relative to engine start; arrival offsets subtracted when present)."""
+        fin = self.sched.finished
+        if not fin:
+            return {}
+        comp = np.array([getattr(r, "finish_wall", 0.0) for r in fin])
+        ttft = np.array([getattr(r, "ttft_wall", 0.0) for r in fin])
+        q = lambda a, p: float(np.percentile(a * 1e3, p))
+        return {"completion_p50_ms": q(comp, 50), "completion_p99_ms": q(comp, 99),
+                "ttft_p50_ms": q(ttft, 50), "ttft_p99_ms": q(ttft, 99)}

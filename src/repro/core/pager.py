@@ -1,0 +1,298 @@
+"""KV pager — RESERVE / ALIAS / TRIM / FRAME over page-aligned blocks (§4.2).
+
+Host-side control plane. Physical KV memory is virtualized as page-aligned
+*blocks* (BLOCKALIGN granularity: ``block_tokens`` tokens, sized ~tau bytes so
+one block is a burst-friendly transfer quantum). Per-session view descriptors
+map logical token ranges onto physical blocks; the device always sees the same
+fixed-shape window while the host remaps which logical tokens occupy it.
+
+Verbs:
+  * reserve(sid, n_tokens)  — allocate block-aligned spans; O(1) via
+    size-partitioned free runs + tail-adjacency placement hints (lookahead
+    placement keeps a session's blocks physically contiguous -> long trains).
+  * alias(src, dst, n_tok)  — copy-on-write prefix sharing (refcounts; the
+    partial tail block is marked for a device-side COW copy).
+  * trim(sid, ...)          — reclaim EOS / cold blocks to the free pool.
+  * frame()                 — seal all edits for step t into ONE atomic
+    descriptor commit (shadow -> active double buffer, epoch counter;
+    linearizable + idempotent under retries; O(|delta_t|) per step).
+
+Block 0 is scratch (never allocated): inactive slots' writes land there.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+@dataclass
+class Session:
+    sid: int
+    blocks: List[int] = field(default_factory=list)   # logical order
+    length: int = 0                                   # tokens written
+    shared_prefix_blocks: int = 0                     # aliased (COW) prefix
+    cow_pending: Optional[Tuple[int, int]] = None     # (src, dst) tail copy
+    trimmed_prefix_blocks: int = 0                    # far-view: summarized+trimmed
+
+
+class FrameError(RuntimeError):
+    pass
+
+
+class BlockPager:
+    def __init__(self, num_blocks: int, block_tokens: int,
+                 bytes_per_block: int = 0, size_classes=(32, 8, 2, 1),
+                 span_blocks: int = 4):
+        assert num_blocks > 1
+        self.num_blocks = num_blocks
+        self.block_tokens = block_tokens
+        self.bytes_per_block = bytes_per_block
+        # lookahead placement granularity: sessions grow in spans of
+        # `span_blocks` contiguous blocks so interleaved growth stays
+        # burst-friendly (paper: BLOCKALIGN(S_{t+1}) + placement planning)
+        self.span_blocks = max(1, span_blocks)
+        self.size_classes = tuple(sorted(size_classes, reverse=True))
+        # free runs: run_start -> run_len ; reverse index block -> run_start
+        self._run_len: Dict[int, int] = {}
+        self._run_of: Dict[int, int] = {}
+        self._free_by_class: Dict[int, List[int]] = {c: [] for c in self.size_classes}
+        self._insert_run(1, num_blocks - 1)           # block 0 = scratch
+        self.refcount = np.zeros(num_blocks, np.int32)
+        self.sessions: Dict[int, Session] = {}
+        # frame double buffer
+        self.epoch = 0
+        self._edit_log: List[Tuple] = []              # edits staged this frame
+        self._committed_edit_count = 0
+        self._last_frame: Optional[dict] = None
+        # stats
+        self.stats = {"reserve_ops": 0, "trim_ops": 0, "alias_ops": 0,
+                      "frames": 0, "blocks_allocated": 0, "blocks_freed": 0}
+
+    # ------------------------------------------------------------------
+    # free-run bookkeeping (size-partitioned, O(1) amortized)
+    # ------------------------------------------------------------------
+    def _class_of(self, n: int) -> int:
+        for c in self.size_classes:
+            if n >= c:
+                return c
+        return self.size_classes[-1]
+
+    def _insert_run(self, start: int, length: int) -> None:
+        if length <= 0:
+            return
+        # coalesce with left/right neighbours
+        left = self._run_of.get(start - 1)
+        if left is not None:
+            llen = self._run_len.pop(left)
+            self._remove_from_class(left, llen)
+            start, length = left, llen + length
+        right_start = start + length
+        if right_start in self._run_len:
+            rlen = self._run_len.pop(right_start)
+            self._remove_from_class(right_start, rlen)
+            for b in range(right_start, right_start + rlen):
+                self._run_of.pop(b, None)
+            length += rlen
+        self._run_len[start] = length
+        for b in range(start, start + length):
+            self._run_of[b] = start
+        self._free_by_class[self._class_of(length)].append(start)
+
+    def _remove_from_class(self, start: int, length: int) -> None:
+        cls = self._class_of(length)
+        try:
+            self._free_by_class[cls].remove(start)
+        except ValueError:
+            pass
+
+    def _take_run(self, start: int, want: int) -> List[int]:
+        """Take `want` blocks from the head of run `start`."""
+        length = self._run_len.pop(start)
+        self._remove_from_class(start, length)
+        for b in range(start, start + length):
+            self._run_of.pop(b, None)
+        taken = list(range(start, start + want))
+        if length > want:
+            self._insert_run(start + want, length - want)
+        return taken
+
+    def _alloc_blocks(self, n: int, hint: Optional[int] = None) -> List[int]:
+        out: List[int] = []
+        # placement: extend at hint (tail adjacency) for burst-friendly trains
+        if hint is not None and (hint + 1) in self._run_of:
+            start = self._run_of[hint + 1]
+            if start == hint + 1:
+                run = self._run_len[start]
+                take = min(run, n)
+                out += self._take_run(start, take)
+        while len(out) < n:
+            need = n - len(out)
+            chosen = None
+            for c in self.size_classes:          # largest class first
+                if self._free_by_class[c]:
+                    chosen = self._free_by_class[c][-1]
+                    break
+            if chosen is None:
+                raise MemoryError(
+                    f"KV pool exhausted: want {need} more blocks, "
+                    f"{self.free_blocks()} free")
+            run = self._run_len[chosen]
+            out += self._take_run(chosen, min(run, need))
+        self.refcount[out] += 1
+        self.stats["blocks_allocated"] += len(out)
+        return out
+
+    def _free_block(self, b: int) -> None:
+        self.refcount[b] -= 1
+        assert self.refcount[b] >= 0
+        if self.refcount[b] == 0:
+            self._insert_run(b, 1)
+            self.stats["blocks_freed"] += 1
+
+    # ------------------------------------------------------------------
+    # verbs
+    # ------------------------------------------------------------------
+    def open_session(self, sid: int) -> Session:
+        assert sid not in self.sessions
+        s = Session(sid)
+        self.sessions[sid] = s
+        return s
+
+    def reserve(self, sid: int, n_tokens: int) -> List[int]:
+        """Ensure capacity for n_tokens more tokens; BLOCKALIGN'd."""
+        s = self.sessions[sid]
+        cap = len(s.blocks) * self.block_tokens
+        local_len = s.length - s.trimmed_prefix_blocks * self.block_tokens
+        need_tokens = local_len + n_tokens - cap
+        if need_tokens <= 0:
+            return []
+        nb = -(-need_tokens // self.block_tokens)
+        hint = s.blocks[-1] if s.blocks else None
+        # placement: grow in spans when possible; fall back to exact size
+        # under memory pressure so spans never cause spurious OOM
+        want = max(nb, self.span_blocks)
+        if want > nb and self.free_blocks() < want + self.span_blocks:
+            want = nb
+        newb = self._alloc_blocks(want, hint=hint)
+        s.blocks += newb
+        self._edit_log.append(("reserve", sid, tuple(newb)))
+        self.stats["reserve_ops"] += 1
+        return newb
+
+    def alias(self, src_sid: int, dst_sid: int, n_tokens: int) -> None:
+        """Share the first n_tokens of src with dst (COW)."""
+        src = self.sessions[src_sid]
+        dst = self.sessions[dst_sid]
+        assert dst.length == 0 and not dst.blocks, "alias onto fresh session"
+        nb_full = n_tokens // self.block_tokens
+        rem = n_tokens % self.block_tokens
+        shared = src.blocks[:nb_full]
+        self.refcount[shared] += 1
+        dst.blocks = list(shared)
+        dst.shared_prefix_blocks = nb_full
+        dst.length = nb_full * self.block_tokens
+        if rem:
+            # partial tail: dst gets its own block; device must copy contents
+            tail_src = src.blocks[nb_full]
+            own = self._alloc_blocks(1, hint=dst.blocks[-1] if dst.blocks else None)
+            dst.blocks.append(own[0])
+            dst.cow_pending = (tail_src, own[0])
+            dst.length = n_tokens
+        self._edit_log.append(("alias", src_sid, dst_sid, n_tokens))
+        self.stats["alias_ops"] += 1
+
+    def trim(self, sid: int, *, close: bool = False,
+             prefix_blocks: int = 0) -> List[int]:
+        """Reclaim blocks. close=True frees everything (EOS);
+        prefix_blocks frees summarized far-history blocks (bounded-budget)."""
+        s = self.sessions[sid]
+        freed: List[int] = []
+        if close:
+            for b in s.blocks:
+                self._free_block(b)
+            freed = s.blocks
+            s.blocks = []
+            del self.sessions[sid]
+        elif prefix_blocks:
+            take = s.blocks[:prefix_blocks]
+            for b in take:
+                self._free_block(b)
+            freed = take
+            s.blocks = s.blocks[prefix_blocks:]
+            s.trimmed_prefix_blocks += prefix_blocks
+            s.shared_prefix_blocks = max(0, s.shared_prefix_blocks - prefix_blocks)
+        if freed:
+            self._edit_log.append(("trim", sid, tuple(freed)))
+            self.stats["trim_ops"] += 1
+        return freed
+
+    def append_token(self, sid: int) -> Tuple[int, int]:
+        """Account one token write; returns (physical_block, offset).
+        Caller must have reserved capacity."""
+        s = self.sessions[sid]
+        local = s.length - s.trimmed_prefix_blocks * self.block_tokens
+        bi, off = divmod(local, self.block_tokens)
+        assert bi < len(s.blocks), f"no capacity: sid={sid} len={s.length}"
+        s.length += 1
+        return s.blocks[bi], off
+
+    # ------------------------------------------------------------------
+    # frame commit (shadow -> active, epoch, idempotent)
+    # ------------------------------------------------------------------
+    def frame(self) -> dict:
+        """Seal this step's edits into one committed frame. Calling frame()
+        again with no new edits returns the SAME committed frame (idempotent
+        retry semantics)."""
+        if self._last_frame is not None and \
+           len(self._edit_log) == self._committed_edit_count:
+            return self._last_frame              # retry: identical commit
+        # shadow build: snapshot of session views
+        shadow = {
+            "epoch": self.epoch + 1,
+            "edits": list(self._edit_log[self._committed_edit_count:]),
+            "views": {sid: (tuple(s.blocks), s.length, s.trimmed_prefix_blocks,
+                            s.cow_pending)
+                      for sid, s in self.sessions.items()},
+        }
+        # atomic swap
+        self.epoch += 1
+        self._committed_edit_count = len(self._edit_log)
+        self._last_frame = shadow
+        self.stats["frames"] += 1
+        for s in self.sessions.values():
+            s.cow_pending = None                 # consumed by this frame
+        return shadow
+
+    # ------------------------------------------------------------------
+    # stats
+    # ------------------------------------------------------------------
+    def free_blocks(self) -> int:
+        return int(sum(self._run_len.values()))
+
+    def reserved_blocks(self) -> int:
+        return self.num_blocks - 1 - self.free_blocks()
+
+    def reserved_bytes(self) -> int:
+        return self.reserved_blocks() * self.bytes_per_block
+
+    def active_tokens(self) -> int:
+        return sum(s.length - s.trimmed_prefix_blocks * self.block_tokens
+                   for s in self.sessions.values())
+
+    def check_invariants(self) -> None:
+        """Property-test hook: refcounts/ownership/free-list consistency."""
+        owned = {}
+        for sid, s in self.sessions.items():
+            for i, b in enumerate(s.blocks):
+                owned.setdefault(b, []).append(sid)
+                assert 0 < b < self.num_blocks
+        for b, owners in owned.items():
+            assert self.refcount[b] == len(owners), \
+                f"block {b}: refcount {self.refcount[b]} != owners {owners}"
+            assert b not in self._run_of, f"block {b} owned AND free"
+        total_free = self.free_blocks()
+        ref_live = int((self.refcount[1:] > 0).sum())
+        assert ref_live + total_free == self.num_blocks - 1, \
+            f"leak: live {ref_live} + free {total_free} != {self.num_blocks - 1}"

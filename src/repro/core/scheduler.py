@@ -1,0 +1,110 @@
+"""Continuous-batching scheduler for the fixed-width decode engine.
+
+Slots are the fixed batch rows of the compiled decode step. The scheduler
+admits waiting requests into free slots, retires EOS bursts, and proposes the
+lookahead set S_{t+1} (slots whose next token crosses a block boundary) that
+the pager BLOCKALIGNs and reserves with tail-adjacent placement (prefetch-1).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray               # int32 token ids
+    gen_len: int                     # tokens to generate before EOS
+    arrival: float = 0.0             # for trace replay
+    prefix_of: Optional[int] = None  # rid whose prompt prefix this shares
+    prefix_len: int = 0
+    # runtime
+    generated: List[int] = field(default_factory=list)
+    prompt_pos: int = 0              # tokens of prompt already consumed
+    start_step: int = -1
+    finish_step: int = -1
+    first_token_step: int = -1
+
+
+@dataclass
+class SlotState:
+    rid: int = -1                    # -1 = free
+    sid: int = -1                    # pager session
+
+
+class Scheduler:
+    def __init__(self, n_slots: int):
+        self.n_slots = n_slots
+        self.slots = [SlotState() for _ in range(n_slots)]
+        self.waiting: List[Request] = []
+        self.requests: Dict[int, Request] = {}
+        self.finished: List[Request] = []
+        self._next_sid = 0
+        self.step_idx = 0
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.requests[req.rid] = req
+        self.waiting.append(req)
+
+    def free_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s.rid < 0]
+
+    def active_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s.rid >= 0]
+
+    def admit(self, now: float = float("inf")) -> List[tuple]:
+        """Admit waiting requests (arrival <= now) into free slots.
+        Returns [(slot, request, sid)] admissions."""
+        out = []
+        free = self.free_slots()
+        still = []
+        for req in self.waiting:
+            if free and req.arrival <= now:
+                slot = free.pop(0)
+                sid = self._next_sid
+                self._next_sid += 1
+                self.slots[slot] = SlotState(rid=req.rid, sid=sid)
+                req.start_step = self.step_idx
+                out.append((slot, req, sid))
+            else:
+                still.append(req)
+        self.waiting = still
+        return out
+
+    def retire(self, slot: int) -> Request:
+        st = self.slots[slot]
+        req = self.requests[st.rid]
+        req.finish_step = self.step_idx
+        self.finished.append(req)
+        self.slots[slot] = SlotState()
+        return req
+
+    def request_at(self, slot: int) -> Optional[Request]:
+        st = self.slots[slot]
+        return self.requests.get(st.rid) if st.rid >= 0 else None
+
+    def next_token(self, slot: int, last_sampled: int) -> int:
+        """Token to feed this step: prompt token while prefilling, else the
+        previously sampled token."""
+        req = self.request_at(slot)
+        if req.prompt_pos < len(req.prompt):
+            tok = int(req.prompt[req.prompt_pos])
+            req.prompt_pos += 1
+            return tok
+        return last_sampled
+
+    def is_prefilling(self, slot: int) -> bool:
+        req = self.request_at(slot)
+        return req is not None and req.prompt_pos < len(req.prompt)
+
+    def record_output(self, slot: int, token: int) -> bool:
+        """Record a generated token; True if the request hit EOS."""
+        req = self.request_at(slot)
+        if req.first_token_step < 0:
+            req.first_token_step = self.step_idx
+        req.generated.append(token)
+        return len(req.generated) >= req.gen_len

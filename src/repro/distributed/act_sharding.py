@@ -1,0 +1,64 @@
+"""Activation sharding hook. Model code is mesh-agnostic; the launcher sets
+the batch axes here and models call ``constrain_batch(x)`` at block
+boundaries so XLA's propagation never re-shards the batch dim onto the wrong
+axis (observed: auto-SPMD re-sharding attention activations 8x fat).
+
+No-op when unset (CPU tests, engine).
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_BATCH_AXES: Optional[Tuple[str, ...]] = None
+_MODEL_AXIS: Optional[str] = None
+
+
+def set_batch_axes(axes) -> None:
+    global _BATCH_AXES
+    _BATCH_AXES = axes
+
+
+@contextmanager
+def use_batch_axes(axes):
+    global _BATCH_AXES
+    prev = _BATCH_AXES
+    _BATCH_AXES = axes
+    try:
+        yield
+    finally:
+        _BATCH_AXES = prev
+
+
+@contextmanager
+def use_model_axis(axis):
+    global _MODEL_AXIS
+    prev = _MODEL_AXIS
+    _MODEL_AXIS = axis
+    try:
+        yield
+    finally:
+        _MODEL_AXIS = prev
+
+
+def constrain_model_dim(x, dim: int = -1):
+    """Pin dim (default last) to the model axis — used on decode q so the
+    paged-attention contraction stays a partial-score psum instead of an
+    all-gather of the hd-sharded KV window (EXPERIMENTS.md §Perf iter. 3)."""
+    if _MODEL_AXIS is None:
+        return x
+    spec = [None] * x.ndim
+    spec[dim] = _MODEL_AXIS
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def constrain_batch(x, batch_dim: int = 0):
+    """Pin x's batch dim to the configured axes; other dims unconstrained."""
+    if _BATCH_AXES is None:
+        return x
+    spec = [None] * x.ndim
+    spec[batch_dim] = _BATCH_AXES
+    return jax.lax.with_sharding_constraint(x, P(*spec))

@@ -1,0 +1,116 @@
+"""Fault-tolerance substrate for 1000+-node posture (DESIGN.md §5).
+
+Three cooperating pieces, all host-side and simulation-testable:
+
+  * HeartbeatMonitor — per-worker liveness with grace windows; emits
+    `on_failure(worker)` exactly once per incident. In production the
+    callback triggers checkpoint-restore on a replacement slice; in tests it
+    drives the same CheckpointManager.restore path the resume drill uses.
+
+  * StragglerMitigator — per-step latency EWMA; steps exceeding
+    ``threshold x EWMA`` are flagged. For serving, the mitigation is a hedged
+    decode step (re-issue the step on the standby group: decode steps are
+    idempotent — the frame descriptor is committed once and replaying the
+    same epoch is a no-op by pager idempotency). For training, the policy is
+    step-skip quorum: proceed when >= quorum of workers reported.
+
+  * ElasticPlan — pager/session state is device-count-agnostic (logical
+    blocks), so growing or shrinking the data axis is a re-shard of pool
+    contents plus a slot re-assignment; plan_resize computes the minimal
+    session-move plan.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+
+class HeartbeatMonitor:
+    def __init__(self, workers: List[str], timeout: float,
+                 on_failure: Optional[Callable[[str], None]] = None):
+        self.timeout = timeout
+        self.on_failure = on_failure
+        self.last_seen: Dict[str, float] = {w: 0.0 for w in workers}
+        self.failed: Dict[str, float] = {}
+
+    def beat(self, worker: str, now: float) -> None:
+        if worker in self.failed:
+            # worker came back: treat as a fresh join (caller re-admits)
+            del self.failed[worker]
+        self.last_seen[worker] = now
+
+    def check(self, now: float) -> List[str]:
+        """Returns newly-failed workers (each reported once)."""
+        newly = []
+        for w, t in self.last_seen.items():
+            if w not in self.failed and now - t > self.timeout:
+                self.failed[w] = now
+                newly.append(w)
+                if self.on_failure:
+                    self.on_failure(w)
+        return newly
+
+    def alive(self) -> List[str]:
+        return [w for w in self.last_seen if w not in self.failed]
+
+
+class StragglerMitigator:
+    def __init__(self, threshold: float = 3.0, decay: float = 0.9,
+                 min_samples: int = 8):
+        self.threshold = threshold
+        self.decay = decay
+        self.min_samples = min_samples
+        self.ewma: Optional[float] = None
+        self.n = 0
+        self.hedged_steps: List[int] = []
+
+    def observe(self, step: int, wall: float) -> bool:
+        """Record a step time; True if this step should be hedged."""
+        self.n += 1
+        if self.ewma is None:
+            self.ewma = wall
+            return False
+        is_straggler = (self.n > self.min_samples
+                        and wall > self.threshold * self.ewma)
+        if is_straggler:
+            self.hedged_steps.append(step)
+        else:
+            # stragglers don't poison the baseline
+            self.ewma = self.decay * self.ewma + (1 - self.decay) * wall
+        return is_straggler
+
+
+@dataclass
+class ElasticPlan:
+    old_groups: int
+    new_groups: int
+    session_moves: List[Tuple[int, int, int]]   # (sid, old_group, new_group)
+    pool_reshard: bool
+
+    @property
+    def moved_sessions(self) -> int:
+        return len(self.session_moves)
+
+
+def plan_resize(session_groups: Dict[int, int], old_groups: int,
+                new_groups: int) -> ElasticPlan:
+    """Minimal-move session re-assignment when the data axis resizes.
+
+    Sessions on surviving groups stay; sessions on removed groups (or excess
+    load when growing) move to the least-loaded new group. Pager state moves
+    with the session (logical block lists are device-agnostic; physical pool
+    contents are re-sharded by the runtime copy plan)."""
+    assert new_groups >= 1
+    load = {g: 0 for g in range(new_groups)}
+    moves: List[Tuple[int, int, int]] = []
+    for sid, g in sorted(session_groups.items()):
+        if g < new_groups:
+            load[g] += 1
+    for sid, g in sorted(session_groups.items()):
+        if g >= new_groups:
+            tgt = min(load, key=load.get)
+            moves.append((sid, g, tgt))
+            load[tgt] += 1
+    return ElasticPlan(old_groups=old_groups, new_groups=new_groups,
+                       session_moves=moves,
+                       pool_reshard=new_groups != old_groups)

@@ -1,0 +1,153 @@
+"""Per-architecture sharding rules (DP/TP/EP + pod axis), name-based.
+
+Parameters are matched by their pytree path; layer-stacked params (leading L
+dim from stack_layers) get a None prepended automatically by matching on
+trailing dimensions. The `model` axis carries TP (heads / FFN hidden / vocab);
+`data` (+`pod`) carries batch, token groups, and — for the giant MoE archs —
+expert storage (EP via resharding constraints inside moe_apply).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+MODEL = "model"
+
+
+def _spec_for(path: str, shape: tuple, cfg: ModelConfig, ep_axes) -> P:
+    """TP spec by parameter name. `path` is '/'-joined pytree keys."""
+    name = path.lower()
+    nd = len(shape)
+
+    def last2(spec_in, spec_out):
+        """Spec for a 2D weight, padded with None for leading stack dims."""
+        return P(*([None] * (nd - 2) + [spec_in, spec_out]))
+
+    # ---- embeddings / heads -------------------------------------------
+    if name.endswith("embed"):
+        return P(MODEL, None)                      # vocab-sharded
+    if "lm_head" in name and name.endswith("/w"):
+        return last2(None, MODEL)
+    # ---- MoE experts (EP: E over data/pod+data, f over model) ----------
+    if "w_gate" in name or "w_up" in name:         # (E, d, f)
+        return P(*([None] * (nd - 3) + [ep_axes, None, MODEL]))
+    if "w_down" in name:                           # (E, f, d)
+        return P(*([None] * (nd - 3) + [ep_axes, MODEL, None]))
+    if "router" in name:
+        return P(*([None] * nd))
+    # ---- attention / MLA ----------------------------------------------
+    if any(k in name for k in ("wq", "wk", "wv", "wq_b", "wk_b", "wv_b",
+                               "w_if", "w_o/", "up/", "gate/", "w_gates",
+                               "in_proj")) and name.endswith("/w"):
+        return last2(None, MODEL)
+    if any(k in name for k in ("wo", "down", "out_proj")) and name.endswith("/w"):
+        return last2(MODEL, None)
+    if "wq_a" in name or "wkv_a" in name:
+        return last2(None, None)                   # small latent projections
+    if "r_gates" in name and nd >= 3:              # (H, hd, 4hd)
+        return P(*([None] * (nd - 3) + [MODEL, None, None]))
+    # ---- biases of sharded projections ---------------------------------
+    if name.endswith("/b") and nd >= 1:
+        return P(*([None] * (nd - 1) + [MODEL]))
+    # ---- everything else (norms, convs, scalars): replicated -----------
+    return P(*([None] * nd))
+
+
+def param_specs(cfg: ModelConfig, params_shapes, ep_axes=None):
+    """PartitionSpec pytree matching params (shapes from jax.eval_shape).
+    ep_axes: axis (or tuple) to shard MoE expert storage over (EP)."""
+    def walk(tree, prefix=""):
+        if isinstance(tree, dict):
+            return {k: walk(v, f"{prefix}{k}/") for k, v in tree.items()}
+        return _spec_for(prefix[:-1], tree.shape, cfg, ep_axes)
+    return walk(params_shapes)
+
+
+def to_shardings(mesh: Mesh, specs):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def sanitize_specs(mesh: Mesh, shapes, specs):
+    """Drop shardings on dims not divisible by their mesh axes (pjit requires
+    exact divisibility; small tensors fall back to replication)."""
+    def axis_size(ax) -> int:
+        if ax is None:
+            return 1
+        if isinstance(ax, (tuple, list)):
+            n = 1
+            for a in ax:
+                n *= mesh.shape[a]
+            return n
+        return mesh.shape[ax]
+
+    def fix(sd, spec):
+        dims = sd.shape
+        new = []
+        for i in range(len(dims)):
+            ax = spec[i] if i < len(spec) else None
+            new.append(ax if (ax is None or dims[i] % axis_size(ax) == 0)
+                       else None)
+        return P(*new)
+
+    return jax.tree.map(fix, shapes, specs,
+                        is_leaf=lambda x: hasattr(x, "shape"))
+
+
+def batch_axes(mesh: Mesh) -> tuple:
+    """Axes that shard the batch/token dimension (pod composes with data)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def data_shards(mesh: Mesh) -> int:
+    n = 1
+    for a in batch_axes(mesh):
+        n *= mesh.shape[a]
+    return n
+
+
+# ---------------------------------------------------------------------------
+# decode pool shardings (grouped layout: leading G dim = serving groups)
+# ---------------------------------------------------------------------------
+
+def grouped_pool_specs(cfg: ModelConfig, pools_shapes, bspec):
+    """Pools carry a leading group dim G sharded over the batch axes (each
+    serving group owns its shard-local pool; gathers stay local — verified
+    collective-free). Payload kv-head dims shard over `model`."""
+
+    def spec(path: str, shape):
+        nd = len(shape)
+        name = path.split("/")[-1].lower()
+        full = path.lower()
+        if name == "enc_len":
+            return P(bspec, None)
+        if full.startswith("m/") or full.startswith("s/"):
+            # xlstm states (G, pairs, B, H, ...): heads over model
+            return P(bspec, None, None, MODEL, *([None] * (nd - 4)))
+        if "conv_state" in name or "ssd_state" in name:
+            return P(bspec, *([None] * (nd - 1)))
+        # payload dims: shard head_dim (or the MLA latent) over `model` —
+        # kv-head counts (8) don't divide model=16, head_dim does for every
+        # assigned arch (128/112/64; MLA latent 576). Decode attention then
+        # psums partial scores over `model` (standard TP decode contraction).
+        if name.startswith("cross_"):   # (G, L, B, Se, KV, hd)
+            return P(bspec, None, None, None, None, MODEL)
+        if name.startswith("far_"):     # (G, L, B, MAXC, [KV, hd] | [R])
+            return P(bspec, *([None] * (nd - 2) + [MODEL]))
+        if name in ("k", "v"):          # (G, L, P, BT, KV, hd)
+            return P(bspec, None, None, None, None, MODEL)
+        if name == "lat":               # (G, L, P, BT, R)
+            return P(bspec, None, None, None, MODEL)
+        return P(bspec, *([None] * (nd - 1)))
+
+    def walk(tree, prefix=""):
+        if isinstance(tree, dict):
+            return {k: walk(v, f"{prefix}{k}/") for k, v in tree.items()}
+        return spec(prefix[:-1], tree.shape)
+
+    return walk(pools_shapes)

@@ -1,0 +1,96 @@
+"""Jitted dispatch layer over kernel implementations.
+
+``implementation`` selects:
+  * 'jnp'     — pure-jnp reference (ref.py). Used by the distributed dry-run so
+                cost/memory analysis reflects the real data movement.
+  * 'pallas'  — Pallas TPU kernels (pl.pallas_call + BlockSpec). On this CPU
+                container they run in interpret mode; on TPU they are the
+                production path.
+
+Models call these entry points and stay ignorant of paging internals.
+"""
+from __future__ import annotations
+
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+_DEFAULT_IMPL = os.environ.get("REPRO_KERNEL_IMPL", "jnp")
+
+
+def set_default_impl(impl: str) -> None:
+    global _DEFAULT_IMPL
+    assert impl in ("jnp", "pallas")
+    _DEFAULT_IMPL = impl
+
+
+def get_default_impl() -> str:
+    return _DEFAULT_IMPL
+
+
+# ---------------------------------------------------------------------------
+
+def pool_write(pool, new_vals, write_block, write_offset, active):
+    return ref.pool_write_ref(pool, new_vals, write_block, write_offset, active)
+
+
+def pool_write_stacked(pool, vals, write_block, write_offset, active):
+    return ref.pool_write_stacked_ref(pool, vals, write_block, write_offset,
+                                      active)
+
+
+def paged_decode_attention(q, pool_k, pool_v, block_table, window_base,
+                           seq_lens, slot_active, *, near_window,
+                           far_k=None, far_v=None, far_table=None,
+                           far_valid=None, cur_k=None, cur_v=None,
+                           impl: str | None = None):
+    impl = impl or _DEFAULT_IMPL
+    from repro.distributed.act_sharding import constrain_model_dim
+    q = constrain_model_dim(q, -1)
+    if impl == "pallas" and cur_k is None:
+        from repro.kernels import paged_attention
+        return paged_attention.paged_decode_attention_pallas(
+            q, pool_k, pool_v, block_table, window_base, seq_lens, slot_active,
+            near_window=near_window, far_k=far_k, far_v=far_v,
+            far_table=far_table, far_valid=far_valid)
+    return ref.paged_decode_attention_ref(
+        q, pool_k, pool_v, block_table, window_base, seq_lens, slot_active,
+        near_window=near_window, far_k=far_k, far_v=far_v,
+        far_table=far_table, far_valid=far_valid, cur_k=cur_k, cur_v=cur_v)
+
+
+def mla_decode_attention(q_nope, q_rope, pool_lat, w_k_b, w_v_b, block_table,
+                         window_base, seq_lens, slot_active, *, near_window,
+                         kv_lora_rank, far_lat=None, far_table=None,
+                         far_valid=None, cur_lat=None, impl: str | None = None):
+    impl = impl or _DEFAULT_IMPL
+    return ref.mla_decode_attention_ref(
+        q_nope, q_rope, pool_lat, w_k_b, w_v_b, block_table, window_base,
+        seq_lens, slot_active, near_window=near_window,
+        kv_lora_rank=kv_lora_rank, far_lat=far_lat, far_table=far_table,
+        far_valid=far_valid, cur_lat=cur_lat)
+
+
+def farview_summarize(pool, chunk_blocks, n_tokens, do_summarize,
+                      impl: str | None = None):
+    impl = impl or _DEFAULT_IMPL
+    if impl == "pallas":
+        from repro.kernels import farview_summarize as fvs
+        return fvs.farview_summarize_pallas(pool, chunk_blocks, n_tokens, do_summarize)
+    return ref.farview_summarize_ref(pool, chunk_blocks, n_tokens, do_summarize)
+
+
+def prefill_attention(q, k, v, *, causal=True, window=None,
+                      impl: str | None = None):
+    impl = impl or _DEFAULT_IMPL
+    if impl == "pallas":
+        from repro.kernels import prefill_attention as pfa
+        return pfa.prefill_attention_pallas(q, k, v, causal=causal, window=window)
+    from repro.models.common import attention_blocked, attention_dense
+    if q.shape[1] > 1024:
+        return attention_blocked(q, k, v, causal=causal, window=window)
+    return attention_dense(q, k, v, causal=causal, window=window)

@@ -1,0 +1,106 @@
+"""Pallas TPU kernel: blocked causal (flash-style) prefill attention.
+
+Grid (B, H, nQ, nK) with online softmax in VMEM scratch; causal blocks above
+the diagonal are skipped via masking (TPU grids are static — the mask makes
+the skipped block a no-op; Mosaic elides the copy when the index map is
+revisited). q/k blocks are MXU-aligned (multiples of 128 recommended).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _prefill_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+                    *, q_blk: int, k_blk: int, hd: int, causal: bool,
+                    window: int, scale: float):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)          # (q_blk, hd)
+    k = k_ref[0, 0].astype(jnp.float32)          # (k_blk, hd)
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    qpos = iq * q_blk + jax.lax.broadcasted_iota(jnp.int32, (q_blk, k_blk), 0)
+    kpos = ik * k_blk + jax.lax.broadcasted_iota(jnp.int32, (q_blk, k_blk), 1)
+    valid = jnp.ones((q_blk, k_blk), jnp.bool_)
+    if causal:
+        valid &= kpos <= qpos
+    if window > 0:
+        valid &= kpos > qpos - window
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.where(valid, jnp.exp(s - m_new), 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _fin():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-20)
+                       ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "q_blk",
+                                             "k_blk", "interpret"))
+def prefill_attention_pallas(q, k, v, *, causal=True, window=None,
+                             q_blk=128, k_blk=128, interpret=True):
+    """q: (B,S,H,hd); k,v: (B,S,KV,hd) -> (B,S,H,hd). GQA via kv replication
+    at the BlockSpec level (no materialized repeat)."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    n_rep = H // KV
+    scale = 1.0 / math.sqrt(hd)
+    q_blk = min(q_blk, S)
+    k_blk = min(k_blk, S)
+    assert S % q_blk == 0 and S % k_blk == 0
+    grid = (B, H, S // q_blk, S // k_blk)
+
+    qt = q.transpose(0, 2, 1, 3)                 # (B,H,S,hd)
+    kt = k.transpose(0, 2, 1, 3)                 # (B,KV,S,hd)
+    vt = v.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(_prefill_kernel, q_blk=q_blk, k_blk=k_blk,
+                               hd=hd, causal=causal, window=window or 0,
+                               scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, q_blk, hd), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, k_blk, hd),
+                         lambda b, h, iq, ik: (b, h // n_rep, ik, 0)),
+            pl.BlockSpec((1, 1, k_blk, hd),
+                         lambda b, h, iq, ik: (b, h // n_rep, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, q_blk, hd),
+                               lambda b, h, iq, ik: (b, h, iq, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((q_blk, hd), jnp.float32),
+            pltpu.VMEM((q_blk, 1), jnp.float32),
+            pltpu.VMEM((q_blk, 1), jnp.float32),
+        ],
+        out_shape=jax.ShapeDtypeStruct((B, H, S, hd), q.dtype),
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,314 @@
+"""Pure-jnp oracles for every kernel in this package.
+
+These are the semantic ground truth: Pallas kernels are validated against
+these in interpret mode (tests/test_kernels.py), and the distributed dry-run
+lowers THESE implementations so cost/memory analysis reflects real data
+movement (DESIGN.md §2). Shapes follow core/descriptor.py.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# pool write (this step's K/V -> reserved block slot)
+# ---------------------------------------------------------------------------
+
+def pool_write_ref(pool, new_vals, write_block, write_offset, active):
+    """Scatter one token's payload per slot into the paged pool.
+
+    pool: (P, BT, ...payload)   new_vals: (B, ...payload)
+    write_block/write_offset/active: (B,) int32.
+    Inactive slots are redirected to scratch block 0 (never allocated).
+    """
+    blk = jnp.where(active > 0, write_block, 0)
+    off = jnp.where(active > 0, write_offset, 0)
+    return pool.at[blk, off].set(
+        jnp.where((active > 0)[(...,) + (None,) * (new_vals.ndim - 1)],
+                  new_vals, pool[blk, off]),
+        mode="drop")
+
+
+def pool_write_stacked_ref(pool, vals, write_block, write_offset, active):
+    """Scatter one token per slot across ALL layers at once (post-scan).
+
+    pool: (L, P, BT, ...payload); vals: (L, B, ...payload);
+    write_block/offset/active: (B,). The layer scan never carries the pool
+    (read-only inside), so XLA neither copies nor converts it per layer
+    (EXPERIMENTS.md §Perf iteration 8)."""
+    L = pool.shape[0]
+    B = vals.shape[1]
+    blk = jnp.where(active > 0, write_block, 0)
+    off = jnp.where(active > 0, write_offset, 0)
+    l_idx = jnp.arange(L)[:, None]
+    mask = (active > 0)[(None, ...) + (None,) * (vals.ndim - 2)]
+    cur = pool[l_idx, blk[None, :], off[None, :]]
+    return pool.at[l_idx, blk[None, :], off[None, :]].set(
+        jnp.where(mask, vals, cur), mode="drop")
+
+
+# ---------------------------------------------------------------------------
+# paged decode attention (near window + optional far view) — GQA
+# ---------------------------------------------------------------------------
+
+def paged_decode_attention_ref(
+    q,                      # (B, H, hd) current-token queries (roped)
+    pool_k, pool_v,         # (P, BT, KV, hd) paged pools (post write)
+    block_table,            # (B, NB)
+    window_base,            # (B,)
+    seq_lens,               # (B,)  position of the CURRENT token
+    slot_active,            # (B,)
+    *,
+    near_window: int,
+    far_k=None, far_v=None,  # (B, MAXC, KV, hd) far summary pools
+    far_table=None, far_valid=None,  # (B, CAP)
+    cur_k=None, cur_v=None,  # (B, KV, hd) CURRENT token (pool is read-only
+                             # inside the layer scan; see §Perf iteration 8)
+    sm_scale: Optional[float] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (attn_out (B,H,hd), far_utility (B,CAP))."""
+    B, H, hd = q.shape
+    P, BT, KV, _ = pool_k.shape
+    NB = block_table.shape[1]
+    W = NB * BT
+    n_rep = H // KV
+    scale = sm_scale if sm_scale is not None else 1.0 / math.sqrt(hd)
+
+    # gather near window: (B, NB, BT, KV, hd) -> (B, W, KV, hd)
+    win_k = pool_k[block_table].reshape(B, W, KV, hd)
+    win_v = pool_v[block_table].reshape(B, W, KV, hd)
+
+    pos = window_base[:, None] + jnp.arange(W)[None, :]           # (B, W)
+    t = seq_lens[:, None]
+    upper = (pos < t) if cur_k is not None else (pos <= t)
+    valid = upper & (pos > t - near_window) & (pos >= 0)
+    valid &= (slot_active > 0)[:, None]
+
+    # IMPORTANT: never .astype() pool-derived tensors — XLA hoists the
+    # convert above the gather and converts the ENTIRE pool every layer
+    # (measured 830 GB/step; EXPERIMENTS.md §Perf iteration 7). Accumulate
+    # in f32 via preferred_element_type instead.
+    qg = q.reshape(B, KV, n_rep, hd)
+    s_near = jnp.einsum("bkrd,bwkd->bkrw", qg, win_k,
+                        preferred_element_type=jnp.float32) * scale  # (B,KV,rep,W)
+    s_near = jnp.where(valid[:, None, None, :], s_near, -jnp.inf)
+    NCUR = 0
+    if cur_k is not None:
+        NCUR = 1
+        s_cur = jnp.einsum("bkrd,bkd->bkr", qg, cur_k.astype(qg.dtype),
+                           preferred_element_type=jnp.float32)[..., None] * scale
+        s_cur = jnp.where((slot_active > 0)[:, None, None, None], s_cur, -jnp.inf)
+        s_near = jnp.concatenate([s_near, s_cur], axis=-1)
+
+    if far_k is not None and far_table is not None:
+        CAP = far_table.shape[1]
+        fk = jnp.take_along_axis(far_k, far_table[:, :, None, None], axis=1)
+        fv = jnp.take_along_axis(far_v, far_table[:, :, None, None], axis=1)
+        s_far = jnp.einsum("bkrd,bckd->bkrc", qg, fk,
+                           preferred_element_type=jnp.float32) * scale
+        fmask = (far_valid > 0) & (slot_active > 0)[:, None]
+        s_far = jnp.where(fmask[:, None, None, :], s_far, -jnp.inf)
+        s_all = jnp.concatenate([s_far, s_near], axis=-1)
+    else:
+        CAP = 0
+        s_all = s_near
+
+    m = s_all.max(axis=-1, keepdims=True)
+    m = jnp.where(jnp.isinf(m), 0.0, m)
+    p = jnp.exp(s_all - m)
+    p = jnp.where(jnp.isinf(s_all), 0.0, p)
+    denom = jnp.maximum(p.sum(axis=-1, keepdims=True), 1e-20)
+    p = p / denom
+
+    def pv(pn):
+        if NCUR:
+            p_win, p_cur = pn[..., :-1], pn[..., -1]
+            out = jnp.einsum("bkrw,bwkd->bkrd", p_win.astype(win_v.dtype), win_v,
+                             preferred_element_type=jnp.float32)
+            out = out + p_cur[..., None] * cur_v[:, :, None, :].astype(jnp.float32)
+            return out
+        return jnp.einsum("bkrw,bwkd->bkrd", pn.astype(win_v.dtype), win_v,
+                          preferred_element_type=jnp.float32)
+
+    if CAP:
+        p_far, p_near = p[..., :CAP], p[..., CAP:]
+        ctx = pv(p_near) + jnp.einsum(
+            "bkrc,bckd->bkrd", p_far.astype(fv.dtype), fv,
+            preferred_element_type=jnp.float32)
+        far_util = p_far.sum(axis=(1, 2))                          # (B, CAP)
+    else:
+        ctx = pv(p)
+        far_util = jnp.zeros((B, 1), jnp.float32)
+
+    out = ctx.reshape(B, H, hd).astype(q.dtype)
+    out = jnp.where((slot_active > 0)[:, None, None], out, 0)
+    return out, far_util
+
+
+# ---------------------------------------------------------------------------
+# paged decode attention — MLA (latent pool, absorbed projections)
+# ---------------------------------------------------------------------------
+
+def mla_decode_attention_ref(
+    q_nope,                 # (B, H, dn)
+    q_rope,                 # (B, H, dr) roped
+    pool_lat,               # (P, BT, R)  R = kv_lora_rank + dr
+    w_k_b,                  # (H, kv_lora_rank, dn)  latent -> per-head K
+    w_v_b,                  # (H, kv_lora_rank, dv)  latent -> per-head V
+    block_table, window_base, seq_lens, slot_active,
+    *, near_window: int, kv_lora_rank: int,
+    far_lat=None, far_table=None, far_valid=None,   # (B, MAXC, R), (B, CAP)
+    cur_lat=None,                                   # (B, R) current token
+):
+    """Absorbed-matmul MLA decode: attention scored directly in latent space.
+
+    score_h(w) = (W_kb[h] q_nope_h) . c_w + q_rope_h . k_rope_w
+    out_h      = (sum_w p_hw c_w) @ W_vb[h]
+    """
+    B, H, dn = q_nope.shape
+    P, BT, R = pool_lat.shape
+    NB = block_table.shape[1]
+    W = NB * BT
+    dr = q_rope.shape[-1]
+    scale = 1.0 / math.sqrt(dn + dr)
+
+    win = pool_lat[block_table].reshape(B, W, R)   # keep pool dtype (see GQA note)
+    c_kv, k_rope = win[..., :kv_lora_rank], win[..., kv_lora_rank:]
+
+    # absorb: q_abs (B, H, R_lat)
+    q_abs = jnp.einsum("bhd,hrd->bhr", q_nope, w_k_b,
+                       preferred_element_type=jnp.float32)
+    s = (jnp.einsum("bhr,bwr->bhw", q_abs.astype(win.dtype), c_kv,
+                    preferred_element_type=jnp.float32)
+         + jnp.einsum("bhd,bwd->bhw", q_rope, k_rope,
+                      preferred_element_type=jnp.float32)) * scale
+
+    pos = window_base[:, None] + jnp.arange(W)[None, :]
+    t = seq_lens[:, None]
+    upper = (pos < t) if cur_lat is not None else (pos <= t)
+    valid = upper & (pos > t - near_window) & (pos >= 0)
+    valid &= (slot_active > 0)[:, None]
+    s = jnp.where(valid[:, None, :], s, -jnp.inf)
+    NCUR = 0
+    if cur_lat is not None:
+        NCUR = 1
+        cc, cr = cur_lat[..., :kv_lora_rank], cur_lat[..., kv_lora_rank:]
+        s_cur = (jnp.einsum("bhr,br->bh", q_abs.astype(cc.dtype), cc,
+                            preferred_element_type=jnp.float32)
+                 + jnp.einsum("bhd,bd->bh", q_rope, cr,
+                              preferred_element_type=jnp.float32))[..., None] * scale
+        s_cur = jnp.where((slot_active > 0)[:, None, None], s_cur, -jnp.inf)
+        s = jnp.concatenate([s, s_cur], axis=-1)
+
+    if far_lat is not None and far_table is not None:
+        CAP = far_table.shape[1]
+        fl = jnp.take_along_axis(far_lat, far_table[:, :, None], axis=1)
+        fc, fr = fl[..., :kv_lora_rank], fl[..., kv_lora_rank:]
+        s_far = (jnp.einsum("bhr,bcr->bhc", q_abs.astype(fc.dtype), fc,
+                            preferred_element_type=jnp.float32)
+                 + jnp.einsum("bhd,bcd->bhc", q_rope, fr,
+                              preferred_element_type=jnp.float32)) * scale
+        fmask = (far_valid > 0) & (slot_active > 0)[:, None]
+        s_far = jnp.where(fmask[:, None, :], s_far, -jnp.inf)
+        s = jnp.concatenate([s_far, s], axis=-1)
+    else:
+        CAP = 0
+
+    m = s.max(axis=-1, keepdims=True)
+    m = jnp.where(jnp.isinf(m), 0.0, m)
+    p = jnp.exp(s - m)
+    p = jnp.where(jnp.isinf(s), 0.0, p)
+    p = p / jnp.maximum(p.sum(axis=-1, keepdims=True), 1e-20)
+
+    def pc(pn):
+        if NCUR:
+            p_win, p_cur = pn[..., :-1], pn[..., -1]
+            out = jnp.einsum("bhw,bwr->bhr", p_win.astype(c_kv.dtype), c_kv,
+                             preferred_element_type=jnp.float32)
+            return out + p_cur[..., None] * cc[:, None, :].astype(jnp.float32)
+        return jnp.einsum("bhw,bwr->bhr", pn.astype(c_kv.dtype), c_kv,
+                          preferred_element_type=jnp.float32)
+
+    if CAP:
+        p_far, p_near = p[..., :CAP], p[..., CAP:]
+        ctx_lat = pc(p_near) + jnp.einsum(
+            "bhc,bcr->bhr", p_far.astype(fc.dtype), fc,
+            preferred_element_type=jnp.float32)
+        far_util = p_far.sum(axis=1)
+    else:
+        ctx_lat = pc(p)
+        far_util = jnp.zeros((B, 1), jnp.float32)
+
+    out = jnp.einsum("bhr,hrd->bhd", ctx_lat, w_v_b.astype(jnp.float32))
+    out = jnp.where((slot_active > 0)[:, None, None], out, 0)
+    return out.astype(q_nope.dtype), far_util
+
+
+def mla_decode_attention_naive(q_nope, q_rope, pool_lat, w_k_b, w_v_b,
+                               block_table, window_base, seq_lens, slot_active,
+                               *, near_window: int, kv_lora_rank: int):
+    """Non-absorbed MLA path (materializes per-head K/V); oracle for the
+    absorbed version."""
+    B, H, dn = q_nope.shape
+    P, BT, R = pool_lat.shape
+    NB = block_table.shape[1]
+    W = NB * BT
+    dr = q_rope.shape[-1]
+    scale = 1.0 / math.sqrt(dn + dr)
+
+    win = pool_lat[block_table].reshape(B, W, R).astype(jnp.float32)
+    c_kv, k_rope = win[..., :kv_lora_rank], win[..., kv_lora_rank:]
+    k_nope = jnp.einsum("bwr,hrd->bwhd", c_kv, w_k_b.astype(jnp.float32))
+    v = jnp.einsum("bwr,hrd->bwhd", c_kv, w_v_b.astype(jnp.float32))
+
+    s = (jnp.einsum("bhd,bwhd->bhw", q_nope.astype(jnp.float32), k_nope)
+         + jnp.einsum("bhd,bwd->bhw", q_rope.astype(jnp.float32), k_rope)) * scale
+    pos = window_base[:, None] + jnp.arange(W)[None, :]
+    t = seq_lens[:, None]
+    valid = (pos <= t) & (pos > t - near_window) & (pos >= 0)
+    valid &= (slot_active > 0)[:, None]
+    s = jnp.where(valid[:, None, :], s, -jnp.inf)
+    m = jnp.where(jnp.isinf(s.max(-1, keepdims=True)), 0.0, s.max(-1, keepdims=True))
+    p = jnp.exp(s - m)
+    p = jnp.where(jnp.isinf(s), 0.0, p)
+    p = p / jnp.maximum(p.sum(-1, keepdims=True), 1e-20)
+    out = jnp.einsum("bhw,bwhd->bhd", p, v)
+    out = jnp.where((slot_active > 0)[:, None, None], out, 0)
+    return out.astype(q_nope.dtype)
+
+
+# ---------------------------------------------------------------------------
+# far-view summarization (uniform aggregation over one sv_chunk)
+# ---------------------------------------------------------------------------
+
+def farview_summarize_ref(pool, chunk_blocks, n_tokens, do_summarize):
+    """Mean-pool one completed chunk per slot.
+
+    pool: (P, BT, ...payload); chunk_blocks: (B, CB) block ids of the chunk;
+    n_tokens: (B,) valid token count (normally sv_chunk); do_summarize: (B,)
+    0/1 gate. Returns (B, ...payload) summaries (zeros where gated off).
+    """
+    B, CB = chunk_blocks.shape
+    BT = pool.shape[1]
+    toks = pool[chunk_blocks]                         # (B, CB, BT, ...)
+    toks = toks.reshape(B, CB * BT, *pool.shape[2:]).astype(jnp.float32)
+    idx = jnp.arange(CB * BT)
+    mask = (idx[None, :] < n_tokens[:, None]).astype(jnp.float32)
+    mask = mask.reshape(B, CB * BT, *([1] * (toks.ndim - 2)))
+    s = (toks * mask).sum(axis=1) / jnp.maximum(n_tokens, 1)[
+        (...,) + (None,) * (toks.ndim - 2)]
+    gate = (do_summarize > 0)[(...,) + (None,) * (toks.ndim - 2)]
+    return jnp.where(gate, s, 0.0).astype(pool.dtype)
+
+
+# ---------------------------------------------------------------------------
+# prefill attention oracle (dense causal, optional window)
+# ---------------------------------------------------------------------------
+
+def prefill_attention_ref(q, k, v, *, causal=True, window=None):
+    from repro.models.common import attention_dense
+    return attention_dense(q, k, v, causal=causal, window=window)

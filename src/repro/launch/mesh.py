@@ -1,0 +1,28 @@
+"""Production mesh construction. Importing this module never touches JAX
+device state — meshes are built only inside the function.
+
+Single pod : (data=16, model=16)            = 256 chips
+Multi-pod  : (pod=2, data=16, model=16)     = 512 chips
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_debug_mesh(n_devices: int | None = None):
+    """Tiny mesh over whatever devices exist (tests on CPU)."""
+    n = n_devices or len(jax.devices())
+    model = 1
+    for cand in (4, 2, 1):
+        if n % cand == 0:
+            model = cand
+            break
+    return jax.make_mesh((n // model, model), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)

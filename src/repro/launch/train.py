@@ -1,0 +1,87 @@
+"""Training launcher. On CPU runs reduced configs end-to-end (synthetic
+data, checkpointing, resume); on a real cluster the same entry point lowers
+the full config onto the production mesh (see dryrun.py for the mesh/sharding
+used at scale).
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-32b --reduced \
+        --steps 20 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, get_reduced
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.distributed import compression
+from repro.models import registry
+from repro.training.checkpoint import CheckpointManager
+from repro.training.optimizer import OptimizerConfig, init_opt_state
+from repro.training.train_loop import TrainConfig, make_train_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-32b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--compression", default="none",
+                    choices=["none", "bf16", "int8"])
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args(argv)
+
+    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    ocfg = OptimizerConfig(lr=args.lr, warmup_steps=5, total_steps=args.steps)
+    tcfg = TrainConfig(microbatches=args.microbatches, remat=False,
+                       compression=args.compression)
+    data = SyntheticLM(DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=args.seq, global_batch=args.batch,
+        frontend=cfg.frontend,
+        d_model=cfg.d_model,
+        frontend_len=args.seq // 2 if cfg.frontend != "none" else 0))
+
+    params = registry.init_params(jax.random.PRNGKey(0), cfg)
+    opt = init_opt_state(params, ocfg)
+    err = compression.init_error_feedback(params)
+    step_fn = jax.jit(make_train_step(cfg, ocfg, tcfg))
+    start = 0
+
+    mgr = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+    if mgr and args.resume and mgr.latest_step() is not None:
+        st = mgr.restore({"params": params, "opt": opt, "err": err})
+        params, opt, err = st["params"], st["opt"], st["err"]
+        start = st["host"]["data_step"]
+        print(f"resumed from step {start}")
+
+    for i in range(start, args.steps):
+        t0 = time.perf_counter()
+        batch = {k: jnp.asarray(v) for k, v in data.batch(i).items()}
+        if cfg.family == "encdec":
+            batch["extra_embeds"] = batch.get(
+                "extra_embeds",
+                jnp.zeros((args.batch, args.seq // 2, cfg.d_model), jnp.bfloat16))
+        params, opt, err, m = step_fn(params, opt, err, batch)
+        dt = time.perf_counter() - t0
+        print(f"step {i:4d} loss {float(m['loss']):.4f} "
+              f"gnorm {float(m['grad_norm']):.3f} lr {float(m['lr']):.2e} "
+              f"{dt*1e3:.0f}ms")
+        if mgr and (i + 1) % args.ckpt_every == 0:
+            mgr.save(i + 1, {"params": params, "opt": opt, "err": err,
+                             "host": {"data_step": i + 1}})
+    if mgr:
+        mgr.wait()
+    return params
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,180 @@
+"""Encoder-decoder transformer backbone (seamless-m4t-medium).
+
+The audio frontend is a stub: the encoder consumes precomputed frame
+embeddings (B, S_enc, d). The decoder self-attention KV is paged by KV-RM;
+the cross-attention KV is computed once at encode time and is immutable —
+the pager's RESERVE/ALIAS prefix-sharing case (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from repro.models import common as cm
+
+
+def _enc_layer_init(key, cfg):
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": cm.norm_init(cfg.d_model), "attn": cm.gqa_init(ks[0], cfg),
+        "ln2": cm.norm_init(cfg.d_model),
+        "mlp": cm.mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.mlp_act),
+    }
+
+
+def _dec_layer_init(key, cfg):
+    ks = jax.random.split(key, 3)
+    return {
+        "ln1": cm.norm_init(cfg.d_model), "self_attn": cm.gqa_init(ks[0], cfg),
+        "ln_x": cm.norm_init(cfg.d_model), "cross_attn": cm.gqa_init(ks[1], cfg),
+        "ln2": cm.norm_init(cfg.d_model),
+        "mlp": cm.mlp_init(ks[2], cfg.d_model, cfg.d_ff, cfg.mlp_act),
+    }
+
+
+def init_params(key, cfg: ModelConfig):
+    k_emb, k_e, k_d, k_out = jax.random.split(key, 4)
+    return {
+        "embed": (jax.random.normal(k_emb, (cfg.vocab_size, cfg.d_model), jnp.float32)
+                  * 0.02).astype(cm.DTYPE),
+        "enc_layers": cm.stack_layers(partial(_enc_layer_init, cfg=cfg), k_e, cfg.enc_layers),
+        "enc_ln": cm.norm_init(cfg.d_model),
+        "dec_layers": cm.stack_layers(partial(_dec_layer_init, cfg=cfg), k_d, cfg.dec_layers),
+        "ln_f": cm.norm_init(cfg.d_model),
+        "lm_head": cm.dense_init(k_out, cfg.d_model, cfg.vocab_size),
+    }
+
+
+def encode(params, cfg: ModelConfig, enc_embeds, *, remat: bool = False):
+    """enc_embeds: (B, S_enc, d) precomputed frame embeddings -> (B, S_enc, d)."""
+    B, S, _ = enc_embeds.shape
+    x = enc_embeds.astype(cm.DTYPE)
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    def block(x, layer):
+        x = cm.constrain_batch(x)
+        h = cm.rmsnorm(layer["ln1"], x, cfg.norm_eps)
+        x = x + cm.gqa_full(layer["attn"], cfg, h, positions, causal=False)
+        h = cm.rmsnorm(layer["ln2"], x, cfg.norm_eps)
+        x = x + cm.mlp_apply(layer["mlp"], h, cfg.mlp_act)
+        return x, None
+
+    body = jax.checkpoint(block) if remat else block
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return cm.rmsnorm(params["enc_ln"], x, cfg.norm_eps)
+
+
+def cross_kv(params, cfg: ModelConfig, enc_out):
+    """Precompute per-decoder-layer cross K/V: (L, B, S_enc, KV, hd)."""
+    B, S, _ = enc_out.shape
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+
+    def one(layer):
+        k = cm.dense(layer["cross_attn"]["wk"], enc_out).reshape(B, S, kv, hd)
+        v = cm.dense(layer["cross_attn"]["wv"], enc_out).reshape(B, S, kv, hd)
+        return k, v
+
+    ks, vs = jax.vmap(one)(params["dec_layers"])
+    return ks, vs
+
+
+def decode_full(params, cfg: ModelConfig, dec_tokens, enc_out, *,
+                remat: bool = False):
+    """Teacher-forced decoder pass (train / prefill). -> logits (B, Sd, V)."""
+    B, Sd = dec_tokens.shape
+    Se = enc_out.shape[1]
+    x = params["embed"][dec_tokens]
+    dpos = jnp.broadcast_to(jnp.arange(Sd)[None], (B, Sd))
+    epos = jnp.broadcast_to(jnp.arange(Se)[None], (B, Se))
+
+    def block(x, layer):
+        h = cm.rmsnorm(layer["ln1"], x, cfg.norm_eps)
+        x = x + cm.gqa_full(layer["self_attn"], cfg, h, dpos)
+        # cross attention: q from decoder, kv from encoder output
+        h = cm.rmsnorm(layer["ln_x"], x, cfg.norm_eps)
+        q = cm.dense(layer["cross_attn"]["wq"], h).reshape(B, Sd, cfg.n_heads, cfg.head_dim)
+        k = cm.dense(layer["cross_attn"]["wk"], enc_out).reshape(B, Se, cfg.n_kv_heads, cfg.head_dim)
+        v = cm.dense(layer["cross_attn"]["wv"], enc_out).reshape(B, Se, cfg.n_kv_heads, cfg.head_dim)
+        if Sd > 1024:
+            o = cm.attention_blocked(q, k, v, causal=False)
+        else:
+            o = cm.attention_dense(q, k, v, causal=False)
+        x = x + cm.dense(layer["cross_attn"]["wo"], o.reshape(B, Sd, -1))
+        h = cm.rmsnorm(layer["ln2"], x, cfg.norm_eps)
+        x = x + cm.mlp_apply(layer["mlp"], h, cfg.mlp_act)
+        return x, None
+
+    body = jax.checkpoint(block) if remat else block
+    x, _ = jax.lax.scan(body, x, params["dec_layers"])
+    x = cm.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    return cm.dense(params["lm_head"], x)
+
+
+def forward(params, cfg: ModelConfig, tokens, *, extra_embeds=None,
+            remat: bool = False):
+    """Uniform train entry: extra_embeds = encoder frame embeddings
+    (B, S_enc, d); tokens = decoder tokens (B, S_dec)."""
+    assert extra_embeds is not None, "encdec requires encoder embeddings"
+    enc_out = encode(params, cfg, extra_embeds, remat=remat)
+    return decode_full(params, cfg, tokens, enc_out, remat=remat)
+
+
+def decode_step(params, cfg: ModelConfig, tokens, pools, descr):
+    """pools: k/v (L,P,BT,KV,hd) paged decoder self-attn; cross_k/cross_v
+    (L,B,Se,KV,hd) immutable; enc_len (B,) valid encoder length."""
+    B = tokens.shape[0]
+    sv = cfg.serving
+    x = params["embed"][tokens]
+    enc_len = pools["enc_len"]
+    fu0 = jnp.zeros((B, descr.far_table.shape[1]), jnp.float32)
+
+    def block(carry, xs):
+        x, fu = carry
+        layer, pk, pv, ck, cv = xs
+        h = cm.rmsnorm(layer["ln1"], x, cfg.norm_eps)
+        q, k, v = cm.gqa_qkv(layer["self_attn"], cfg, h[:, None, :],
+                             descr.seq_lens[:, None])
+        q, k, v = q[:, 0], k[:, 0], v[:, 0]
+        o, futil = ops.paged_decode_attention(
+            q, pk, pv, descr.block_table, descr.window_base, descr.seq_lens,
+            descr.slot_active, near_window=sv.near_window, cur_k=k, cur_v=v)
+        x = x + cm.dense(layer["self_attn"]["wo"], o.reshape(B, -1))
+        # cross attention over immutable encoder KV
+        h = cm.rmsnorm(layer["ln_x"], x, cfg.norm_eps)
+        qx = cm.dense(layer["cross_attn"]["wq"], h).reshape(B, 1, cfg.n_heads, cfg.head_dim)
+        Se = ck.shape[1]
+        mask_len = jnp.arange(Se)[None, :] < enc_len[:, None]
+        kx = jnp.where(mask_len[:, :, None, None], ck, 0)
+        sc = jnp.einsum("bqhd,bkhd->bhqk", qx,
+                        cm.repeat_kv(kx, cfg.n_heads // cfg.n_kv_heads)
+                        ).astype(jnp.float32) * (cfg.head_dim ** -0.5)
+        sc = jnp.where(mask_len[:, None, None, :], sc, -jnp.inf)
+        # safe softmax: slots with no encoder output yet attend to nothing
+        mx = jnp.max(sc, axis=-1, keepdims=True)
+        mx = jnp.where(jnp.isinf(mx), 0.0, mx)
+        pe = jnp.where(jnp.isinf(sc), 0.0, jnp.exp(sc - mx))
+        pr = pe / jnp.maximum(pe.sum(-1, keepdims=True), 1e-20)
+        ox = jnp.einsum("bhqk,bkhd->bqhd", pr.astype(cv.dtype),
+                        cm.repeat_kv(cv, cfg.n_heads // cfg.n_kv_heads))
+        x = x + cm.dense(layer["cross_attn"]["wo"], ox.reshape(B, -1))
+        h = cm.rmsnorm(layer["ln2"], x, cfg.norm_eps)
+        x = x + cm.mlp_apply(layer["mlp"], h, cfg.mlp_act)
+        return (x, fu + futil), (k, v)
+
+    xs = (params["dec_layers"], pools["k"], pools["v"],
+          pools["cross_k"], pools["cross_v"])
+    (x, fu), (ks, vs) = jax.lax.scan(block, (x, fu0), xs)
+    x = cm.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = cm.dense(params["lm_head"], x)
+    new_pools = dict(pools)
+    new_pools.update({
+        "k": ops.pool_write_stacked(pools["k"], ks, descr.write_block,
+                                    descr.write_offset, descr.slot_active),
+        "v": ops.pool_write_stacked(pools["v"], vs, descr.write_block,
+                                    descr.write_offset, descr.slot_active),
+    })
+    return logits, new_pools, fu / cfg.dec_layers

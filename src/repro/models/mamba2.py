@@ -1,0 +1,297 @@
+"""Mamba2 (SSD) mixer + Zamba2 hybrid (mamba backbone, shared attention block).
+
+Training/prefill uses the chunked SSD scan (O(S*Q) memory, exact); decode is a
+single-step state recurrence. Zamba2 structure: a single SHARED attention
+block (one weight set) applied every ``shared_attn_every`` layers; each
+application site has its own KV cache, paged by KV-RM like any attention
+layer. SSM/conv states are O(1) per session and live in engine state slots.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from repro.models import common as cm
+
+CHUNK = 128
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 mixer
+# ---------------------------------------------------------------------------
+
+def mamba2_init(key, cfg: ModelConfig):
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    nheads = di // cfg.ssm_headdim
+    convw = cfg.ssm_conv
+    conv_ch = di + 2 * n
+    ks = jax.random.split(key, 4)
+    return {
+        "ln": cm.norm_init(d),
+        # in_proj -> [z (di), x (di), B (n), C (n), dt (nheads)]
+        "in_proj": cm.dense_init(ks[0], d, 2 * di + 2 * n + nheads),
+        "conv_w": (jax.random.normal(ks[1], (convw, conv_ch), jnp.float32)
+                   / math.sqrt(convw)).astype(cm.DTYPE),
+        "conv_b": jnp.zeros((conv_ch,), cm.DTYPE),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nheads)).astype(jnp.float32),
+        "D": jnp.ones((nheads,), jnp.float32),
+        "dt_bias": jnp.zeros((nheads,), jnp.float32),
+        "out_norm": cm.norm_init(di),
+        "out_proj": cm.dense_init(ks[2], di, d),
+    }
+
+
+def _split_in_proj(cfg, zxbcdt):
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    nheads = di // cfg.ssm_headdim
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + di + 2 * n]
+    dt = zxbcdt[..., di + di + 2 * n:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w, b):
+    """Depthwise causal conv over time. xbc: (B,S,C), w: (W,C)."""
+    W = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * w[i][None, None, :] for i in range(W))
+    return jax.nn.silu(out + b)
+
+
+def _ssd_chunked(x, dt, A, B_in, C_in):
+    """Chunked SSD scan. x:(B,S,H,P) dt:(B,S,H) A:(H,) B_in/C_in:(B,S,N).
+    Returns y:(B,S,H,P), final state (B,H,P,N)."""
+    Bb, S, H, P = x.shape
+    N = B_in.shape[-1]
+    Q = CHUNK if S % CHUNK == 0 else (S if S <= CHUNK else 1)
+    nc = S // Q
+    xc = x.reshape(Bb, nc, Q, H, P)
+    dtc = dt.reshape(Bb, nc, Q, H)
+    Bc = B_in.reshape(Bb, nc, Q, N)
+    Cc = C_in.reshape(Bb, nc, Q, N)
+
+    la = -jnp.exp(A)[None, None, None, :] * dtc                 # (B,nc,Q,H) log decay
+    S_cum = jnp.cumsum(la, axis=2)                              # inclusive
+
+    def chunk_step(h, inp):
+        xq, dtq, bq, cq, sq, laq = inp                          # per chunk
+        # intra: M[t,s] = (C_t . B_s) exp(S_t - S_s) [s<=t]
+        cb = jnp.einsum("btn,bsn->bts", cq, bq)                 # (B,Q,Q)
+        dec = sq[:, :, None, :] - sq[:, None, :, :]             # (B,Q,Q,H) S_t - S_s
+        mask = jnp.tril(jnp.ones((Q, Q), bool))[None, :, :, None]
+        # clamp BEFORE exp so masked-out positions don't leak NaN grads
+        dec = jnp.where(mask, dec, 0.0)
+        m = jnp.where(mask, jnp.exp(dec), 0.0) * cb[..., None]
+        y_intra = jnp.einsum("btsh,bshp->bthp", m, xq * dtq[..., None])
+        # inter: y_t += exp(S_t) C_t . h
+        y_inter = jnp.einsum("btn,bhpn,bth->bthp", cq, h, jnp.exp(sq))
+        # state update: h' = exp(S_Q) h + sum_s exp(S_Q - S_s) dt_s x_s B_s^T
+        w = jnp.exp(sq[:, -1:, :] - sq)                         # (B,Q,H)
+        dx = xq * (dtq * w)[..., None]                          # (B,Q,H,P)
+        h = (jnp.exp(sq[:, -1, :])[:, :, None, None] * h
+             + jnp.einsum("bqhp,bqn->bhpn", dx, bq))
+        return h, y_intra + y_inter
+
+    h0 = jnp.zeros((Bb, H, P, N), jnp.float32)
+    xs = tuple(t.transpose(1, 0, *range(2, t.ndim)) for t in
+               (xc.astype(jnp.float32), dtc, Bc.astype(jnp.float32),
+                Cc.astype(jnp.float32), S_cum, la))
+    h, ys = jax.lax.scan(chunk_step, h0, xs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(Bb, S, H, P)
+    return y, h
+
+
+def mamba2_forward(p, cfg: ModelConfig, x):
+    """Full-sequence mixer. x: (B,S,d) -> (B,S,d)."""
+    Bb, S, d = x.shape
+    di = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    H = di // cfg.ssm_headdim
+    P = cfg.ssm_headdim
+    h = cm.rmsnorm(p["ln"], x, cfg.norm_eps)
+    z, xbc, dt = _split_in_proj(cfg, cm.dense(p["in_proj"], h))
+    xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xin = xbc[..., :di].reshape(Bb, S, H, P)
+    B_in, C_in = xbc[..., di:di + n], xbc[..., di + n:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    y, _ = _ssd_chunked(xin.astype(jnp.float32), dt, p["A_log"], B_in, C_in)
+    y = y + p["D"][None, None, :, None] * xin.astype(jnp.float32)
+    y = y.reshape(Bb, S, di).astype(x.dtype) * jax.nn.silu(z)
+    y = cm.rmsnorm(p["out_norm"], y, cfg.norm_eps)
+    return x + cm.dense(p["out_proj"], y)
+
+
+def mamba2_decode(p, cfg: ModelConfig, x, conv_state, ssd_state):
+    """Single-token decode. x: (B,d); conv_state: (B, W-1, C); ssd_state:
+    (B,H,P,N). Returns (out (B,d), conv_state, ssd_state)."""
+    Bb, d = x.shape
+    di = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    H, P = di // cfg.ssm_headdim, cfg.ssm_headdim
+    h = cm.rmsnorm(p["ln"], x, cfg.norm_eps)
+    z, xbc, dt = _split_in_proj(cfg, cm.dense(p["in_proj"], h))
+    # conv over [state, current]
+    seq = jnp.concatenate([conv_state, xbc[:, None, :]], axis=1)  # (B,W,C)
+    conv = jax.nn.silu((seq * p["conv_w"][None]).sum(axis=1) + p["conv_b"])
+    new_conv_state = seq[:, 1:, :]
+    xin = conv[..., :di].reshape(Bb, H, P).astype(jnp.float32)
+    B_in = conv[..., di:di + n].astype(jnp.float32)
+    C_in = conv[..., di + n:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,H)
+    a = jnp.exp(-jnp.exp(p["A_log"])[None] * dt)                  # (B,H)
+    ssd_state = (a[:, :, None, None] * ssd_state
+                 + jnp.einsum("bhp,bn->bhpn", xin * dt[..., None], B_in))
+    y = jnp.einsum("bhpn,bn->bhp", ssd_state, C_in)
+    y = y + p["D"][None, :, None] * xin
+    y = y.reshape(Bb, di).astype(x.dtype) * jax.nn.silu(z)
+    y = cm.rmsnorm(p["out_norm"], y, cfg.norm_eps)
+    return x + cm.dense(p["out_proj"], y), new_conv_state, ssd_state
+
+
+# ---------------------------------------------------------------------------
+# Zamba2 hybrid model
+# ---------------------------------------------------------------------------
+
+def _shared_attn_init(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": cm.norm_init(cfg.d_model), "attn": cm.gqa_init(ks[0], cfg),
+        "ln2": cm.norm_init(cfg.d_model),
+        "mlp": cm.mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.mlp_act),
+    }
+
+
+def n_attn_sites(cfg: ModelConfig) -> int:
+    return cfg.n_layers // cfg.shared_attn_every
+
+
+def init_params(key, cfg: ModelConfig):
+    every = cfg.shared_attn_every
+    sites = n_attn_sites(cfg)
+    rem = cfg.n_layers - sites * every
+    k_emb, k_m, k_r, k_a, k_out = jax.random.split(key, 5)
+    params = {
+        "embed": (jax.random.normal(k_emb, (cfg.vocab_size, cfg.d_model), jnp.float32)
+                  * 0.02).astype(cm.DTYPE),
+        "shared_attn": _shared_attn_init(k_a, cfg),
+        # (sites, every, ...) stacked mamba params
+        "mamba": jax.vmap(lambda k: cm.stack_layers(
+            partial(mamba2_init, cfg=cfg), k, every))(jax.random.split(k_m, sites)),
+        "ln_f": cm.norm_init(cfg.d_model),
+        "lm_head": cm.dense_init(k_out, cfg.d_model, cfg.vocab_size),
+    }
+    if rem:
+        params["mamba_tail"] = cm.stack_layers(
+            partial(mamba2_init, cfg=cfg), k_r, rem)
+    return params
+
+
+def _attn_full(shared, cfg, x, positions, window=None):
+    h = cm.rmsnorm(shared["ln1"], x, cfg.norm_eps)
+    x = x + cm.gqa_full(shared["attn"], cfg, h, positions, window=window)
+    h = cm.rmsnorm(shared["ln2"], x, cfg.norm_eps)
+    return x + cm.mlp_apply(shared["mlp"], h, cfg.mlp_act)
+
+
+def forward(params, cfg: ModelConfig, tokens, *, remat: bool = False,
+            attn_window: int | None = None, extra_embeds=None):
+    """tokens (B,S) -> logits. attn_window bounds the shared-attention width
+    (KV-RM near-window semantics for long context)."""
+    B, S = tokens.shape
+    x = params["embed"][tokens]
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    def site(x, site_params):
+        x = cm.constrain_batch(x)
+        x = _attn_full(params["shared_attn"], cfg, x, positions, window=attn_window)
+        def inner(x, mp):
+            return mamba2_forward(mp, cfg, x), None
+        body = jax.checkpoint(inner) if remat else inner
+        x, _ = jax.lax.scan(body, x, site_params)
+        return x, None
+
+    body = jax.checkpoint(site) if remat else site
+    x, _ = jax.lax.scan(body, x, params["mamba"])
+    if "mamba_tail" in params:
+        def inner(x, mp):
+            return mamba2_forward(mp, cfg, x), None
+        x, _ = jax.lax.scan(inner, x, params["mamba_tail"])
+    x = cm.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    return cm.dense(params["lm_head"], x)
+
+
+def decode_step(params, cfg: ModelConfig, tokens, pools, descr):
+    """pools: k/v (SITES,P,BT,KV,hd) paged per attention site; conv_state
+    (L,B,W-1,C); ssd_state (L,B,H,P,N). States are engine-slot-resident."""
+    B = tokens.shape[0]
+    sv = cfg.serving
+    every = cfg.shared_attn_every
+    sites = n_attn_sites(cfg)
+    x = params["embed"][tokens]
+    fu0 = jnp.zeros((B, descr.far_table.shape[1]), jnp.float32)
+
+    def attn_decode(x, pk, pv, fu):
+        # site pools are READ-ONLY in the scan (deltas scattered after)
+        h = cm.rmsnorm(params["shared_attn"]["ln1"], x, cfg.norm_eps)
+        q, k, v = cm.gqa_qkv(params["shared_attn"]["attn"], cfg, h[:, None, :],
+                             descr.seq_lens[:, None])
+        q, k, v = q[:, 0], k[:, 0], v[:, 0]
+        o, futil = ops.paged_decode_attention(
+            q, pk, pv, descr.block_table, descr.window_base, descr.seq_lens,
+            descr.slot_active, near_window=sv.near_window, cur_k=k, cur_v=v)
+        x = x + cm.dense(params["shared_attn"]["attn"]["wo"], o.reshape(B, -1))
+        h = cm.rmsnorm(params["shared_attn"]["ln2"], x, cfg.norm_eps)
+        x = x + cm.mlp_apply(params["shared_attn"]["mlp"], h, cfg.mlp_act)
+        return x, k, v, fu + futil
+
+    def site_block(carry, xs):
+        x, fu = carry
+        site_params, pk, pv, conv_s, ssd_s = xs
+        x, k_new, v_new, fu = attn_decode(x, pk, pv, fu)
+        def inner(carry2, mp_states):
+            x = carry2
+            mp, cs, ss = mp_states
+            x, cs, ss = mamba2_decode(mp, cfg, x, cs, ss)
+            return x, (cs, ss)
+        x, (conv_s, ssd_s) = jax.lax.scan(inner, x, (site_params, conv_s, ssd_s))
+        return (x, fu), (k_new, v_new, conv_s, ssd_s)
+
+    L = cfg.n_layers
+    conv = pools["conv_state"]
+    ssd = pools["ssd_state"]
+    body_n = sites * every
+    conv_sites = conv[:body_n].reshape(sites, every, *conv.shape[1:])
+    ssd_sites = ssd[:body_n].reshape(sites, every, *ssd.shape[1:])
+    (x, fu), ys = jax.lax.scan(
+        site_block, (x, fu0),
+        (params["mamba"], pools["k"], pools["v"], conv_sites, ssd_sites))
+    k_new, v_new, conv_out, ssd_out = ys
+    pk = ops.pool_write_stacked(pools["k"], k_new, descr.write_block,
+                                descr.write_offset, descr.slot_active)
+    pv = ops.pool_write_stacked(pools["v"], v_new, descr.write_block,
+                                descr.write_offset, descr.slot_active)
+    conv_out = conv_out.reshape(body_n, *conv.shape[1:])
+    ssd_out = ssd_out.reshape(body_n, *ssd.shape[1:])
+    if "mamba_tail" in params:
+        def inner(carry2, mp_states):
+            x = carry2
+            mp, cs, ss = mp_states
+            x, cs, ss = mamba2_decode(mp, cfg, x, cs, ss)
+            return x, (cs, ss)
+        x, (ct, st) = jax.lax.scan(inner, x,
+                                   (params["mamba_tail"], conv[body_n:], ssd[body_n:]))
+        conv_out = jnp.concatenate([conv_out, ct], axis=0)
+        ssd_out = jnp.concatenate([ssd_out, st], axis=0)
+    x = cm.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = cm.dense(params["lm_head"], x)
+    new_pools = {"k": pk, "v": pv, "conv_state": conv_out, "ssd_state": ssd_out}
+    return logits, new_pools, fu / max(1, sites)

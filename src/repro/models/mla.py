@@ -1,0 +1,104 @@
+"""Multi-head Latent Attention (DeepSeek-V3). The paged payload is the
+compressed latent c_kv (kv_lora_rank) + decoupled rope key (qk_rope_dim), so
+KV-RM pages ~576 elements/token instead of 2*H*hd = 32768 (DESIGN.md §4).
+
+Decode uses the absorbed-matmul formulation (attention scored in latent
+space); tests/test_kernels.py verifies absorbed == naive.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from repro.models import common as cm
+
+
+def mla_init(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 7)
+    d, H = cfg.d_model, cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    rq, rkv = cfg.q_lora_rank, cfg.kv_lora_rank
+    return {
+        "wq_a": cm.dense_init(ks[0], d, rq),
+        "q_norm": cm.norm_init(rq),
+        "wq_b": cm.dense_init(ks[1], rq, H * (dn + dr)),
+        "wkv_a": cm.dense_init(ks[2], d, rkv + dr),
+        "kv_norm": cm.norm_init(rkv),
+        "wk_b": cm.dense_init(ks[3], rkv, H * dn),
+        "wv_b": cm.dense_init(ks[4], rkv, H * dv),
+        "wo": cm.dense_init(ks[5], H * dv, d),
+    }
+
+
+def _project_q(p, cfg, x, positions):
+    """x: (B,S,d) -> q_nope (B,S,H,dn), q_rope (B,S,H,dr) roped."""
+    B, S, _ = x.shape
+    H, dn, dr = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim
+    qa = cm.rmsnorm(p["q_norm"], cm.dense(p["wq_a"], x), cfg.norm_eps)
+    q = cm.dense(p["wq_b"], qa).reshape(B, S, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = cm.apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _project_latent(p, cfg, x, positions):
+    """x: (B,S,d) -> latent (B,S,R) with R = kv_lora_rank + dr (rope applied)."""
+    B, S, _ = x.shape
+    rkv, dr = cfg.kv_lora_rank, cfg.qk_rope_dim
+    kv = cm.dense(p["wkv_a"], x)
+    c_kv = cm.rmsnorm(p["kv_norm"], kv[..., :rkv], cfg.norm_eps)
+    k_rope = kv[..., rkv:].reshape(B, S, 1, dr)
+    k_rope = cm.apply_rope(k_rope, positions, cfg.rope_theta).reshape(B, S, dr)
+    return jnp.concatenate([c_kv, k_rope.astype(c_kv.dtype)], axis=-1)
+
+
+def mla_full(p, cfg: ModelConfig, x, positions, *, causal=True):
+    """Full-sequence MLA attention (train / prefill)."""
+    B, S, _ = x.shape
+    H, dn, dr, dv = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    rkv = cfg.kv_lora_rank
+    q_nope, q_rope = _project_q(p, cfg, x, positions)
+    lat = _project_latent(p, cfg, x, positions)
+    c_kv, k_rope = lat[..., :rkv], lat[..., rkv:]
+    k_nope = cm.dense(p["wk_b"], c_kv).reshape(B, S, H, dn)
+    v = cm.dense(p["wv_b"], c_kv).reshape(B, S, H, dv)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, S, H, dr)).astype(k_nope.dtype)],
+        axis=-1)
+    if S > 1024:
+        o = cm.attention_blocked(q, k, v, causal=causal)
+    else:
+        o = cm.attention_dense(q, k, v, causal=causal)
+    return cm.dense(p["wo"], o.reshape(B, S, H * dv))
+
+
+def mla_decode(p, cfg: ModelConfig, x, pool_lat, descr, far_lat=None):
+    """One-token MLA decode against the (read-only) paged latent pool.
+
+    x: (B, d). Returns (attn_out (B,d), lat_delta (B,R), far_util); the
+    caller scatters lat_delta into the pool after the layer scan
+    (EXPERIMENTS.md §Perf iteration 8).
+    """
+    B, _ = x.shape
+    H, dn, dr, dv = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    rkv = cfg.kv_lora_rank
+    positions = descr.seq_lens[:, None]
+    q_nope, q_rope = _project_q(p, cfg, x[:, None, :], positions)
+    q_nope, q_rope = q_nope[:, 0], q_rope[:, 0]
+    lat = _project_latent(p, cfg, x[:, None, :], positions)[:, 0]   # (B, R)
+    w_k_b = p["wk_b"]["w"].reshape(rkv, H, dn).transpose(1, 0, 2)   # (H, rkv, dn)
+    w_v_b = p["wv_b"]["w"].reshape(rkv, H, dv).transpose(1, 0, 2)
+    farview = far_lat is not None
+    o, futil = ops.mla_decode_attention(
+        q_nope, q_rope, pool_lat, w_k_b, w_v_b, descr.block_table,
+        descr.window_base, descr.seq_lens, descr.slot_active,
+        near_window=cfg.serving.near_window, kv_lora_rank=rkv,
+        far_lat=far_lat,
+        far_table=descr.far_table if farview else None,
+        far_valid=descr.far_valid if farview else None,
+        cur_lat=lat)
+    out = cm.dense(p["wo"], o.reshape(B, H * dv))
+    return out, lat, futil

@@ -1,0 +1,317 @@
+"""MoE transformer (kimi-k2, deepseek-v3). Gather-based capacity dispatch.
+
+Distribution strategy (DESIGN.md §5): tokens stay data-shard-local; dispatch
+runs per token-group (one group per data shard, ``token_groups`` arg), expert
+weights are sharded over the 'model' axis on the FFN hidden dim, so the only
+collective is the same psum a dense TP MLP needs — no all-to-all at this mesh
+size. An EP all-to-all variant is evaluated in EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from repro.models import common as cm
+from repro.models import mla as mla_mod
+
+CAPACITY_FACTOR = 1.25
+
+
+# ---------------------------------------------------------------------------
+# MoE FFN
+# ---------------------------------------------------------------------------
+
+def moe_init(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 5)
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    scale = 1.0 / jnp.sqrt(d)
+    p = {
+        "router": (jax.random.normal(ks[0], (d, E), jnp.float32) * 0.02).astype(jnp.float32),
+        "w_gate": (jax.random.normal(ks[1], (E, d, f), jnp.float32) * scale).astype(cm.DTYPE),
+        "w_up": (jax.random.normal(ks[2], (E, d, f), jnp.float32) * scale).astype(cm.DTYPE),
+        "w_down": (jax.random.normal(ks[3], (E, f, d), jnp.float32) / jnp.sqrt(f)).astype(cm.DTYPE),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = cm.mlp_init(ks[4], d, f * cfg.n_shared_experts, cfg.mlp_act)
+    return p
+
+
+def _dispatch_one_group(x, router_logits, top_k: int, capacity: int):
+    """x: (T, d); router_logits: (T, E). Returns (xe (E,C,d), combine info)."""
+    T, d = x.shape
+    E = router_logits.shape[1]
+    probs = jax.nn.softmax(router_logits.astype(jnp.float32), axis=-1)
+    gates, idx = jax.lax.top_k(probs, top_k)                 # (T, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    flat_e = idx.reshape(-1)                                 # (T*k,)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)      # (T*k, E)
+    pos = jnp.cumsum(onehot, axis=0) - 1
+    slot = (pos * onehot).sum(-1)                            # (T*k,)
+    keep = slot < capacity
+    slot_w = jnp.where(keep, slot, capacity)                 # OOB -> dropped
+
+    tok_ids = jnp.repeat(jnp.arange(T), top_k)
+    idx_table = jnp.full((E, capacity), T, jnp.int32)        # T = zero-row sentinel
+    idx_table = idx_table.at[flat_e, slot_w].set(tok_ids, mode="drop")
+
+    xp = jnp.concatenate([x, jnp.zeros((1, d), x.dtype)], axis=0)
+    xe = xp[idx_table]                                       # (E, C, d)
+    # load-balance aux (switch-style): mean prob * mean assignment per expert
+    me = probs.mean(axis=0)
+    ce = onehot.astype(jnp.float32).mean(axis=0) * top_k
+    aux = (me * ce).sum() * E
+    return xe, (flat_e, slot_w, keep, tok_ids, gates.reshape(-1)), aux
+
+
+def _combine_one_group(h, info, T: int):
+    """h: (E, C, d) expert outputs -> (T, d) weighted scatter-add."""
+    flat_e, slot_w, keep, tok_ids, gates_flat = info
+    d = h.shape[-1]
+    hp = jnp.concatenate([h, jnp.zeros((h.shape[0], 1, d), h.dtype)], axis=1)
+    h_tok = hp[flat_e, slot_w]                               # (T*k, d)
+    w = jnp.where(keep, gates_flat, 0.0).astype(jnp.float32)
+    out = jnp.zeros((T, d), jnp.float32)
+    out = out.at[tok_ids].add(h_tok.astype(jnp.float32) * w[:, None])
+    return out
+
+
+def moe_apply(p, cfg: ModelConfig, x, *, token_groups: int = 1,
+              ep_axes=None):
+    """x: (B, S, d) -> (out, aux_loss). Dispatch is per token group (one group
+    per data shard, routing stays shard-local).
+
+    ep_axes: mesh axis name(s) carrying expert parallelism. When set, the
+    dispatched tensor xe is resharding-constrained from token-group-sharded to
+    expert-sharded (XLA inserts the all-to-all), expert FFNs run on their
+    owning shard, and the combine constraint moves results back — real EP
+    with expert weights stored E-over-data x f-over-model (DESIGN.md §5).
+    """
+    B, S, d = x.shape
+    orig = (B, S, d)
+    xt = x.reshape(token_groups, (B * S) // token_groups, d)
+    Tg = xt.shape[1]
+    E, k = cfg.n_experts, cfg.top_k
+    C = max(1, int(-(-Tg * k // E) * CAPACITY_FACTOR))
+
+    def dispatch_group(xg):
+        logits = xg.astype(jnp.float32) @ p["router"]
+        return _dispatch_one_group(xg, logits, k, C)
+
+    # dispatch per group (vmap), then reshard OUTSIDE the vmap: sharding
+    # constraints under vmap bind the batched leading dim, so the EP
+    # constraint must see the full (G, E, C, d) tensor — G (token-sharded)
+    # -> E (expert-sharded); XLA inserts the all-to-all. Constraining inside
+    # the vmap silently re-pins the G dim instead, and XLA then all-gathers
+    # ~2.1 GB of expert weights per layer (EXPERIMENTS.md §Perf iter. 2).
+    xe, info, aux = jax.vmap(dispatch_group)(xt)          # (G, E, C, d)
+    if ep_axes is not None:
+        P_ = jax.sharding.PartitionSpec
+        xe = jax.lax.with_sharding_constraint(xe, P_(None, ep_axes, None, None))
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, p["w_gate"]))
+    h = h * jnp.einsum("gecd,edf->gecf", xe, p["w_up"])
+    h = jnp.einsum("gecf,efd->gecd", h, p["w_down"])
+    if ep_axes is not None:
+        # expert-sharded -> token-sharded (all-to-all back)
+        h = jax.lax.with_sharding_constraint(h, P_(ep_axes, None, None, None))
+    out = jax.vmap(_combine_one_group, in_axes=(0, 0, None))(h, info, Tg)
+    out = out.reshape(orig).astype(x.dtype)
+    if cfg.n_shared_experts:
+        out = out + cm.mlp_apply(p["shared"], x, cfg.mlp_act)
+    return out, aux.mean()
+
+
+# ---------------------------------------------------------------------------
+# full MoE transformer
+# ---------------------------------------------------------------------------
+
+def _attn_init(key, cfg):
+    return mla_mod.mla_init(key, cfg) if cfg.use_mla else cm.gqa_init(key, cfg)
+
+
+def _dense_layer_init(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 2)
+    dff = cfg.dense_d_ff or cfg.d_ff
+    return {
+        "ln1": cm.norm_init(cfg.d_model), "attn": _attn_init(ks[0], cfg),
+        "ln2": cm.norm_init(cfg.d_model),
+        "mlp": cm.mlp_init(ks[1], cfg.d_model, dff, cfg.mlp_act),
+    }
+
+
+def _moe_layer_init(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": cm.norm_init(cfg.d_model), "attn": _attn_init(ks[0], cfg),
+        "ln2": cm.norm_init(cfg.d_model), "moe": moe_init(ks[1], cfg),
+    }
+
+
+def init_params(key, cfg: ModelConfig):
+    k_emb, k_d, k_m, k_out = jax.random.split(key, 4)
+    params = {
+        "embed": (jax.random.normal(k_emb, (cfg.vocab_size, cfg.d_model), jnp.float32)
+                  * 0.02).astype(cm.DTYPE),
+        "ln_f": cm.norm_init(cfg.d_model),
+        "lm_head": cm.dense_init(k_out, cfg.d_model, cfg.vocab_size),
+    }
+    if cfg.first_k_dense:
+        params["dense_layers"] = cm.stack_layers(
+            partial(_dense_layer_init, cfg=cfg), k_d, cfg.first_k_dense)
+    params["moe_layers"] = cm.stack_layers(
+        partial(_moe_layer_init, cfg=cfg), k_m, cfg.n_layers - cfg.first_k_dense)
+    return params
+
+
+def _attn_full(p, cfg, x, positions):
+    if cfg.use_mla:
+        return mla_mod.mla_full(p, cfg, x, positions)
+    return cm.gqa_full(p, cfg, x, positions)
+
+
+def forward(params, cfg: ModelConfig, tokens, *, token_groups: int = 1,
+            extra_embeds=None, remat: bool = False, return_aux: bool = False,
+            ep_axes=None):
+    B, S = tokens.shape
+    x = params["embed"][tokens]
+    if extra_embeds is not None:
+        x = jax.lax.dynamic_update_slice(x, extra_embeds.astype(x.dtype), (0, 0, 0))
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    def dense_block(x, layer):
+        x = cm.constrain_batch(x)
+        h = cm.rmsnorm(layer["ln1"], x, cfg.norm_eps)
+        x = x + _attn_full(layer["attn"], cfg, h, positions)
+        h = cm.rmsnorm(layer["ln2"], x, cfg.norm_eps)
+        x = x + cm.mlp_apply(layer["mlp"], h, cfg.mlp_act)
+        return x, None
+
+    def moe_block(carry, layer):
+        x, aux = carry
+        x = cm.constrain_batch(x)
+        h = cm.rmsnorm(layer["ln1"], x, cfg.norm_eps)
+        x = x + _attn_full(layer["attn"], cfg, h, positions)
+        h = cm.rmsnorm(layer["ln2"], x, cfg.norm_eps)
+        mo, a = moe_apply(layer["moe"], cfg, h, token_groups=token_groups,
+                          ep_axes=ep_axes)
+        return (x + mo, aux + a), None
+
+    if cfg.first_k_dense:
+        body = jax.checkpoint(dense_block) if remat else dense_block
+        x, _ = jax.lax.scan(body, x, params["dense_layers"])
+    body = jax.checkpoint(moe_block) if remat else moe_block
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                               params["moe_layers"])
+    x = cm.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = cm.dense(params["lm_head"], x)
+    if return_aux:
+        return logits, aux / max(1, cfg.n_layers - cfg.first_k_dense)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# paged decode step
+# ---------------------------------------------------------------------------
+
+def decode_step(params, cfg: ModelConfig, tokens, pools, descr, *,
+                token_groups: int = 1, ep_axes=None):
+    """pools: MLA -> {'lat': (L,P,BT,R), optional 'far_lat': (L,B,MAXC,R)};
+    GQA -> {'k','v', optional 'far_k','far_v'}. Layer axis spans
+    dense layers first, then MoE layers (same order as forward)."""
+    B = tokens.shape[0]
+    sv = cfg.serving
+    x = params["embed"][tokens]
+    farview = ("far_lat" in pools) or ("far_k" in pools)
+    nd = cfg.first_k_dense
+
+    def attn_decode(layer, x, pool_slices, fu):
+        # pools are READ-ONLY here; deltas returned for the post-scan scatter
+        if cfg.use_mla:
+            (pl_,) = pool_slices[:1]
+            far = pool_slices[1] if farview else None
+            o, lat, futil = mla_mod.mla_decode(layer["attn"], cfg, x, pl_, descr,
+                                               far_lat=far)
+            return o, (lat,) + ((far,) if farview else ()), fu + futil
+        pk, pv = pool_slices[:2]
+        fk = pool_slices[2] if farview else None
+        fv = pool_slices[3] if farview else None
+        h = x[:, None, :]
+        q, k, v = cm.gqa_qkv(layer["attn"], cfg, h, descr.seq_lens[:, None])
+        q, k, v = q[:, 0], k[:, 0], v[:, 0]
+        if farview:
+            sk = ops.farview_summarize(pk, descr.far_chunk_blocks,
+                                       descr.far_chunk_tokens, descr.far_do_summarize)
+            svv = ops.farview_summarize(pv, descr.far_chunk_blocks,
+                                        descr.far_chunk_tokens, descr.far_do_summarize)
+            bidx = jnp.arange(B)
+            gate = (descr.far_do_summarize > 0)[:, None, None]
+            fk = fk.at[bidx, descr.far_write_idx].set(
+                jnp.where(gate, sk, fk[bidx, descr.far_write_idx]))
+            fv = fv.at[bidx, descr.far_write_idx].set(
+                jnp.where(gate, svv, fv[bidx, descr.far_write_idx]))
+        o, futil = ops.paged_decode_attention(
+            q, pk, pv, descr.block_table, descr.window_base, descr.seq_lens,
+            descr.slot_active, near_window=sv.near_window,
+            far_k=fk, far_v=fv,
+            far_table=descr.far_table if farview else None,
+            far_valid=descr.far_valid if farview else None,
+            cur_k=k, cur_v=v)
+        o = cm.dense(layer["attn"]["wo"], o.reshape(B, -1))
+        return o, ((k, v) + ((fk, fv) if farview else ())), fu + futil
+
+    def dense_block(carry, layer_xs):
+        x, fu = carry
+        layer, pool_slices = layer_xs[0], layer_xs[1:]
+        h = cm.rmsnorm(layer["ln1"], x, cfg.norm_eps)
+        o, new_pools, fu = attn_decode(layer, h, pool_slices, fu)
+        x = x + o
+        h = cm.rmsnorm(layer["ln2"], x, cfg.norm_eps)
+        x = x + cm.mlp_apply(layer["mlp"], h, cfg.mlp_act)
+        return (x, fu), new_pools
+
+    def moe_block(carry, layer_xs):
+        x, fu = carry
+        layer, pool_slices = layer_xs[0], layer_xs[1:]
+        h = cm.rmsnorm(layer["ln1"], x, cfg.norm_eps)
+        o, new_pools, fu = attn_decode(layer, h, pool_slices, fu)
+        x = x + o
+        h = cm.rmsnorm(layer["ln2"], x, cfg.norm_eps)
+        mo, _ = moe_apply(layer["moe"], cfg, h[:, None, :], token_groups=token_groups,
+                          ep_axes=ep_axes)
+        x = x + mo[:, 0]
+        return (x, fu), new_pools
+
+    pool_keys = (("lat",) + (("far_lat",) if farview else ())) if cfg.use_mla \
+        else (("k", "v") + (("far_k", "far_v") if farview else ()))
+    fu0 = jnp.zeros((B, descr.far_table.shape[1]), jnp.float32)
+
+    new_pools = {k: [] for k in pool_keys}
+    carry = (x, fu0)
+    if nd:
+        xs = (params["dense_layers"],) + tuple(pools[k][:nd] for k in pool_keys)
+        carry, ys = jax.lax.scan(dense_block, carry, xs)
+        for k_, y in zip(pool_keys, ys):
+            new_pools[k_].append(y)
+    xs = (params["moe_layers"],) + tuple(pools[k][nd:] for k in pool_keys)
+    carry, ys = jax.lax.scan(moe_block, carry, xs)
+    for k_, y in zip(pool_keys, ys):
+        new_pools[k_].append(y)
+    (x, fu) = carry
+    deltas = {k: jnp.concatenate(v, axis=0) if len(v) > 1 else v[0]
+              for k, v in new_pools.items()}
+    out_pools = {}
+    for key in pool_keys:
+        if key.startswith("far_"):
+            out_pools[key] = deltas[key]
+        else:
+            out_pools[key] = ops.pool_write_stacked(
+                pools[key], deltas[key], descr.write_block,
+                descr.write_offset, descr.slot_active)
+    x = cm.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = cm.dense(params["lm_head"], x)
+    return logits, out_pools, fu / cfg.n_layers

@@ -1,0 +1,133 @@
+"""Model registry: uniform (init_params / forward / decode_step) API per
+family, plus decode-pool geometry shared by the engine and the dry-run.
+"""
+from __future__ import annotations
+
+from types import SimpleNamespace
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common as cm
+from repro.models import encdec, mamba2, moe, transformer, xlstm
+
+_FAMILY = {
+    "dense": transformer,
+    "vlm": transformer,
+    "moe": moe,
+    "hybrid": mamba2,
+    "ssm": xlstm,
+    "encdec": encdec,
+}
+
+
+def get_module(cfg: ModelConfig):
+    return _FAMILY[cfg.family]
+
+
+def init_params(key, cfg: ModelConfig):
+    return get_module(cfg).init_params(key, cfg)
+
+
+def forward(params, cfg: ModelConfig, tokens, **kw):
+    return get_module(cfg).forward(params, cfg, tokens, **kw)
+
+
+def decode_step(params, cfg: ModelConfig, tokens, pools, descr, **kw):
+    return get_module(cfg).decode_step(params, cfg, tokens, pools, descr, **kw)
+
+
+# ---------------------------------------------------------------------------
+# decode pool geometry
+# ---------------------------------------------------------------------------
+
+def decode_pool_shapes(cfg: ModelConfig, *, batch: int, num_blocks: int,
+                       block_tokens: int, max_chunks: int = 0,
+                       enc_len: int = 0, dtype=cm.DTYPE) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStructs for every decode-state buffer (dry-run + engine).
+
+    num_blocks = physical blocks in the (per-shard) pool; block 0 is scratch.
+    max_chunks > 0 enables far-view buffers.
+    """
+    L, KV, HD = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+    s = jax.ShapeDtypeStruct
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        pools = {"k": s((L, num_blocks, block_tokens, KV, HD), dtype),
+                 "v": s((L, num_blocks, block_tokens, KV, HD), dtype)}
+        if max_chunks:
+            pools["far_k"] = s((L, batch, max_chunks, KV, HD), dtype)
+            pools["far_v"] = s((L, batch, max_chunks, KV, HD), dtype)
+    elif fam == "moe":
+        if cfg.use_mla:
+            R = cfg.kv_lora_rank + cfg.qk_rope_dim
+            pools = {"lat": s((L, num_blocks, block_tokens, R), dtype)}
+            if max_chunks:
+                pools["far_lat"] = s((L, batch, max_chunks, R), dtype)
+        else:
+            pools = {"k": s((L, num_blocks, block_tokens, KV, HD), dtype),
+                     "v": s((L, num_blocks, block_tokens, KV, HD), dtype)}
+            if max_chunks:
+                pools["far_k"] = s((L, batch, max_chunks, KV, HD), dtype)
+                pools["far_v"] = s((L, batch, max_chunks, KV, HD), dtype)
+    elif fam == "hybrid":
+        sites = mamba2.n_attn_sites(cfg)
+        di = cfg.ssm_expand * cfg.d_model
+        H, P, N = di // cfg.ssm_headdim, cfg.ssm_headdim, cfg.ssm_state
+        conv_ch = di + 2 * N
+        pools = {
+            "k": s((sites, num_blocks, block_tokens, KV, HD), dtype),
+            "v": s((sites, num_blocks, block_tokens, KV, HD), dtype),
+            "conv_state": s((L, batch, cfg.ssm_conv - 1, conv_ch), dtype),
+            "ssd_state": s((L, batch, H, P, N), jnp.float32),
+        }
+    elif fam == "ssm":
+        d, di, H = cfg.d_model, cfg.ssm_expand * cfg.d_model, cfg.n_heads
+        hd_m, hd_s = di // H, d // H
+        pairs = xlstm.n_pairs(cfg)
+        pools = {
+            "m": {"C": s((pairs, batch, H, hd_m, hd_m), jnp.float32),
+                  "n": s((pairs, batch, H, hd_m), jnp.float32),
+                  "m": s((pairs, batch, H), jnp.float32),
+                  "conv": s((pairs, batch, cfg.ssm_conv - 1, di), dtype)},
+            "s": {"h": s((pairs, batch, H, hd_s), jnp.float32),
+                  "c": s((pairs, batch, H, hd_s), jnp.float32),
+                  "n": s((pairs, batch, H, hd_s), jnp.float32),
+                  "m": s((pairs, batch, H, hd_s), jnp.float32)},
+        }
+    elif fam == "encdec":
+        Ld = cfg.dec_layers
+        pools = {"k": s((Ld, num_blocks, block_tokens, KV, HD), dtype),
+                 "v": s((Ld, num_blocks, block_tokens, KV, HD), dtype),
+                 "cross_k": s((Ld, batch, enc_len, KV, HD), dtype),
+                 "cross_v": s((Ld, batch, enc_len, KV, HD), dtype),
+                 "enc_len": s((batch,), jnp.int32)}
+    else:
+        raise ValueError(fam)
+    return pools
+
+
+def init_decode_pools(cfg: ModelConfig, **kw):
+    shapes = decode_pool_shapes(cfg, **kw)
+    return jax.tree.map(lambda sd: jnp.zeros(sd.shape, sd.dtype), shapes)
+
+
+def uses_paged_kv(cfg: ModelConfig) -> bool:
+    return cfg.family != "ssm"
+
+
+def paged_payload_bytes_per_token(cfg: ModelConfig) -> int:
+    """Bytes/token/layer moved through the paged pool (bf16)."""
+    return cfg.kv_width * 2
+
+
+def n_paged_layers(cfg: ModelConfig) -> int:
+    if cfg.family == "hybrid":
+        return mamba2.n_attn_sites(cfg)
+    if cfg.family == "encdec":
+        return cfg.dec_layers
+    if cfg.family == "ssm":
+        return 0
+    return cfg.n_layers

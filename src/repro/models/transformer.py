@@ -1,0 +1,157 @@
+"""Dense decoder-only transformer (qwen2.5 / qwen3 / yi / nemotron / internvl2
+backbone). Layers are stacked and consumed with lax.scan for compact HLO.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from repro.models import common as cm
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _layer_init(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 4)
+    return {
+        "ln1": cm.norm_init(cfg.d_model),
+        "attn": cm.gqa_init(ks[0], cfg),
+        "ln2": cm.norm_init(cfg.d_model),
+        "mlp": cm.mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.mlp_act),
+    }
+
+
+def init_params(key, cfg: ModelConfig):
+    k_emb, k_layers, k_out = jax.random.split(key, 3)
+    params = {
+        "embed": (jax.random.normal(k_emb, (cfg.vocab_size, cfg.d_model), jnp.float32)
+                  * 0.02).astype(cm.DTYPE),
+        "layers": cm.stack_layers(partial(_layer_init, cfg=cfg), k_layers, cfg.n_layers),
+        "ln_f": cm.norm_init(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = cm.dense_init(k_out, cfg.d_model, cfg.vocab_size)
+    return params
+
+
+def logits_head(params, cfg: ModelConfig, x):
+    if cfg.tie_embeddings:
+        return x @ params["embed"].T
+    return cm.dense(params["lm_head"], x)
+
+
+# ---------------------------------------------------------------------------
+# full-sequence forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def forward(params, cfg: ModelConfig, tokens, *, extra_embeds=None,
+            remat: bool = False):
+    """tokens: (B, S) int32 -> logits (B, S, V).
+
+    extra_embeds: optional (B, S_front, d) precomputed modality embeddings
+    (vision/audio stubs) overwriting the first S_front positions.
+    """
+    B, S = tokens.shape
+    x = params["embed"][tokens]
+    if extra_embeds is not None:
+        sf = extra_embeds.shape[1]
+        x = jax.lax.dynamic_update_slice(x, extra_embeds.astype(x.dtype), (0, 0, 0))
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    def block(x, layer):
+        x = cm.constrain_batch(x)
+        h = cm.rmsnorm(layer["ln1"], x, cfg.norm_eps)
+        x = x + cm.gqa_full(layer["attn"], cfg, h, positions)
+        h = cm.rmsnorm(layer["ln2"], x, cfg.norm_eps)
+        x = x + cm.mlp_apply(layer["mlp"], h, cfg.mlp_act)
+        return x, None
+
+    body = jax.checkpoint(block) if remat else block
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    x = cm.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    return logits_head(params, cfg, x)
+
+
+# ---------------------------------------------------------------------------
+# paged decode step (KV-RM path)
+# ---------------------------------------------------------------------------
+
+def decode_step(params, cfg: ModelConfig, tokens, pools, descr):
+    """One fixed-shape decode step under the KV-RM contract.
+
+    tokens: (B,) int32 current tokens. pools: dict with
+      k, v: (L, P, BT, KV, hd); optionally far_k, far_v: (L, B, MAXC, KV, hd).
+    descr: FrameDescriptor. Returns (logits (B,V), pools, far_util (B,CAP)).
+    """
+    B = tokens.shape[0]
+    sv = cfg.serving
+    x = params["embed"][tokens]                      # (B, d)
+    pos = descr.seq_lens.astype(jnp.float32)[:, None]  # rope position = t
+
+    farview = "far_k" in pools
+
+    # The KV pools are READ-ONLY inside the layer scan; each layer's new K/V
+    # attends explicitly (cur_k/cur_v) and is emitted as a per-layer delta,
+    # scattered into the pool ONCE after the scan. Carrying the pool through
+    # scan ys makes XLA copy (and on some backends convert) the full stacked
+    # pool every layer (§Perf iteration 8: 850ms -> ~30ms memory term).
+    def block(carry, layer_xs):
+        x, fu = carry
+        if farview:
+            layer, pk, pv, fk, fv = layer_xs
+        else:
+            layer, pk, pv = layer_xs
+            fk = fv = None
+        h = cm.rmsnorm(layer["ln1"], x, cfg.norm_eps)
+        hq = h[:, None, :]                            # (B,1,d)
+        q, k, v = cm.gqa_qkv(layer["attn"], cfg, hq, descr.seq_lens[:, None])
+        q, k, v = q[:, 0], k[:, 0], v[:, 0]           # (B,H,hd)/(B,KV,hd)
+
+        if farview:
+            # summarize the just-completed chunk (predicated, fixed shape)
+            sk = ops.farview_summarize(pk, descr.far_chunk_blocks,
+                                       descr.far_chunk_tokens, descr.far_do_summarize)
+            svv = ops.farview_summarize(pv, descr.far_chunk_blocks,
+                                        descr.far_chunk_tokens, descr.far_do_summarize)
+            bidx = jnp.arange(B)
+            gate = (descr.far_do_summarize > 0)[:, None, None]
+            fk = fk.at[bidx, descr.far_write_idx].set(
+                jnp.where(gate, sk, fk[bidx, descr.far_write_idx]))
+            fv = fv.at[bidx, descr.far_write_idx].set(
+                jnp.where(gate, svv, fv[bidx, descr.far_write_idx]))
+
+        o, futil = ops.paged_decode_attention(
+            q, pk, pv, descr.block_table, descr.window_base, descr.seq_lens,
+            descr.slot_active, near_window=sv.near_window,
+            far_k=fk, far_v=fv,
+            far_table=descr.far_table if farview else None,
+            far_valid=descr.far_valid if farview else None,
+            cur_k=k, cur_v=v)
+        x = x + cm.dense(layer["attn"]["wo"], o.reshape(B, -1))
+        h = cm.rmsnorm(layer["ln2"], x, cfg.norm_eps)
+        x = x + cm.mlp_apply(layer["mlp"], h, cfg.mlp_act)
+        ys = (k, v, fk, fv) if farview else (k, v)
+        return (x, fu + futil), ys
+
+    fu0 = jnp.zeros((B, descr.far_table.shape[1]), jnp.float32)
+    xs = ((params["layers"], pools["k"], pools["v"], pools["far_k"], pools["far_v"])
+          if farview else (params["layers"], pools["k"], pools["v"]))
+    (x, fu), ys = jax.lax.scan(block, (x, fu0), xs)
+    new_pools = {
+        "k": ops.pool_write_stacked(pools["k"], ys[0], descr.write_block,
+                                    descr.write_offset, descr.slot_active),
+        "v": ops.pool_write_stacked(pools["v"], ys[1], descr.write_block,
+                                    descr.write_offset, descr.slot_active),
+    }
+    if farview:
+        new_pools["far_k"], new_pools["far_v"] = ys[2], ys[3]
+    x = cm.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = logits_head(params, cfg, x)
+    return logits, new_pools, fu / cfg.n_layers

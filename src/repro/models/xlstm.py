@@ -1,0 +1,300 @@
+"""xLSTM (sLSTM + mLSTM blocks) — attention-free; recurrent state is O(1)
+per session, so KV-RM's paging/transport path is inapplicable (DESIGN.md §4).
+The serving engine still manages per-session state slots through the pager's
+RESERVE/TRIM verbs so the serving interface stays uniform.
+
+Layers alternate (m, s) pairs and are scanned pairwise for compact HLO.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common as cm
+
+# time-chunked remat for the recurrent scans: without it, backward saves the
+# per-STEP matrix memory (C is H*hd^2 floats -> ~1 PB of saved residuals for
+# train_4k); chunking checkpoints only chunk-boundary carries and recomputes
+# within the chunk (EXPERIMENTS.md §Perf iteration 4).
+TIME_CHUNK = 256
+
+
+def set_time_chunk(n: int):
+    global TIME_CHUNK
+    TIME_CHUNK = n
+
+
+def _time_scan(step, carry0, xs):
+    """lax.scan over time with chunk-boundary gradient checkpointing."""
+    T = xs[0].shape[0]
+    ch = TIME_CHUNK
+    if not ch or T <= ch or T % ch:
+        return jax.lax.scan(step, carry0, xs)
+    nc = T // ch
+    xs_c = tuple(a.reshape(nc, ch, *a.shape[1:]) for a in xs)
+
+    @jax.checkpoint
+    def chunk_body(carry, xc):
+        return jax.lax.scan(step, carry, xc)
+
+    carry, ys = jax.lax.scan(chunk_body, carry0, xs_c)
+    ys = jax.tree.map(lambda a: a.reshape(T, *a.shape[2:]), ys)
+    return carry, ys
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block (matrix memory, exponential gating)
+# ---------------------------------------------------------------------------
+
+def mlstm_init(key, cfg: ModelConfig):
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    H = cfg.n_heads
+    hd = di // H
+    ks = jax.random.split(key, 8)
+    return {
+        "ln": cm.norm_init(d),
+        "up": cm.dense_init(ks[0], d, 2 * di),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, di), jnp.float32)
+                   / math.sqrt(cfg.ssm_conv)).astype(cm.DTYPE),
+        "conv_b": jnp.zeros((di,), cm.DTYPE),
+        "wq": cm.dense_init(ks[2], di, di),
+        "wk": cm.dense_init(ks[3], di, di),
+        "wv": cm.dense_init(ks[4], di, di),
+        "w_if": cm.dense_init(ks[5], di, 2 * H),    # per-head input/forget gates
+        "w_o": cm.dense_init(ks[6], di, di),        # elementwise output gate
+        "down": cm.dense_init(ks[7], di, d),
+    }
+
+
+def _mlstm_scan(q, k, v, ig, fg):
+    """q,k,v: (B,S,H,hd); ig,fg: (B,S,H) raw gate pre-activations.
+    Returns y: (B,S,H,hd). Stabilized exponential gating (xLSTM eq. 19-27)."""
+    B, S, H, hd = q.shape
+    logf = -jax.nn.softplus(-fg.astype(jnp.float32))        # log sigmoid(f)
+    logi = ig.astype(jnp.float32)
+
+    def step(carry, xs):
+        C, n, m = carry                                     # (B,H,hd,hd),(B,H,hd),(B,H)
+        qt, kt, vt, lf, li = xs
+        m_new = jnp.maximum(lf + m, li)
+        fprime = jnp.exp(lf + m - m_new)
+        iprime = jnp.exp(li - m_new)
+        C = fprime[..., None, None] * C + iprime[..., None, None] * (
+            vt[..., :, None] * kt[..., None, :])            # v k^T
+        n = fprime[..., None] * n + iprime[..., None] * kt
+        num = jnp.einsum("bhvk,bhk->bhv", C, qt)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, qt)), 1.0)
+        return (C, n, m_new), num / den[..., None]
+
+    C0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    n0 = jnp.zeros((B, H, hd), jnp.float32)
+    m0 = jnp.zeros((B, H), jnp.float32)
+    xs = tuple(t.transpose(1, 0, *range(2, t.ndim)).astype(jnp.float32)
+               for t in (q, k, v, logf, logi))
+    _, ys = _time_scan(step, (C0, n0, m0), xs)
+    return ys.transpose(1, 0, 2, 3)
+
+
+def mlstm_forward(p, cfg, x):
+    B, S, d = x.shape
+    di = cfg.ssm_expand * d
+    H = cfg.n_heads
+    hd = di // H
+    h = cm.rmsnorm(p["ln"], x, cfg.norm_eps)
+    u = cm.dense(p["up"], h)
+    xi, z = u[..., :di], u[..., di:]
+    # causal depthwise conv
+    W = p["conv_w"].shape[0]
+    pad = jnp.pad(xi, ((0, 0), (W - 1, 0), (0, 0)))
+    xc = jax.nn.silu(sum(pad[:, i:i + S, :] * p["conv_w"][i][None, None]
+                         for i in range(W)) + p["conv_b"])
+    q = cm.dense(p["wq"], xc).reshape(B, S, H, hd) / math.sqrt(hd)
+    k = cm.dense(p["wk"], xc).reshape(B, S, H, hd) / math.sqrt(hd)
+    v = cm.dense(p["wv"], xi).reshape(B, S, H, hd)
+    gates = cm.dense(p["w_if"], xc).reshape(B, S, H, 2)
+    y = _mlstm_scan(q, k, v, gates[..., 0], gates[..., 1])
+    o = jax.nn.sigmoid(cm.dense(p["w_o"], xi).astype(jnp.float32))
+    y = (y.reshape(B, S, di) * o).astype(x.dtype) * jax.nn.silu(z)
+    return x + cm.dense(p["down"], y)
+
+
+def mlstm_decode(p, cfg, x, state):
+    """x: (B,d); state: dict(C (B,H,hd,hd), n (B,H,hd), m (B,H), conv (B,W-1,di))."""
+    B, d = x.shape
+    di = cfg.ssm_expand * d
+    H = cfg.n_heads
+    hd = di // H
+    h = cm.rmsnorm(p["ln"], x, cfg.norm_eps)
+    u = cm.dense(p["up"], h)
+    xi, z = u[..., :di], u[..., di:]
+    seq = jnp.concatenate([state["conv"], xi[:, None, :]], axis=1)
+    xc = jax.nn.silu((seq * p["conv_w"][None]).sum(1) + p["conv_b"])
+    q = cm.dense(p["wq"], xc).reshape(B, H, hd) / math.sqrt(hd)
+    k = cm.dense(p["wk"], xc).reshape(B, H, hd) / math.sqrt(hd)
+    v = cm.dense(p["wv"], xi).reshape(B, H, hd)
+    gates = cm.dense(p["w_if"], xc).reshape(B, H, 2)
+    lf = -jax.nn.softplus(-gates[..., 1].astype(jnp.float32))
+    li = gates[..., 0].astype(jnp.float32)
+    m_new = jnp.maximum(lf + state["m"], li)
+    fprime = jnp.exp(lf + state["m"] - m_new)
+    iprime = jnp.exp(li - m_new)
+    qf, kf, vf = (t.astype(jnp.float32) for t in (q, k, v))
+    C = fprime[..., None, None] * state["C"] + iprime[..., None, None] * (
+        vf[..., :, None] * kf[..., None, :])
+    n = fprime[..., None] * state["n"] + iprime[..., None] * kf
+    num = jnp.einsum("bhvk,bhk->bhv", C, qf)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, qf)), 1.0)
+    y = num / den[..., None]
+    o = jax.nn.sigmoid(cm.dense(p["w_o"], xi).astype(jnp.float32))
+    y = (y.reshape(B, di) * o).astype(x.dtype) * jax.nn.silu(z)
+    new_state = {"C": C, "n": n, "m": m_new, "conv": seq[:, 1:, :]}
+    return x + cm.dense(p["down"], y), new_state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block (scalar memory, recurrent gating) + post-FFN
+# ---------------------------------------------------------------------------
+
+def slstm_init(key, cfg: ModelConfig):
+    d = cfg.d_model
+    H = cfg.n_heads
+    hd = d // H
+    ks = jax.random.split(key, 4)
+    return {
+        "ln": cm.norm_init(d),
+        "w_gates": cm.dense_init(ks[0], d, 4 * d),     # i,f,z,o pre-acts
+        "r_gates": (jax.random.normal(ks[1], (H, hd, 4 * hd), jnp.float32)
+                    / math.sqrt(hd)).astype(cm.DTYPE),  # recurrent, block-diag per head
+        "ln2": cm.norm_init(d),
+        "ffn": cm.mlp_init(ks[2], d, int(d * 4 / 3), "swiglu"),
+    }
+
+
+def _slstm_step(p, cfg, wx, h_prev, c_prev, n_prev, m_prev):
+    """wx: (B,4d) input pre-acts; states: (B,H,hd)."""
+    B = wx.shape[0]
+    d = cfg.d_model
+    H = cfg.n_heads
+    hd = d // H
+    rh = jnp.einsum("bhk,hkg->bhg", h_prev.astype(cm.DTYPE), p["r_gates"])
+    pre = wx.reshape(B, H, 4 * hd).astype(jnp.float32) + rh.astype(jnp.float32)
+    i_, f_, z_, o_ = jnp.split(pre, 4, axis=-1)
+    lf = -jax.nn.softplus(-f_)
+    m_new = jnp.maximum(lf + m_prev, i_)
+    iprime = jnp.exp(i_ - m_new)
+    fprime = jnp.exp(lf + m_prev - m_new)
+    c = fprime * c_prev + iprime * jnp.tanh(z_)
+    n = fprime * n_prev + iprime
+    h = jax.nn.sigmoid(o_) * c / jnp.maximum(n, 1e-6)
+    return h, c, n, m_new
+
+
+def slstm_forward(p, cfg, x):
+    B, S, d = x.shape
+    H, hd = cfg.n_heads, d // cfg.n_heads
+    hn = cm.rmsnorm(p["ln"], x, cfg.norm_eps)
+    wx = cm.dense(p["w_gates"], hn)                     # (B,S,4d)
+
+    def step(carry, xs_):
+        (wxt,) = xs_
+        h, c, n, m = carry
+        h, c, n, m = _slstm_step(p, cfg, wxt, h, c, n, m)
+        return (h, c, n, m), h
+
+    z0 = jnp.zeros((B, H, hd), jnp.float32)
+    (_, _, _, _), ys = _time_scan(step, (z0, z0, z0, z0), (wx.transpose(1, 0, 2),))
+    y = ys.transpose(1, 0, 2, 3).reshape(B, S, d).astype(x.dtype)
+    x = x + y
+    hn = cm.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    return x + cm.mlp_apply(p["ffn"], hn, "swiglu")
+
+
+def slstm_decode(p, cfg, x, state):
+    hn = cm.rmsnorm(p["ln"], x, cfg.norm_eps)
+    wx = cm.dense(p["w_gates"], hn)
+    h, c, n, m = _slstm_step(p, cfg, wx, state["h"], state["c"], state["n"], state["m"])
+    d = cfg.d_model
+    y = h.reshape(x.shape[0], d).astype(x.dtype)
+    x = x + y
+    hn = cm.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    x = x + cm.mlp_apply(p["ffn"], hn, "swiglu")
+    return x, {"h": h, "c": c, "n": n, "m": m}
+
+
+# ---------------------------------------------------------------------------
+# full model — scanned (m, s) pairs
+# ---------------------------------------------------------------------------
+
+def n_pairs(cfg: ModelConfig) -> int:
+    assert cfg.xlstm_pattern and len(cfg.xlstm_pattern) % 2 == 0, \
+        "xlstm pattern must be (m,s) pairs"
+    return len(cfg.xlstm_pattern) // 2
+
+
+def init_params(key, cfg: ModelConfig):
+    k_emb, k_l, k_out = jax.random.split(key, 3)
+    pairs = n_pairs(cfg)
+    def pair_init(k):
+        k1, k2 = jax.random.split(k)
+        return {"m": mlstm_init(k1, cfg), "s": slstm_init(k2, cfg)}
+    return {
+        "embed": (jax.random.normal(k_emb, (cfg.vocab_size, cfg.d_model), jnp.float32)
+                  * 0.02).astype(cm.DTYPE),
+        "pairs": cm.stack_layers(pair_init, k_l, pairs),
+        "ln_f": cm.norm_init(cfg.d_model),
+        "lm_head": cm.dense_init(k_out, cfg.d_model, cfg.vocab_size),
+    }
+
+
+def forward(params, cfg: ModelConfig, tokens, *, remat: bool = False,
+            extra_embeds=None):
+    x = params["embed"][tokens]
+
+    def pair_block(x, pp):
+        x = cm.constrain_batch(x)
+        x = mlstm_forward(pp["m"], cfg, x)
+        x = slstm_forward(pp["s"], cfg, x)
+        return x, None
+
+    body = jax.checkpoint(pair_block) if remat else pair_block
+    x, _ = jax.lax.scan(body, x, params["pairs"])
+    x = cm.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    return cm.dense(params["lm_head"], x)
+
+
+def init_decode_state(cfg: ModelConfig, batch: int):
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    H = cfg.n_heads
+    hd_m, hd_s = di // H, d // H
+    pairs = n_pairs(cfg)
+    zf = lambda *s: jnp.zeros(s, jnp.float32)
+    return {
+        "m": {"C": zf(pairs, batch, H, hd_m, hd_m), "n": zf(pairs, batch, H, hd_m),
+              "m": zf(pairs, batch, H), "conv": jnp.zeros((pairs, batch, cfg.ssm_conv - 1, di), cm.DTYPE)},
+        "s": {"h": zf(pairs, batch, H, hd_s), "c": zf(pairs, batch, H, hd_s),
+              "n": zf(pairs, batch, H, hd_s), "m": zf(pairs, batch, H, hd_s)},
+    }
+
+
+def decode_step(params, cfg: ModelConfig, tokens, pools, descr):
+    """pools = init_decode_state-shaped state stacks. descr is consumed only
+    for slot_active masking (no KV pool — attention-free)."""
+    x = params["embed"][tokens]
+    fu = jnp.zeros((tokens.shape[0], descr.far_table.shape[1]), jnp.float32)
+
+    def pair_block(x, xs):
+        pp, ms, ss = xs
+        x, ms = mlstm_decode(pp["m"], cfg, x, ms)
+        x, ss = slstm_decode(pp["s"], cfg, x, ss)
+        return x, (ms, ss)
+
+    x, (ms, ss) = jax.lax.scan(pair_block, x, (params["pairs"], pools["m"], pools["s"]))
+    x = cm.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = cm.dense(params["lm_head"], x)
+    return logits, {"m": ms, "s": ss}, fu

@@ -1,0 +1,196 @@
+"""Roofline analysis from compiled dry-run artifacts (no real hardware).
+
+``compiled.cost_analysis()`` reports PER-DEVICE quantities (the SPMD
+partitioned module), so the three terms are per-chip times directly:
+
+    compute_s    = HLO_FLOPs / PEAK_FLOPS
+    memory_s     = HLO_bytes / HBM_BW
+    collective_s = collective_bytes / ICI_BW
+
+collective bytes are parsed from the post-SPMD HLO text (result-shape bytes
+of all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute,
+counted once per op via the -start form when async).
+
+The bound step time (perfect compute/memory/ICI overlap) is max(terms);
+roofline_fraction = ideal_step / bound_step where ideal_step is what the
+USEFUL work (MODEL_FLOPS and useful bytes: params once + KV window once)
+would take on the dominant engine.
+
+Hardware constants (TPU v5e-class target, per chip):
+    197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, asdict
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link / chip
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b(pred|bf16|f16|f32|f64|s8|u8|s16|u16|s32|u32|s64|u64)"
+                       r"\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(", re.M)
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result-shape bytes per collective kind (skip *-done duplicates)."""
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for m in _OP_RE.finditer(hlo_text):
+        type_str, kind = m.group(1), m.group(2)
+        out[kind] += _shape_bytes(type_str)
+        counts[kind] += 1
+    out["_counts"] = counts
+    return out
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    # per-device quantities from the compiled module
+    hlo_flops: float
+    hlo_bytes: float
+    coll_bytes: float
+    coll_detail: Dict[str, int]
+    # global useful-work quantities
+    model_flops: float
+    attn_flops: float
+    useful_bytes: float
+    # derived
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+    bottleneck: str = ""
+    useful_flops_ratio: float = 0.0
+    bound_step_s: float = 0.0
+    ideal_step_s: float = 0.0
+    roofline_fraction: float = 0.0
+
+    def finalize(self) -> "Roofline":
+        self.compute_s = self.hlo_flops / PEAK_FLOPS
+        self.memory_s = self.hlo_bytes / HBM_BW
+        self.collective_s = self.coll_bytes / ICI_BW
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        self.bottleneck = max(terms, key=terms.get)
+        self.useful_flops_ratio = (self.model_flops / self.chips
+                                   / self.hlo_flops if self.hlo_flops else 0.0)
+        self.bound_step_s = max(terms.values())
+        useful_flops = self.model_flops + self.attn_flops
+        self.ideal_step_s = max(useful_flops / (self.chips * PEAK_FLOPS),
+                                self.useful_bytes / (self.chips * HBM_BW))
+        self.roofline_fraction = (self.ideal_step_s / self.bound_step_s
+                                  if self.bound_step_s else 0.0)
+        return self
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+
+def model_flops_for(cfg, shape_cfg) -> float:
+    """MODEL_FLOPS: 6*N_active*D for training (fwd+bwd), 2*N_active*D for
+    inference (D = tokens processed by the lowered step)."""
+    n_active = cfg.active_param_count()
+    if shape_cfg.kind == "train":
+        tokens = shape_cfg.global_batch * shape_cfg.seq_len
+        return 6.0 * n_active * tokens
+    if shape_cfg.kind == "prefill":
+        tokens = shape_cfg.global_batch * shape_cfg.seq_len
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape_cfg.global_batch
+
+
+def attn_flops_for(cfg, shape_cfg, visible_window: Optional[int] = None) -> float:
+    """Analytical attention FLOPs (QK^T + PV), not captured by 6*N*D.
+    Causal prefill/train does S^2/2 useful score work per head pair."""
+    from repro.models import registry
+    L = max(0, registry.n_paged_layers(cfg))
+    H, hd = cfg.n_heads, cfg.head_dim
+    B = shape_cfg.global_batch
+    S = shape_cfg.seq_len
+    if cfg.family == "ssm":
+        return 0.0
+    if shape_cfg.kind in ("train", "prefill"):
+        if cfg.family == "encdec":
+            Se = Sd = S // 2
+            per = (Sd * Sd / 2 + Sd * Se) * cfg.dec_layers + \
+                  (Se * Se) * cfg.enc_layers
+            f = 4.0 * B * per * H * hd
+        else:
+            f = 4.0 * B * (S * S / 2) * H * hd * L
+        return f * (3.0 if shape_cfg.kind == "train" else 1.0)
+    win = min(S, visible_window or S)
+    return 4.0 * B * win * H * hd * L
+
+
+def useful_bytes_for(cfg, shape_cfg, visible_window: Optional[int] = None) -> float:
+    """Minimum HBM traffic the step fundamentally requires (global bytes):
+    read active params once; decode additionally reads each slot's visible KV
+    window once and writes one token; train/prefill add activation-scale IO
+    which is compute-dominated and ignored here."""
+    from repro.models import registry
+    pbytes = cfg.active_param_count() * 2.0
+    if shape_cfg.kind == "train":
+        # params read (fwd+bwd) + grads written + optimizer state r/w
+        return 8.0 * pbytes
+    if shape_cfg.kind == "prefill":
+        kv_write = (shape_cfg.global_batch * shape_cfg.seq_len * cfg.kv_width
+                    * 2.0 * max(1, registry.n_paged_layers(cfg)))
+        return pbytes + kv_write
+    win = min(shape_cfg.seq_len, visible_window or shape_cfg.seq_len)
+    kv_read = (shape_cfg.global_batch * win * cfg.kv_width * 2.0
+               * max(1, registry.n_paged_layers(cfg)))
+    return pbytes + kv_read
+
+
+def summarize(cost: dict, hlo_text: str, cfg, shape_cfg, arch: str,
+              shape_name: str, mesh_name: str, chips: int,
+              visible_window: Optional[int] = None) -> Roofline:
+    """Trip-count-aware accounting via roofline.hlo_cost (XLA cost_analysis
+    counts while bodies once — see hlo_cost docstring). The raw XLA numbers
+    are kept in coll_detail['xla_raw'] for reference."""
+    from repro.roofline import hlo_cost
+    walked = hlo_cost.analyze(hlo_text)
+    counts = collective_bytes(hlo_text).pop("_counts")
+    return Roofline(
+        arch=arch, shape=shape_name, mesh=mesh_name, chips=chips,
+        hlo_flops=float(walked.flops),
+        hlo_bytes=float(walked.bytes),
+        coll_bytes=float(walked.coll_bytes),
+        coll_detail={**{k: int(v) for k, v in walked.coll_detail.items()},
+                     "counts": counts,
+                     "xla_raw": {"flops": float(cost.get("flops", 0.0)),
+                                 "bytes": float(cost.get("bytes accessed", 0.0))}},
+        model_flops=model_flops_for(cfg, shape_cfg),
+        attn_flops=attn_flops_for(cfg, shape_cfg, visible_window),
+        useful_bytes=useful_bytes_for(cfg, shape_cfg, visible_window),
+    ).finalize()

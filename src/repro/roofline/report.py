@@ -1,0 +1,116 @@
+"""Generate the EXPERIMENTS.md §Dry-run + §Roofline tables from the JSON
+artifacts in experiments/dryrun/.
+
+    PYTHONPATH=src python -m repro.roofline.report [--out EXPERIMENTS.md]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                          "experiments", "dryrun")
+
+
+def load(dirname=DRYRUN_DIR):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def _fmt_s(x):
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def dryrun_table(recs, mesh):
+    rows = ["| arch | shape | ok | semantics | mem/dev GiB | compile s | "
+            "coll bytes/dev |",
+            "|---|---|---|---|---|---|---|"]
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
+        if r["mesh"] != mesh or r.get("variant"):
+            continue
+        if not r.get("ok"):
+            rows.append(f"| {r['arch']} | {r['shape']} | FAIL | | | | "
+                        f"{r.get('error','')[:60]} |")
+            continue
+        ro = r["roofline"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | ok | {r.get('semantics','')} | "
+            f"{r['memory']['total_bytes_per_device']/2**30:.1f} | "
+            f"{r['compile_s']:.0f} | {ro['coll_bytes']:.2e} |")
+    return "\n".join(rows)
+
+
+def roofline_table(recs, mesh="single"):
+    rows = ["| arch | shape | compute | memory | collective | bottleneck | "
+            "MODEL_FLOPS | useful ratio | roofline frac | note |",
+            "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
+        if r["mesh"] != mesh or not r.get("ok") or r.get("variant"):
+            continue
+        ro = r["roofline"]
+        note = _note(r)
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {_fmt_s(ro['compute_s'])} | "
+            f"{_fmt_s(ro['memory_s'])} | {_fmt_s(ro['collective_s'])} | "
+            f"**{ro['bottleneck']}** | {ro['model_flops']:.2e} | "
+            f"{ro['useful_flops_ratio']:.2f} | {ro['roofline_fraction']:.3f} | "
+            f"{note} |")
+    return "\n".join(rows)
+
+
+def _note(r):
+    ro = r["roofline"]
+    b = ro["bottleneck"]
+    if b == "memory":
+        if r["shape"].startswith("decode") or r["shape"].startswith("long"):
+            return "KV window + pool copies dominate; larger trains / in-place pool writes"
+        return "score-tensor HBM traffic; Pallas flash kernel keeps blocks in VMEM"
+    if b == "collective":
+        return "shrink TP collectives (bf16 psum, overlap with compute)"
+    return "near compute roof; increase arithmetic intensity"
+
+
+def variants_table(recs):
+    rows = ["| arch | shape | variant | compute | memory | collective | "
+            "bottleneck | frac |",
+            "|---|---|---|---|---|---|---|---|"]
+    any_ = False
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"], r.get("variant", ""))):
+        if not r.get("variant") or not r.get("ok"):
+            continue
+        any_ = True
+        ro = r["roofline"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['variant']} | "
+            f"{_fmt_s(ro['compute_s'])} | {_fmt_s(ro['memory_s'])} | "
+            f"{_fmt_s(ro['collective_s'])} | {ro['bottleneck']} | "
+            f"{ro['roofline_fraction']:.3f} |")
+    return "\n".join(rows) if any_ else "(no variant runs yet)"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=DRYRUN_DIR)
+    args = ap.parse_args()
+    recs = load(args.dir)
+    print("## §Dry-run — single pod (16x16 = 256 chips)\n")
+    print(dryrun_table(recs, "single"))
+    print("\n## §Dry-run — multi-pod (2x16x16 = 512 chips)\n")
+    print(dryrun_table(recs, "multi"))
+    print("\n## §Roofline — single pod baseline (per-chip terms)\n")
+    print(roofline_table(recs, "single"))
+    print("\n## §Perf — variant runs\n")
+    print(variants_table(recs))
+
+
+if __name__ == "__main__":
+    main()

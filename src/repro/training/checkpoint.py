@@ -1,0 +1,150 @@
+"""Fault-tolerant checkpointing: atomic on-disk snapshots of the full
+training state (params, optimizer, error-feedback, data cursor, pager state
+for serving), async background writes, retention, and deterministic resume.
+
+Format: one .npz per snapshot (flattened pytree with path-encoded keys) plus
+a JSON manifest written LAST via atomic rename — a torn write can never be
+mistaken for a complete checkpoint (node-failure safety).
+"""
+from __future__ import annotations
+
+import json
+import os
+import pickle
+import shutil
+import threading
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.update(_flatten(tree[k], f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)) and not hasattr(tree, "_fields"):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    elif hasattr(tree, "_fields"):              # NamedTuple
+        for k in tree._fields:
+            out.update(_flatten(getattr(tree, k), f"{prefix}{k}/"))
+    else:
+        out[prefix.rstrip("/")] = np.asarray(tree)
+    return out
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3, async_write: bool = True):
+        self.dir = directory
+        self.keep = keep
+        self.async_write = async_write
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+        self._lock = threading.Lock()
+        self.write_count = 0
+
+    # ------------------------------------------------------------------
+    def save(self, step: int, state: Dict[str, Any], block: bool = False) -> None:
+        """state: dict of pytrees + picklable host objects under 'host'."""
+        # snapshot to host memory synchronously (device buffers may be donated
+        # by the next step), then write in the background
+        arrays = {k: v for k, v in state.items() if k != "host"}
+        flat = _flatten(arrays)
+        flat = {k: np.asarray(v) for k, v in flat.items()}
+        # npz cannot represent ml_dtypes (bf16 etc.) — store raw bits + dtype
+        dtype_map = {}
+        for k, v in list(flat.items()):
+            if v.dtype.kind not in "biufc":     # already numpy-native
+                dtype_map[k] = str(v.dtype)
+                flat[k] = v.view(np.uint16 if v.dtype.itemsize == 2 else np.uint8)
+            elif str(v.dtype) not in ("float64",) and v.dtype.num > 23:
+                dtype_map[k] = str(v.dtype)
+                flat[k] = v.view(f"u{v.dtype.itemsize}")
+        host_blob = pickle.dumps(state.get("host", {}))
+
+        def _write():
+            path = os.path.join(self.dir, f"ckpt_{step:08d}")
+            tmp = path + ".tmp"
+            os.makedirs(tmp, exist_ok=True)
+            np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+            with open(os.path.join(tmp, "host.pkl"), "wb") as f:
+                f.write(host_blob)
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump({"step": step, "keys": sorted(flat),
+                           "dtypes": dtype_map, "time": time.time()}, f)
+            if os.path.exists(path):
+                shutil.rmtree(path)
+            os.rename(tmp, path)                 # atomic publish
+            with self._lock:
+                self.write_count += 1
+            self._gc()
+
+        if self.async_write and not block:
+            self.wait()                          # one writer at a time
+            self._thread = threading.Thread(target=_write, daemon=True)
+            self._thread.start()
+        else:
+            _write()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    # ------------------------------------------------------------------
+    def latest_step(self) -> Optional[int]:
+        steps = []
+        for name in os.listdir(self.dir):
+            if name.startswith("ckpt_") and not name.endswith(".tmp") and \
+               os.path.exists(os.path.join(self.dir, name, "manifest.json")):
+                steps.append(int(name.split("_")[1]))
+        return max(steps) if steps else None
+
+    def restore(self, template: Dict[str, Any],
+                step: Optional[int] = None) -> Dict[str, Any]:
+        """Restore into the structure of `template` (same pytree shape)."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        path = os.path.join(self.dir, f"ckpt_{step:08d}")
+        raw = np.load(os.path.join(path, "arrays.npz"))
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        import ml_dtypes  # noqa: F401  (registers bf16 etc. with numpy)
+        data = {}
+        for k in raw.files:
+            v = raw[k]
+            if k in manifest.get("dtypes", {}):
+                v = v.view(np.dtype(manifest["dtypes"][k]))
+            data[k] = v
+        with open(os.path.join(path, "host.pkl"), "rb") as f:
+            host = pickle.load(f)
+
+        arrays = {k: v for k, v in template.items() if k != "host"}
+        flat_t = _flatten(arrays)
+        missing = set(flat_t) - set(data)
+        if missing:
+            raise ValueError(f"checkpoint missing keys: {sorted(missing)[:5]}")
+
+        leaves, treedef = jax.tree.flatten(arrays)
+        # rebuild by re-flattening with the same deterministic order
+        keys = list(_flatten(arrays).keys())
+        new_leaves = [jnp.asarray(data[k]) for k in keys]
+        restored = jax.tree.unflatten(treedef, new_leaves)
+        out = dict(restored)
+        out["host"] = host
+        out["step"] = step
+        return out
+
+    # ------------------------------------------------------------------
+    def _gc(self) -> None:
+        steps = sorted(
+            int(n.split("_")[1]) for n in os.listdir(self.dir)
+            if n.startswith("ckpt_") and not n.endswith(".tmp"))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"ckpt_{s:08d}"),
+                          ignore_errors=True)

@@ -1,0 +1,126 @@
+"""Training step factory: causal-LM loss, remat, gradient accumulation
+(microbatch scan), optional gradient compression with error feedback, MoE aux
+loss. The returned step is pure and jit/pjit-friendly; sharding is applied by
+the launcher (launch/train.py, launch/dryrun.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed import compression
+from repro.models import registry
+from repro.training.optimizer import OptimizerConfig, OptState, apply_updates
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    microbatches: int = 1             # gradient accumulation
+    remat: bool = True
+    aux_loss_weight: float = 0.01     # MoE load balance
+    compression: str = "none"         # none | bf16 | int8
+    token_groups: int = 1             # MoE dispatch groups (= data shards)
+    ep_axes: tuple = None             # mesh axes carrying expert parallelism
+    batch_axes: tuple = None          # mesh axes sharding batch rows (for the
+                                      # microbatch reshape constraint)
+    accum_dtype: str = "float32"      # gradient accumulator dtype
+
+
+def lm_loss(params, cfg: ModelConfig, tokens, extra_embeds=None, *,
+            remat: bool = True, aux_w: float = 0.01, token_groups: int = 1,
+            ep_axes=None):
+    """Next-token cross-entropy (ignores the last position's prediction)."""
+    kw = {}
+    if cfg.family == "moe":
+        logits, aux = registry.forward(params, cfg, tokens, remat=remat,
+                                       token_groups=token_groups,
+                                       return_aux=True, ep_axes=ep_axes,
+                                       extra_embeds=extra_embeds)
+    else:
+        if extra_embeds is not None:
+            kw["extra_embeds"] = extra_embeds
+        logits = registry.forward(params, cfg, tokens, remat=remat, **kw)
+        aux = jnp.zeros((), jnp.float32)
+    logits = logits.astype(jnp.float32)
+    tgt = tokens[:, 1:]
+    lg = logits[:, :-1]
+    ll = jax.nn.log_softmax(lg, axis=-1)
+    nll = -jnp.take_along_axis(ll, tgt[..., None], axis=-1)[..., 0]
+    loss = nll.mean()
+    return loss + aux_w * aux, {"loss": loss, "aux": aux}
+
+
+def make_train_step(cfg: ModelConfig, ocfg: OptimizerConfig,
+                    tcfg: TrainConfig):
+    """Returns train_step(params, opt_state, err_fb, batch) ->
+    (params, opt_state, err_fb, metrics). batch: dict(tokens (B,S),
+    optional extra_embeds)."""
+
+    def grads_of(params, tokens, extra):
+        (l, m), g = jax.value_and_grad(
+            lambda p: lm_loss(p, cfg, tokens, extra, remat=tcfg.remat,
+                              aux_w=tcfg.aux_loss_weight,
+                              token_groups=tcfg.token_groups,
+                              ep_axes=tcfg.ep_axes),
+            has_aux=True)(params)
+        return l, m, g
+
+    def train_step(params, opt_state: OptState, err_fb, batch):
+        tokens = batch["tokens"]
+        extra = batch.get("extra_embeds")
+        mb = tcfg.microbatches
+        if mb > 1:
+            B = tokens.shape[0]
+            # keep ROWS data-sharded after the microbatch split — without the
+            # constraint XLA shards the scan dim and replicates each
+            # microbatch across the data axis (16x overwork; see §Perf log)
+            tk = tokens.reshape(B // mb, mb, -1).swapaxes(0, 1)
+            ex = (extra.reshape(B // mb, mb, *extra.shape[1:]).swapaxes(0, 1)
+                  if extra is not None else None)
+            if tcfg.batch_axes:
+                from jax.sharding import PartitionSpec as _P
+                wsc = jax.lax.with_sharding_constraint
+                tk = wsc(tk, _P(None, tcfg.batch_axes, None))
+                if ex is not None:
+                    ex = wsc(ex, _P(None, tcfg.batch_axes,
+                                    *([None] * (ex.ndim - 2))))
+
+            def acc_step(carry, xs):
+                gacc, lacc = carry
+                tkn = xs[0]
+                exn = xs[1] if extra is not None else None
+                l, m, g = grads_of(params, tkn, exn)
+                gacc = jax.tree.map(
+                    lambda a, b: (a.astype(jnp.float32)
+                                  + b.astype(jnp.float32) / mb).astype(a.dtype),
+                    gacc, g)
+                return (gacc, lacc + l / mb), None
+
+            adt = jnp.bfloat16 if tcfg.accum_dtype == "bfloat16" else jnp.float32
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, adt), params)
+            xs = (tk, ex) if extra is not None else (tk,)
+            (grads, loss), _ = jax.lax.scan(acc_step, (g0, 0.0), xs)
+            metrics = {"loss": loss, "aux": jnp.zeros((), jnp.float32)}
+        else:
+            loss, metrics, grads = grads_of(params, tokens, extra)
+
+        # gradient compression across the pod axis (error feedback keeps the
+        # optimizer unbiased); the actual reduce is XLA-inserted under pjit —
+        # the dtype of `grads` at this boundary is what crosses the wire.
+        if tcfg.compression == "bf16":
+            grads, err_fb = compression.compress_bf16(grads, err_fb)
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        elif tcfg.compression == "int8":
+            (wire, scales), err_fb = compression.compress_int8(grads, err_fb)
+            grads = compression.decompress_int8(wire, scales)
+
+        params, opt_state, om = apply_updates(params, grads, opt_state, ocfg)
+        metrics.update(om)
+        return params, opt_state, err_fb, metrics
+
+    return train_step

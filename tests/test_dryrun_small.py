@@ -1,0 +1,72 @@
+"""Dry-run machinery on a small forced-device mesh (subprocess: the 512-device
+flag must be set before jax initializes, and the main test process already
+holds 1 device). Exercises the same builders as the production sweep."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import jax
+    from jax.sharding import AxisType
+    import repro.launch.dryrun as dr
+    from repro.configs import get_reduced, SHAPES
+    from repro.configs.base import ShapeConfig
+
+    # shrink the production mesh for the test
+    import repro.launch.mesh as mesh_mod
+    mesh_mod.make_production_mesh = lambda multi_pod=False: jax.make_mesh(
+        (2, 2, 2) if multi_pod else (4, 2),
+        ("pod", "data", "model") if multi_pod else ("data", "model"),
+        axis_types=(AxisType.Auto,) * (3 if multi_pod else 2))
+    dr.make_production_mesh = mesh_mod.make_production_mesh
+
+    # reduced configs + reduced shapes
+    import repro.configs as C
+    shapes = {
+        "train_4k": ShapeConfig("train_4k", 64, 8, "train"),
+        "decode_32k": ShapeConfig("decode_32k", 128, 8, "decode"),
+        "prefill_32k": ShapeConfig("prefill_32k", 128, 4, "prefill"),
+        "long_500k": ShapeConfig("long_500k", 512, 1, "decode"),
+    }
+    dr.SHAPES.clear(); dr.SHAPES.update(shapes)
+    dr.BLOCK_TOKENS = 16
+
+    arch, shape, mesh_name = json.loads(os.environ["CELL"])
+    cfg = get_reduced(arch)
+    rec = dr.run_cell(arch, shape, mesh_name, out_dir=os.environ["OUT"],
+                      force=True, cfg_override=cfg)
+    print(json.dumps({"ok": rec.get("ok"), "err": rec.get("error", "")}))
+""")
+
+
+@pytest.mark.parametrize("arch,shape,mesh", [
+    ("qwen2.5-32b", "train_4k", "single"),
+    ("qwen2.5-32b", "decode_32k", "multi"),
+    ("deepseek-v3-671b", "train_4k", "single"),
+    ("kimi-k2-1t-a32b", "decode_32k", "single"),
+    ("zamba2-7b", "decode_32k", "single"),
+    ("xlstm-125m", "long_500k", "multi"),
+    ("seamless-m4t-medium", "prefill_32k", "single"),
+    ("internvl2-26b", "train_4k", "multi"),
+])
+def test_dryrun_cell_reduced(arch, shape, mesh, tmp_path):
+    env = dict(os.environ)
+    env.update({
+        "CELL": json.dumps([arch, shape, mesh]),
+        "OUT": str(tmp_path),
+        "PYTHONPATH": os.path.join(ROOT, "src"),
+    })
+    out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=420)
+    assert out.returncode == 0, out.stderr[-2000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["ok"], res["err"]

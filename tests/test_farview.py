@@ -1,0 +1,58 @@
+"""Far-view policy: EMA utility scoring, cap selection, slot recycling."""
+import numpy as np
+
+from repro.core.farview import FarViewPolicy
+
+
+def _policy(cap=4, max_chunks=16):
+    return FarViewPolicy(batch=2, max_chunks=max_chunks, cap=cap,
+                         sv_chunk=32, block_tokens=8)
+
+
+def test_select_before_any_chunks():
+    p = _policy()
+    tbl, val = p.select(0)
+    assert val.sum() == 0
+
+
+def test_select_under_cap_keeps_all():
+    p = _policy(cap=4)
+    for _ in range(3):
+        p.on_chunk_summarized(0)
+    tbl, val = p.select(0)
+    assert val.sum() == 3
+    assert list(tbl[:3]) == [0, 1, 2]
+
+
+def test_ema_drives_selection_over_cap():
+    p = _policy(cap=2, max_chunks=8)
+    for _ in range(6):
+        p.on_chunk_summarized(0)
+    # feed utility: chunk 1 and 4 are hot
+    ftab = np.array([[1, 4], [0, 0]], np.int32)
+    futil = np.array([[0.9, 0.8], [0, 0]], np.float32)
+    for _ in range(5):
+        p.observe_utility(futil, ftab)
+    tbl, val = p.select(0)
+    assert val.sum() == 2
+    assert set(tbl.tolist()) == {1, 4}
+
+
+def test_budget_exhaustion_recycles_lowest_utility():
+    p = _policy(cap=2, max_chunks=3)
+    idxs = [p.on_chunk_summarized(0) for _ in range(3)]
+    assert idxs == [0, 1, 2]
+    ftab = np.array([[0, 2], [0, 0]], np.int32)
+    futil = np.array([[0.5, 0.9], [0, 0]], np.float32)
+    p.observe_utility(futil, ftab)
+    nxt = p.on_chunk_summarized(0)     # recycle argmin EMA -> chunk 1
+    assert nxt == 1
+
+
+def test_reset_slot_clears_state():
+    p = _policy()
+    p.on_chunk_summarized(1)
+    p.reset_slot(1)
+    assert p.n_chunks[1] == 0
+    _, val = p.select(1)
+    assert val.sum() == 0

@@ -1,0 +1,95 @@
+"""Fault tolerance: heartbeat failure detection, straggler hedging policy,
+elastic resize planning, and an end-to-end failure drill (engine checkpoint
+-> kill -> restore -> identical continuation)."""
+import numpy as np
+import jax
+
+from repro.distributed.fault import (ElasticPlan, HeartbeatMonitor,
+                                     StragglerMitigator, plan_resize)
+
+
+def test_heartbeat_detects_failure_once():
+    failed = []
+    mon = HeartbeatMonitor(["w0", "w1", "w2"], timeout=5.0,
+                           on_failure=failed.append)
+    for t in range(4):
+        for w in ("w0", "w1", "w2"):
+            mon.beat(w, float(t))
+    # w1 goes silent
+    for t in range(4, 12):
+        mon.beat("w0", float(t))
+        mon.beat("w2", float(t))
+        mon.check(float(t))
+    assert failed == ["w1"]
+    assert set(mon.alive()) == {"w0", "w2"}
+    # rejoin
+    mon.beat("w1", 20.0)
+    assert "w1" in mon.alive()
+
+
+def test_straggler_flags_outliers_only():
+    m = StragglerMitigator(threshold=3.0)
+    flagged = [m.observe(i, 0.01 + 0.001 * (i % 3)) for i in range(20)]
+    assert not any(flagged)
+    assert m.observe(20, 0.5) is True          # 50x spike -> hedge
+    assert m.observe(21, 0.01) is False        # baseline not poisoned
+    assert m.hedged_steps == [20]
+
+
+def test_elastic_shrink_moves_only_orphans():
+    sessions = {0: 0, 1: 1, 2: 2, 3: 3, 4: 0, 5: 3}
+    plan = plan_resize(sessions, old_groups=4, new_groups=3)
+    moved = {s for s, _, _ in plan.session_moves}
+    assert moved == {3, 5}                      # only group-3 sessions move
+    assert all(tgt < 3 for _, _, tgt in plan.session_moves)
+    assert plan.pool_reshard
+
+
+def test_elastic_grow_is_noop_for_sessions():
+    sessions = {0: 0, 1: 1}
+    plan = plan_resize(sessions, old_groups=2, new_groups=4)
+    assert plan.moved_sessions == 0
+    assert plan.pool_reshard
+
+
+def test_engine_failure_drill():
+    """Serving failure drill: engine state (pager + scheduler + pools) is
+    checkpointed; a fresh engine restores and continues to the same tokens."""
+    from repro.configs import get_reduced
+    from repro.core.engine import EngineConfig, KVRMEngine
+    from repro.core.scheduler import Request
+    from repro.models import registry
+
+    cfg = get_reduced("qwen2.5-32b")
+    params = registry.init_params(jax.random.PRNGKey(3), cfg)
+    ecfg = EngineConfig(mode="paged_merge", batch=2, max_seq=64, block_tokens=8)
+
+    def mk():
+        e = KVRMEngine(cfg, params, ecfg)
+        rng = np.random.default_rng(0)
+        for i in range(2):
+            e.submit(Request(rid=i, prompt=rng.integers(0, 100, 6).astype(np.int32),
+                             gen_len=10))
+        return e
+
+    ref = mk()
+    ref.run(max_steps=100)
+    want = {r.rid: r.generated for r in ref.sched.finished}
+
+    # run half, snapshot host+device state, 'crash', restore into new engine
+    eng = mk()
+    for _ in range(8):
+        eng.step()
+    snap_pools = jax.tree.map(np.asarray, eng.pools)
+    import copy
+    snap_host = copy.deepcopy((eng.pager, eng.sched, eng._slot_len,
+                               eng._slot_sid, eng._last_token))
+    del eng
+
+    eng2 = KVRMEngine(cfg, params, ecfg)
+    eng2.pools = jax.tree.map(lambda a: jax.numpy.asarray(a), snap_pools)
+    eng2.pager, eng2.sched, eng2._slot_len, eng2._slot_sid, eng2._last_token = \
+        copy.deepcopy(snap_host)
+    eng2.run(max_steps=100)
+    got = {r.rid: r.generated for r in eng2.sched.finished}
+    assert got == want

@@ -1,0 +1,64 @@
+"""Scheduler + trace-generator behaviour."""
+import numpy as np
+
+from repro.core.scheduler import Request, Scheduler
+from repro.data import traces
+
+
+def _req(rid, plen=4, gen=3, arrival=0.0):
+    return Request(rid=rid, prompt=np.arange(plen, dtype=np.int32),
+                   gen_len=gen, arrival=arrival)
+
+
+def test_admission_respects_capacity_and_arrival():
+    s = Scheduler(2)
+    for i in range(4):
+        s.submit(_req(i, arrival=float(i)))
+    adm = s.admit(now=0.5)
+    assert len(adm) == 1                     # only rid 0 has arrived
+    adm = s.admit(now=10.0)
+    assert len(adm) == 1                     # one slot left
+    assert len(s.waiting) == 2
+
+
+def test_prefill_then_generate_token_flow():
+    s = Scheduler(1)
+    s.submit(_req(0, plen=3, gen=2))
+    s.admit()
+    toks = [s.next_token(0, last_sampled=99) for _ in range(3)]
+    assert toks == [0, 1, 2]
+    assert not s.is_prefilling(0)
+    assert s.next_token(0, last_sampled=42) == 42
+
+
+def test_eos_retire_frees_slot():
+    s = Scheduler(1)
+    s.submit(_req(0, gen=1))
+    s.submit(_req(1))
+    s.admit()
+    assert s.record_output(0, 7) is True     # gen_len 1 -> EOS
+    s.retire(0)
+    assert s.free_slots() == [0]
+    assert len(s.admit()) == 1               # rid 1 admitted
+
+
+def test_mixed_workload_matches_paper_heterogeneity():
+    """Table 1 shape: heavy-tailed lengths, bursty arrivals."""
+    reqs = traces.azure_like_replay(traces.TraceConfig(
+        n_requests=400, token_scale=1.0, seed=0))
+    s = traces.trace_summary(reqs)
+    assert 50 <= s["gen_p50"] <= 200
+    assert s["gen_p90"] >= 2 * s["gen_p50"]
+    assert s["gen_p99"] >= 4 * s["gen_p50"]
+    assert s["arrival_top10_share"] >= 0.15   # concentrated arrivals
+
+
+def test_prefix_sharing_workload():
+    reqs = traces.mixed_length_workload(traces.TraceConfig(
+        n_requests=50, shared_prefix_frac=0.5, seed=1))
+    shared = [r for r in reqs if r.prefix_of is not None]
+    assert len(shared) >= 10
+    for r in shared:
+        assert r.prefix_len > 0
+        np.testing.assert_array_equal(r.prompt[:r.prefix_len],
+                                      reqs[0].prompt[:r.prefix_len])
