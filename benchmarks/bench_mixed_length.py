@@ -4,15 +4,67 @@ the SAME device memory budget; the arena's worst-case reservation buys fewer
 concurrent slots (width penalty), while the pager tracks the active set.
 
 Reported per mode: throughput (tok/s), p99 step latency, reserved KV bytes,
-DMA groups/step, avg merged DMA bytes."""
+DMA groups/step, avg merged DMA bytes.
+
+The ``pipeline/*`` rows A/B the overlapped host-device decode loop + chunked
+prefill (DESIGN.md §3) against the seed-equivalent synchronous path
+(pipeline_depth=0, prefill_chunk=0) on the same workloads, including a
+prompt-heavy mix where chunked prefill dominates."""
+import argparse
+
 import numpy as np
 
-from benchmarks.common import engine, print_rows, row, run_workload
+from benchmarks.common import (engine, print_rows, row, run_workload,
+                               smoke_scale, write_json)
+from repro.core.scheduler import Request
 from repro.data import traces
 
 MAX_SEQ = 256
 BUDGET_SLOTS_ARENA = 4          # same device bytes buys 4 arena slots ...
 BUDGET_SLOTS_PAGED = 8          # ... or 8 paged slots at 0.5 budget frac
+PREFILL_CHUNK = 32
+
+
+def _prompt_heavy_reqs(n, vocab, seed=7):
+    """Long prompts, short generations: the regime where prompt ingestion
+    dominates and chunked prefill changes throughput by ~an order."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n):
+        plen = int(rng.integers(64, 161))
+        glen = int(rng.integers(12, 25))
+        reqs.append(Request(rid=i, prompt=rng.integers(0, vocab, size=plen)
+                            .astype(np.int32), gen_len=glen))
+    return reqs
+
+
+def _pipeline_ab(rows):
+    scale = smoke_scale()
+    workloads = {
+        "mixed": lambda vocab: traces.mixed_length_workload(traces.TraceConfig(
+            n_requests=max(6, int(24 * scale)), token_scale=0.3, vocab=vocab,
+            seed=3)),
+        "prompt_heavy": lambda vocab: _prompt_heavy_reqs(
+            max(4, int(16 * scale)), vocab),
+    }
+    for wname, mk in workloads.items():
+        for label, depth, chunk in (("sync", 0, 0),
+                                    ("pipelined", 1, 0),
+                                    ("pipelined_chunked", 1, PREFILL_CHUNK)):
+            eng = engine("paged_merge", batch=BUDGET_SLOTS_PAGED,
+                         max_seq=MAX_SEQ, pool_budget=0.5,
+                         pipeline_depth=depth, prefill_chunk=chunk)
+            run_workload(eng, mk(eng.cfg.vocab_size))
+            lat = eng.latency_stats()
+            a = eng.audit()
+            rows.append(row(
+                f"pipeline/{wname}/{label}", lat["mean_ms"] * 1e3,
+                tok_s=eng.throughput(), steps=a["steps"],
+                submit_share=a["submit_share"],
+                dma_groups=a["dma_groups_per_step"],
+                prefill_chunks=a["prefill_chunks_run"],
+                step_p99_ms=lat["p99_ms"],
+                finished=len(eng.sched.finished)))
 
 
 def run():
@@ -53,8 +105,16 @@ def run():
         rows.append(row("mixed_length/attribution", 0.0,
                         core_tput_share=(core_t - base_t) / max(full_t - base_t, 1e-9),
                         core_p99_share=(base_p - core_p) / max(base_p - full_p, 1e-9)))
+    _pipeline_ab(rows)
     return rows
 
 
 if __name__ == "__main__":
-    print_rows(run())
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None,
+                    help="also write the rows as a JSON summary (CI artifact)")
+    args = ap.parse_args()
+    rows = run()
+    print_rows(rows)
+    if args.json:
+        write_json(rows, args.json)

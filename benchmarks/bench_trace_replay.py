@@ -1,6 +1,10 @@
 """Fig. 4(a-b) + Table 1 — bursty replay window: heavy-tailed lengths,
 concentrated arrivals, EOS bursts. Static-graph baseline (fewer slots at the
-same budget) exhibits head-of-line spikes; KV-RM tightens the tail."""
+same budget) exhibits head-of-line spikes; KV-RM tightens the tail.
+
+``replay/paged_merge/sync`` vs ``.../pipelined_chunked`` A/Bs the overlapped
+decode loop + chunked prefill against the seed-equivalent synchronous path
+under bursty arrivals (admissions + EOS bursts mid-pipeline)."""
 from benchmarks.common import engine, print_rows, row, run_workload
 from repro.data import traces
 
@@ -8,22 +12,31 @@ from repro.data import traces
 def run():
     rows = []
     tcfg = traces.TraceConfig(n_requests=32, token_scale=0.25, vocab=256,
-                              seed=11, burstiness=2.0)
+                              seed=11, burstiness=2.0, prompt_mean=96)
     summary = traces.trace_summary(traces.azure_like_replay(tcfg))
     rows.append(row("trace/heterogeneity", 0.0, **summary))
-    for mode, slots, budget in (("arena", 4, 1.0), ("paged", 8, 0.5),
-                                ("paged_merge", 8, 0.5)):
-        eng = engine(mode, batch=slots, max_seq=256, pool_budget=budget)
+    configs = (
+        ("replay/arena", "arena", 4, 1.0, {}),
+        ("replay/paged", "paged", 8, 0.5, {}),
+        ("replay/paged_merge/sync", "paged_merge", 8, 0.5,
+         dict(pipeline_depth=0, prefill_chunk=0)),
+        ("replay/paged_merge/pipelined_chunked", "paged_merge", 8, 0.5,
+         dict(pipeline_depth=1, prefill_chunk=32)),
+    )
+    for name, mode, slots, budget, kw in configs:
+        eng = engine(mode, batch=slots, max_seq=256, pool_budget=budget, **kw)
         reqs = traces.azure_like_replay(tcfg)
         run_workload(eng, reqs, replay_scale=0.01)
         lat = eng.latency_stats()
         rl = eng.request_latency_stats()
-        rows.append(row(f"replay/{mode}", lat["mean_ms"] * 1e3,
+        a = eng.audit()
+        rows.append(row(name, lat["mean_ms"] * 1e3,
                         tok_s=eng.throughput(), p99_ms=lat["p99_ms"],
                         p999_ms=lat["p999_ms"], max_spike_ms=lat["max_ms"],
                         ttft_p99_ms=rl["ttft_p99_ms"],
                         completion_p99_ms=rl["completion_p99_ms"],
                         peak_reserved_kv=eng.peak_reserved_kv,
+                        submit_share=a["submit_share"],
                         finished=len(eng.sched.finished)))
     return rows
 

@@ -1,6 +1,8 @@
 """Shared benchmark helpers: engine factory, workload runners, CSV rows."""
 from __future__ import annotations
 
+import json
+import os
 import time
 from typing import List, Tuple
 
@@ -49,3 +51,21 @@ def print_rows(rows: List[Tuple[str, float, dict]]):
         dv = ";".join(f"{k}={v:.4g}" if isinstance(v, float) else f"{k}={v}"
                       for k, v in derived.items())
         print(f"{name},{us:.2f},{dv}")
+
+
+def rows_to_json(rows: List[Tuple[str, float, dict]]) -> dict:
+    return {name: {"us_per_call": us, **{k: (float(v) if hasattr(v, "item")
+                                             else v) for k, v in derived.items()}}
+            for name, us, derived in rows}
+
+
+def write_json(rows: List[Tuple[str, float, dict]], path: str) -> None:
+    """Persist a bench's rows as a JSON summary (CI perf-trajectory artifact)."""
+    with open(path, "w") as f:
+        json.dump(rows_to_json(rows), f, indent=2, sort_keys=True)
+    print(f"# wrote {path}")
+
+
+def smoke_scale() -> float:
+    """CI smoke runs set REPRO_BENCH_SMOKE=1 to shrink workloads ~4x."""
+    return 0.25 if os.environ.get("REPRO_BENCH_SMOKE") else 1.0

@@ -10,19 +10,39 @@ Modes (Table 5 attribution rows):
 
 Invariants audited every run: the decode step is compiled ONCE (no retrace
 after warm-up), exactly one Frame commit per step, bounded host control share.
+
+Hot-path structure (DESIGN.md §3):
+  * ``pipeline_depth >= 1`` (default) overlaps host descriptor assembly for
+    step t+1 with device execution of step t. Sampled-token feedback flows
+    device-side (the compiled step selects between host prompt tokens and the
+    previous step's on-device argmax), so host readback lags dispatch by one
+    step. EOS in this repro is a fixed token budget, hence retirement is
+    host-predictable and happens at dispatch time — the pager/transport
+    timeline is bit-identical to the synchronous path.
+  * ``pipeline_depth = 0`` preserves the exact seed behavior (per-slot
+    descriptor assembly, blocking readback each step) for A/B measurement.
+  * ``prefill_chunk = C > 0`` ingests prompts through a second fixed-shape
+    chunked prefill executor (compiled once) at C tokens per engine step
+    instead of one; the final prompt token always goes through the decode
+    step so sampled-token semantics are unchanged.
 """
 from __future__ import annotations
 
 import time
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Deque, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.descriptor import FrameDescriptor, empty_descriptor
+from repro.core.descriptor import (FrameDescriptor, chunk_flat_size,
+                                   descriptor_flat_size, empty_descriptor,
+                                   flat_chunk_views, flat_descriptor_views,
+                                   unflatten_chunk_descriptor,
+                                   unflatten_descriptor)
 from repro.core.farview import FarViewPolicy
 from repro.core.pager import BlockPager
 from repro.core.scheduler import Request, Scheduler
@@ -45,6 +65,9 @@ class EngineConfig:
     span_blocks: int = 4             # placement span (BLOCKALIGN granularity)
     greedy: bool = True
     debug_logits: bool = False       # capture per-step logits (tests only)
+    # --- host/device overlap + chunked prefill (DESIGN.md §3) ---
+    pipeline_depth: int = 1          # 0 = seed-exact synchronous loop (A/B)
+    prefill_chunk: int = 0           # tokens per prefill-executor call (0 = off)
 
 
 @dataclass
@@ -127,15 +150,86 @@ class KVRMEngine:
 
         dbg = ecfg.debug_logits
 
-        def _step(params, tokens, pools, descr):
+        # Token selection happens ON DEVICE so the pipelined loop can feed the
+        # previous step's sampled tokens without a host readback: host prompt
+        # tokens where feed_sampled=0, previous on-device argmax where 1. The
+        # synchronous path passes feed_sampled=0 everywhere — same semantics,
+        # identical numerics for both paths.
+        def _step_core(params, host_tokens, feed_sampled, prev_nxt, pools, descr):
+            tokens = jnp.where(feed_sampled > 0, prev_nxt, host_tokens)
             logits, pools, fu = registry.decode_step(params, cfg_dec, tokens,
                                                      pools, descr)
             nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
             return nxt, pools, fu, (logits if dbg else jnp.zeros((), jnp.int32))
 
-        self._step_fn = jax.jit(_step, donate_argnums=(2,))
+        self.depth = max(0, int(ecfg.pipeline_depth))
+        B, NB, CAP, MT, CB = (ecfg.batch, self.NB, self.cap, self.MT,
+                              self.chunk_blocks)
+        self._flat_descr_size = descriptor_flat_size(B, NB, CAP, MT, CB)
+        D = self._flat_descr_size
+        if self.depth <= 0:
+            # seed-exact executor: per-array descriptor operands
+            self._step_fn = jax.jit(_step_core, donate_argnums=(4,))
+        else:
+            # pipelined executor: the whole control plane (descriptor + host
+            # tokens + feed mask) arrives as ONE flat int32 operand — one
+            # device_put per step instead of ~18 (the dominant host cost)
+            def _step_flat(params, flat, prev_nxt, pools):
+                descr = unflatten_descriptor(flat[:D], B, NB, CAP, MT, CB)
+                host_tokens = flat[D:D + B]
+                feed_sampled = flat[D + B:D + 2 * B]
+                return _step_core(params, host_tokens, feed_sampled, prev_nxt,
+                                  pools, descr)
+            self._step_fn = jax.jit(_step_flat, donate_argnums=(3,))
         self._compiles = 0
         self.debug_logits: List[np.ndarray] = []
+
+        # --- chunked prefill executor (second fixed-shape compilation) ---
+        self._chunked = (ecfg.prefill_chunk > 0
+                         and registry.supports_chunked_prefill(cfg)
+                         and not self.farview)
+        self.chunk = int(ecfg.prefill_chunk) if self._chunked else 0
+        if self._chunked:
+            CD = chunk_flat_size(B, self.chunk, self.NB)
+            C = self.chunk
+            def _chunk_step(params, pools, cflat):
+                cdescr = unflatten_chunk_descriptor(cflat, B, C, NB)
+                return registry.prefill_chunk(params, cfg_dec, pools, cdescr)
+            self._chunk_fn = jax.jit(_chunk_step, donate_argnums=(1,))
+            self._cflat = np.zeros(CD, np.int32)
+            self._cdescr = flat_chunk_views(self._cflat, B, self.chunk, self.NB)
+        else:
+            self._chunk_fn = None
+        # below this many remaining prompt tokens, ingestion rides the decode
+        # step instead (zero marginal steps while other slots decode) — a
+        # full-width batched chunk call isn't worth it for a tiny remainder.
+        # Capped at a few blocks so an oversized C never disables chunking.
+        self._chunk_min = (max(self.bt, min(self.chunk // 2, 4 * self.bt))
+                           if self._chunked else 0)
+        self._chunk_steps = 0
+        self._chunk_wait = 0.0
+
+        # --- pipelined dispatch state (DESIGN.md §3) ---
+        self._inflight: Deque[dict] = deque()
+        self._prev_nxt = jnp.zeros(ecfg.batch, jnp.int32)
+        self._zero_feed = jnp.zeros(ecfg.batch, jnp.int32)
+        # device-side feedback chain validity: True once a slot has emitted in
+        # a step dispatched BY THIS ENGINE. A restored checkpoint starts with
+        # a broken chain (no _prev_nxt) and re-seeds from host _last_token.
+        self._feed_ok = np.zeros(ecfg.batch, bool)
+
+        # --- persistent flat descriptor buffer + window-block cache -------
+        # (vectorized assembly: numpy views into one flat buffer, rebuilt
+        # incrementally, never reallocated)
+        self._flat = np.zeros(D + 2 * ecfg.batch, np.int32)
+        self._pdescr = flat_descriptor_views(self._flat[:D], B, NB, CAP, MT, CB)
+        self._tokens_buf = self._flat[D:D + B]
+        self._feed_buf = self._flat[D + B:D + 2 * B]
+        self._win_base_cache = np.full(ecfg.batch, -1, np.int64)
+        self._win_dirty = np.ones(ecfg.batch, bool)
+        self._win_groups = np.zeros(ecfg.batch, np.int64)
+        self._win_nblocks = np.zeros(ecfg.batch, np.int64)
+        self._merging = ecfg.mode != "paged"
 
         # metrics
         self.metrics: List[StepMetrics] = []
@@ -173,6 +267,9 @@ class KVRMEngine:
         for slot, req, sid in self.sched.admit(now):
             self._slot_len[slot] = 0
             self._last_token[slot] = int(req.prompt[0]) if len(req.prompt) else 0
+            self._win_dirty[slot] = True
+            self._win_base_cache[slot] = -1
+            self._feed_ok[slot] = False
             if self.pager is not None:
                 self.pager.open_session(sid)
                 self._slot_sid[slot] = sid
@@ -219,13 +316,123 @@ class KVRMEngine:
         return blocks + [0] * (self.NB - len(blocks)), wb
 
     # ------------------------------------------------------------------
+    def _farview_step(self, slot: int, t: int, descr) -> None:
+        """Far-view policy for one slot/step: summarize + TRIM a completed
+        chunk (sealed in this step's commit) and select the far table.
+        Shared verbatim by the sync and pipelined paths so the depth A/B
+        can never diverge here."""
+        sid = int(self._slot_sid[slot])
+        s = self.pager.sessions[sid]
+        n_done = int(self.fv.n_chunks[slot])
+        chunk_end = (n_done + 1) * self.e.sv_chunk
+        if t + 1 - self.W >= chunk_end:
+            first_local = (n_done * self.e.sv_chunk) // self.bt \
+                - s.trimmed_prefix_blocks
+            cb = s.blocks[first_local:first_local + self.chunk_blocks]
+            descr.far_chunk_blocks[slot, :len(cb)] = cb
+            descr.far_chunk_tokens[slot] = self.e.sv_chunk
+            descr.far_do_summarize[slot] = 1
+            descr.far_write_idx[slot] = self.fv.on_chunk_summarized(slot)
+            # TRIM the summarized blocks (bounded budget)
+            self.pager.trim(sid, prefix_blocks=first_local + self.chunk_blocks)
+            self._win_dirty[slot] = True
+        tbl, val = self.fv.select(slot)
+        descr.far_table[slot] = tbl
+        descr.far_valid[slot] = val
+
+    # ------------------------------------------------------------------
+    def _retire_slot(self, slot: int) -> None:
+        """EOS retirement: return the slot + its blocks, clear caches."""
+        self.sched.requests[self.sched.slots[slot].rid].finish_wall = \
+            self.cum_wall
+        self.sched.retire(slot)
+        if self.pager is not None:
+            self.pager.trim(int(self._slot_sid[slot]), close=True)
+            self._slot_sid[slot] = -1
+        self._slot_len[slot] = 0
+        self._feed_ok[slot] = False
+        d = self._pdescr
+        d.block_table[slot, :] = 0
+        d.train_len[slot, :] = 0
+        d.window_base[slot] = 0
+        self._win_base_cache[slot] = -1
+        self._win_dirty[slot] = True
+        self._win_groups[slot] = 0
+        self._win_nblocks[slot] = 0
+
+    # ------------------------------------------------------------------
+    def _prefill_chunks(self) -> None:
+        """Ingest up to ``prefill_chunk`` prompt tokens per prefilling slot
+        through the batched chunked prefill executor: ONE dispatch per engine
+        step covering every slot with chunk work (idle slot rows are masked
+        by n_valid=0, same fixed-shape discipline as the decode step).
+        Reservations are sealed by THIS step's single frame commit."""
+        C = self.chunk
+        cd = self._cdescr
+        self._chunk_wait = 0.0
+        any_chunk = False
+        for slot in self.sched.active_slots():
+            if self.sched.chunk_remaining(slot) < self._chunk_min:
+                continue
+            if not any_chunk:
+                cd.n_valid[:] = 0
+                any_chunk = True
+            toks = self.sched.consume_prompt_chunk(slot, C)
+            n = len(toks)
+            t0 = int(self._slot_len[slot])
+            if self.e.mode == "arena":
+                base = self._arena_base[slot]
+                idx = t0 + np.arange(n)
+                wblk = (base + idx // self.bt).astype(np.int32)
+                woff = (idx % self.bt).astype(np.int32)
+            else:
+                sid = int(self._slot_sid[slot])
+                self.pager.reserve(sid, n)
+                wblk, woff = self.pager.append_tokens(sid, n)
+            # context = the near window as seen by the chunk's FIRST query;
+            # later queries only need a suffix of it (masked in-kernel)
+            blocks, wb = self._window_blocks(slot)
+            cd.tokens[slot, :n] = toks
+            cd.tokens[slot, n:] = 0
+            cd.start_pos[slot] = t0
+            cd.n_valid[slot] = n
+            cd.block_table[slot] = blocks
+            cd.window_base[slot] = wb
+            cd.write_block[slot, :n] = wblk
+            cd.write_block[slot, n:] = 0
+            cd.write_offset[slot, :n] = woff
+            cd.write_offset[slot, n:] = 0
+            self._slot_len[slot] += n
+            self._win_dirty[slot] = True
+            self._chunk_steps += 1
+        if any_chunk:
+            td = time.perf_counter()
+            self.pools = self._chunk_fn(self.params, self.pools,
+                                        jnp.asarray(self._cflat))
+            # dispatch can block on the runtime's in-flight queue while the
+            # PREVIOUS step still executes — that wait is device occupancy,
+            # not host control work; the pipelined path subtracts it from
+            # m.host so submit_share keeps measuring the control plane
+            self._chunk_wait = time.perf_counter() - td
+
+    # ------------------------------------------------------------------
     def step(self, now: float = float("inf")) -> StepMetrics:
+        if self.depth <= 0:
+            return self._step_sync(now)
+        return self._step_pipelined(now)
+
+    # ------------------------------------------------------------------
+    def _step_sync(self, now: float) -> StepMetrics:
+        """Seed-exact synchronous step: per-slot descriptor assembly, one
+        blocking readback per step (pipeline_depth=0 A/B baseline)."""
         t0 = time.perf_counter()
         m = StepMetrics()
         self.sched.step_idx = self.steps_run
 
         # ---- Shift: retire EOS (handled at end of prev step), admit
         self._admit(now)
+        if self._chunked:
+            self._prefill_chunks()
         active = self.sched.active_slots()
         m.active = len(active)
 
@@ -234,7 +441,12 @@ class KVRMEngine:
                                  chunk_blocks=self.chunk_blocks)
         tokens = np.zeros(B, np.int32)
 
+        parts = []                       # slots participating in this step
         for slot in active:
+            if self._chunked and \
+                    self.sched.chunk_remaining(slot) >= self._chunk_min:
+                continue                 # still mid-chunk: no decode this step
+            parts.append(slot)
             req = self.sched.request_at(slot)
             tokens[slot] = self.sched.next_token(slot, int(self._last_token[slot]))
             t = int(self._slot_len[slot])
@@ -256,32 +468,15 @@ class KVRMEngine:
 
             # ---- far-view: chunk completion -> summarize + trim
             if self.fv is not None:
-                sid = int(self._slot_sid[slot])
-                s = self.pager.sessions[sid]
-                n_done = int(self.fv.n_chunks[slot])
-                chunk_end = (n_done + 1) * self.e.sv_chunk
-                if t + 1 - self.W >= chunk_end:
-                    first_local = (n_done * self.e.sv_chunk) // self.bt \
-                        - s.trimmed_prefix_blocks
-                    cb = s.blocks[first_local:first_local + self.chunk_blocks]
-                    descr.far_chunk_blocks[slot, :len(cb)] = cb
-                    descr.far_chunk_tokens[slot] = self.e.sv_chunk
-                    descr.far_do_summarize[slot] = 1
-                    descr.far_write_idx[slot] = self.fv.on_chunk_summarized(slot)
-                    # TRIM the summarized blocks (bounded budget)
-                    self.pager.trim(sid, prefix_blocks=first_local + self.chunk_blocks)
-                tbl, val = self.fv.select(slot)
-                descr.far_table[slot] = tbl
-                descr.far_valid[slot] = val
+                self._farview_step(slot, t, descr)
 
             # ---- window table + Reduce (train merging)
             blocks, wb = self._window_blocks(slot)
             descr.block_table[slot, :len(blocks)] = blocks
             descr.window_base[slot] = wb
-            merging = self.e.mode in ("paged_merge", "full") or self.e.mode == "arena"
             trains, groups = self.transport.reduce(
                 blocks, far_blocks=int(descr.far_valid[slot].sum() > 0),
-                merging=merging)
+                merging=self._merging)
             self.transport.fill_train_arrays(
                 trains, descr.train_start, descr.train_len, descr.train_dst, slot)
             m.dma_groups += groups
@@ -297,17 +492,21 @@ class KVRMEngine:
         m.frame_commit = time.perf_counter() - tf0
 
         jdescr = FrameDescriptor(*[jnp.asarray(a) for a in descr])
-        m.host = time.perf_counter() - t0
+        # chunk-dispatch queue wait is device occupancy, not control work
+        # (zero when prefill_chunk=0, keeping the seed path bit-exact)
+        m.host = max(0.0, time.perf_counter() - t0 - self._chunk_wait)
 
         # ---- device: one engine call, fixed shapes
-        nxt, self.pools, fu, lg = self._step_fn(self.params, jnp.asarray(tokens),
-                                                self.pools, jdescr)
+        nxt, self.pools, fu, lg = self._step_fn(
+            self.params, jnp.asarray(tokens), self._zero_feed,
+            self._prev_nxt, self.pools, jdescr)
+        self._prev_nxt = nxt
         nxt = np.asarray(jax.block_until_ready(nxt))
         if self.e.debug_logits:
             self.debug_logits.append(np.asarray(lg, np.float32))
 
         # ---- post: bookkeeping, EOS retirement (burst-safe)
-        for slot in active:
+        for slot in parts:
             self._slot_len[slot] += 1
             if self.sched.is_prefilling(slot):
                 continue
@@ -322,13 +521,7 @@ class KVRMEngine:
                 req.logit_trace.append(np.asarray(lg[slot], np.float32))
             if self.sched.record_output(slot, int(nxt[slot])):
                 m.emitted += 1
-                self.sched.requests[self.sched.slots[slot].rid].finish_wall = \
-                    self.cum_wall
-                self.sched.retire(slot)
-                if self.pager is not None:
-                    self.pager.trim(int(self._slot_sid[slot]), close=True)
-                    self._slot_sid[slot] = -1
-                self._slot_len[slot] = 0
+                self._retire_slot(slot)
             else:
                 m.emitted += 1
         if self.fv is not None:
@@ -343,10 +536,198 @@ class KVRMEngine:
         return m
 
     # ------------------------------------------------------------------
+    def _step_pipelined(self, now: float) -> StepMetrics:
+        """Overlapped step: assemble + dispatch step t, then read back step
+        t-depth while the device runs. Descriptor assembly is vectorized over
+        slots with an incrementally maintained window-block/train cache —
+        per-slot Python work happens only on admit/trim/alias/reserve or a
+        window slide, not every step."""
+        t0 = time.perf_counter()
+        m = StepMetrics()
+        self.sched.step_idx = self.steps_run
+
+        self._admit(now)
+        if self._chunked:
+            self._prefill_chunks()
+        active = self.sched.active_slots()
+        m.active = len(active)
+
+        d = self._pdescr
+        tokens = self._tokens_buf
+        feed = self._feed_buf
+        tokens[:] = 0
+        feed[:] = 0
+        d.slot_active[:] = 0
+        if self.fv is not None:
+            d.far_chunk_blocks[:] = 0
+            d.far_chunk_tokens[:] = 0
+            d.far_do_summarize[:] = 0
+            d.far_write_idx[:] = 0
+
+        parts: List[int] = []
+        emits: List[tuple] = []          # (slot, req) emitting this step
+        for slot in active:
+            if self._chunked and \
+                    self.sched.chunk_remaining(slot) >= self._chunk_min:
+                continue                 # still mid-chunk: no decode this step
+            req = self.sched.request_at(slot)
+            was_prefilling = req.prompt_pos < len(req.prompt)
+            tokens[slot] = self.sched.next_token(slot, int(self._last_token[slot]))
+            if not was_prefilling and req.emitted > 0 and self._feed_ok[slot]:
+                # decode continuation: token comes from the device-side argmax
+                # of the previous dispatched step (one-step lag, no readback).
+                # _feed_ok is False right after checkpoint restore: the chain
+                # re-seeds from the host _last_token mirror for one step.
+                feed[slot] = 1
+            d.slot_active[slot] = 1
+            parts.append(slot)
+            if req.prompt_pos >= len(req.prompt):
+                emits.append((slot, req))
+
+            t = int(self._slot_len[slot])
+            if self.e.mode == "arena":
+                base = self._arena_base[slot]
+                bi, off = divmod(t, self.bt)
+                d.write_block[slot] = base + bi
+                d.write_offset[slot] = off
+            else:
+                sid = int(self._slot_sid[slot])
+                if self.pager.reserve(sid, 2):    # this token + lookahead
+                    self._win_dirty[slot] = True  # new tail block in window
+                blk, off = self.pager.append_token(sid)
+                d.write_block[slot] = blk
+                d.write_offset[slot] = off
+
+            if self.fv is not None:
+                self._farview_step(slot, t, d)
+
+        # ---- vectorized window/train maintenance (dirty rows only)
+        d.seq_lens[:] = self._slot_len
+        if parts:
+            pa = np.asarray(parts)
+            lo = np.maximum(0, self._slot_len[pa] + 1 - self.W)
+            wb_vec = (lo // self.bt) * self.bt
+            # dirty when the window ADVANCES past the cached base; far-view
+            # trims clamp the real base above wb_vec (those set _win_dirty
+            # explicitly), so `>` avoids perpetual recomputes after a trim
+            dirty = self._win_dirty[pa] | (wb_vec > self._win_base_cache[pa])
+            dirty_slots = [int(s) for s in pa[dirty]]
+            if dirty_slots:
+                blocks_rows = []
+                for slot in dirty_slots:
+                    blocks, wb_s = self._window_blocks(slot)
+                    d.block_table[slot, :] = blocks
+                    d.window_base[slot] = wb_s
+                    blocks_rows.append([b for b in blocks if b > 0])
+                    self._win_base_cache[slot] = wb_s
+                    self._win_dirty[slot] = False
+                trains_rows = self.transport.reduce_batch(
+                    blocks_rows, merging=self._merging)
+                self.transport.fill_train_arrays_batch(
+                    trains_rows, d.train_start, d.train_len, d.train_dst,
+                    dirty_slots)
+                for slot, nz, trains in zip(dirty_slots, blocks_rows,
+                                            trains_rows):
+                    self._win_groups[slot] = len(trains)
+                    self._win_nblocks[slot] = len(nz)
+            far_flags = ((d.far_valid[pa].sum(axis=1) > 0).astype(np.int64)
+                         if self.fv is not None else np.zeros(len(pa), np.int64))
+            self.transport.account_batch(self._win_nblocks[pa],
+                                         self._win_groups[pa], far_flags)
+            m.dma_groups = int(self._win_groups[pa].sum() + far_flags.sum())
+
+        # ---- Frame: single atomic commit
+        tf0 = time.perf_counter()
+        if self.pager is not None:
+            frame = self.pager.frame()
+            d.epoch[...] = frame["epoch"]
+            self.frames_committed += 1
+        else:
+            d.epoch[...] = self.steps_run + 1
+        m.frame_commit = time.perf_counter() - tf0
+
+        jflat = jnp.asarray(self._flat)      # ONE host->device transfer
+        # chunk-dispatch queue wait is device occupancy, not control work
+        m.host = max(0.0, time.perf_counter() - t0 - self._chunk_wait)
+
+        # ---- device: dispatch step t (async), keep host moving
+        nxt, self.pools, fu, lg = self._step_fn(
+            self.params, jflat, self._prev_nxt, self.pools)
+        self._prev_nxt = nxt
+
+        # ---- structural bookkeeping at DISPATCH time: EOS here is a fixed
+        # token budget, so retirement is host-predictable; pager/transport
+        # timelines stay bit-identical to the synchronous path. Token VALUES
+        # land at readback, one step later.
+        m.emitted = len(emits)
+        for slot in parts:
+            self._slot_len[slot] += 1
+        for slot, req in emits:
+            self._feed_ok[slot] = True
+            if self.sched.note_emit(slot):
+                self._retire_slot(slot)
+
+        self._inflight.append({
+            "nxt": nxt, "lg": lg, "fu": fu, "emits": emits,
+            "far_table": d.far_table.copy() if self.fv is not None else None,
+        })
+        while len(self._inflight) > self.depth:
+            self._readback(self._inflight.popleft())
+
+        self.steps_run += 1
+        m.wall = time.perf_counter() - t0
+        self.cum_wall += m.wall
+        self.peak_reserved_kv = max(self.peak_reserved_kv, self.reserved_kv_bytes())
+        self.peak_active_kv = max(self.peak_active_kv, self.active_kv_bytes())
+        self.metrics.append(m)
+        return m
+
+    # ------------------------------------------------------------------
+    def _readback(self, rec: dict) -> None:
+        """Value bookkeeping for one in-flight step: sampled tokens, logit
+        traces, far-view utility feedback (one step of lag under pipelining)."""
+        nxt = np.asarray(jax.block_until_ready(rec["nxt"]))
+        lg = None
+        if self.e.debug_logits:
+            lg = np.asarray(rec["lg"], np.float32)
+            self.debug_logits.append(lg)
+        for slot, req in rec["emits"]:
+            tok = int(nxt[slot])
+            req.generated.append(tok)
+            # wall-clock latencies stamp when the VALUE is known (readback),
+            # not at dispatch — comparable with the synchronous path and
+            # never flattered by the one-step pipeline lag
+            if len(req.generated) == 1:
+                req.ttft_wall = self.cum_wall
+            if req.emitted >= req.gen_len and len(req.generated) >= req.gen_len:
+                req.finish_wall = self.cum_wall
+            if lg is not None:
+                if not hasattr(req, "logit_trace"):
+                    req.logit_trace = []
+                req.logit_trace.append(lg[slot])
+            if self.sched.slots[slot].rid == req.rid:
+                self._last_token[slot] = tok
+        if self.fv is not None:
+            self.fv.observe_utility(np.asarray(rec["fu"]), rec["far_table"])
+
+    def flush(self) -> None:
+        """Drain the dispatch pipeline (blocks on outstanding device steps).
+        Drain time counts toward the wall so throughput/latency sums include
+        the tail steps' device execution."""
+        while self._inflight:
+            t0 = time.perf_counter()
+            self._readback(self._inflight.popleft())
+            dt = time.perf_counter() - t0
+            self.cum_wall += dt
+            if self.metrics:
+                self.metrics[-1].wall += dt
+
+    # ------------------------------------------------------------------
     def run(self, max_steps: int = 10_000, now_fn=None) -> None:
         while (self.sched.waiting or self.sched.active_slots()) \
                 and self.steps_run < max_steps:
             self.step(now=now_fn() if now_fn else float("inf"))
+        self.flush()
 
     # ------------------------------------------------------------------
     # audits & metrics
@@ -357,10 +738,16 @@ class KVRMEngine:
         hosts = np.array([m.host for m in steps]) if steps else np.zeros(1)
         commits = np.array([m.frame_commit for m in steps]) if steps else np.zeros(1)
         ncomp = getattr(self._step_fn, "_cache_size", lambda: -1)()
+        nc_prefill = (getattr(self._chunk_fn, "_cache_size", lambda: -1)()
+                      if self._chunk_fn is not None else 0)
         return {
             "mode": self.e.mode,
             "steps": len(steps),
             "compilations": ncomp,
+            "prefill_compilations": nc_prefill,
+            "pipeline_depth": self.depth,
+            "prefill_chunk": self.chunk,
+            "prefill_chunks_run": self._chunk_steps,
             "single_commit_per_step": (self.pager is None
                                        or self.frames_committed == self.steps_run),
             "frames_committed": self.frames_committed,
@@ -369,6 +756,7 @@ class KVRMEngine:
             "dma_groups_per_step": self.transport.stats.groups_per_step,
             "avg_dma_bytes": self.transport.stats.avg_group_bytes,
             "unmerged_groups_per_step": self.transport.stats.unmerged_groups_per_step,
+            "train_overflows": self.transport.stats.train_overflows,
             "reserved_kv_bytes": self.reserved_kv_bytes(),
             "active_kv_bytes": self.active_kv_bytes(),
             "peak_reserved_kv": self.peak_reserved_kv,

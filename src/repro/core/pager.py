@@ -238,6 +238,21 @@ class BlockPager:
         s.length += 1
         return s.blocks[bi], off
 
+    def append_tokens(self, sid: int, n: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Account n token writes at once (chunked prefill); returns
+        (blocks (n,), offsets (n,)) int32 arrays. Caller must have reserved
+        capacity for all n tokens."""
+        s = self.sessions[sid]
+        bt = self.block_tokens
+        local = s.length - s.trimmed_prefix_blocks * bt
+        idx = local + np.arange(n)
+        bi, off = np.divmod(idx, bt)
+        assert n == 0 or bi[-1] < len(s.blocks), \
+            f"no capacity: sid={sid} len={s.length} n={n}"
+        blocks = np.asarray(s.blocks, np.int32)[bi]
+        s.length += n
+        return blocks.astype(np.int32), off.astype(np.int32)
+
     # ------------------------------------------------------------------
     # frame commit (shadow -> active, epoch, idempotent)
     # ------------------------------------------------------------------

@@ -27,6 +27,10 @@ class Request:
     start_step: int = -1
     finish_step: int = -1
     first_token_step: int = -1
+    # structural emission count: known at DISPATCH time (EOS here is a fixed
+    # token budget, so retirement is host-predictable); token VALUES land in
+    # ``generated`` at readback, one step later under pipelining (DESIGN.md §3)
+    emitted: int = 0
 
 
 @dataclass
@@ -101,10 +105,38 @@ class Scheduler:
         req = self.request_at(slot)
         return req is not None and req.prompt_pos < len(req.prompt)
 
+    def chunk_remaining(self, slot: int) -> int:
+        """Prompt tokens available for chunked ingestion — everything except
+        the LAST prompt token, which always goes through the decode step."""
+        req = self.request_at(slot)
+        if req is None:
+            return 0
+        return max(0, len(req.prompt) - 1 - req.prompt_pos)
+
+    def consume_prompt_chunk(self, slot: int, max_tokens: int) -> np.ndarray:
+        """Take up to max_tokens prompt tokens for the prefill executor."""
+        req = self.request_at(slot)
+        n = min(max_tokens, self.chunk_remaining(slot))
+        toks = np.asarray(req.prompt[req.prompt_pos:req.prompt_pos + n],
+                          np.int32)
+        req.prompt_pos += n
+        return toks
+
+    def note_emit(self, slot: int) -> bool:
+        """Account one decode emission structurally (at dispatch time); True
+        if the request hits EOS with this token. The token value itself is
+        appended to ``generated`` at readback."""
+        req = self.request_at(slot)
+        if req.first_token_step < 0:
+            req.first_token_step = self.step_idx
+        req.emitted += 1
+        return req.emitted >= req.gen_len
+
     def record_output(self, slot: int, token: int) -> bool:
         """Record a generated token; True if the request hit EOS."""
         req = self.request_at(slot)
         if req.first_token_step < 0:
             req.first_token_step = self.step_idx
         req.generated.append(token)
+        req.emitted = len(req.generated)
         return len(req.generated) >= req.gen_len

@@ -29,6 +29,7 @@ class TransportStats:
     max_groups: int = 0
     unmerged_groups: int = 0      # what the group count would be w/o merging
     held_descriptors: int = 0     # staged but deferred (age < delta)
+    train_overflows: int = 0      # slots whose trains exceeded MT (stress)
 
     @property
     def groups_per_step(self) -> float:
@@ -104,8 +105,26 @@ class MergeStagedTransport:
             else:
                 still.append(d)
         self._staged = still
+        self.stats.held_descriptors -= len(ready)
         blocks = blocks + [d.block for d in ready]
 
+        trains = self.merge_slot(blocks, merging=merging)
+
+        groups = len(trains) + (1 if far_blocks else 0)
+        self.stats.steps += 1
+        self.stats.total_groups += groups
+        self.stats.max_groups = max(self.stats.max_groups, groups)
+        self.stats.total_bytes += (len(blocks) * self.block_bytes
+                                   + far_blocks * self.block_bytes)
+        self.stats.unmerged_groups += len(blocks) + far_blocks
+        return trains, groups
+
+    def merge_slot(self, blocks: Sequence[int], *, merging: bool = True
+                   ) -> List[Tuple[int, int, int]]:
+        """Pure train merge for one slot's window blocks — no stats, no staged
+        descriptor aging. The engine's window-block cache calls this only when
+        a slot's window actually changed (admit/trim/alias/reserve/slide) and
+        accounts the cached result each step via ``account_batch``."""
         if merging:
             trains = merge_runs(blocks)
             # split over-tau trains so each group stays a burst-sized DMA;
@@ -118,33 +137,70 @@ class MergeStagedTransport:
                     out.append((s, max_blocks, dst))
                     s, ln, dst = s + max_blocks, ln - max_blocks, dst + max_blocks
                 out.append((s, ln, dst))
-            trains = out
-        else:
-            trains = [(b, 1, i) for i, b in enumerate(blocks)]
+            return out
+        return [(b, 1, i) for i, b in enumerate(blocks)]
 
-        groups = len(trains) + (1 if far_blocks else 0)
-        self.stats.steps += 1
-        self.stats.total_groups += groups
-        self.stats.max_groups = max(self.stats.max_groups, groups)
-        self.stats.total_bytes += (len(blocks) * self.block_bytes
-                                   + far_blocks * self.block_bytes)
-        self.stats.unmerged_groups += len(blocks) + far_blocks
-        return trains, groups
+    # -- batched Reduce (vectorized descriptor assembly) -----------------
+    def reduce_batch(self, blocks_per_row: List[Sequence[int]], *,
+                     merging: bool = True) -> List[List[Tuple[int, int, int]]]:
+        """Merge many slots' windows at once (no stats side effects).
+
+        Staged descriptors are a per-slot aging mechanism and are not folded
+        here; callers that stage() must use the per-slot reduce() path."""
+        return [self.merge_slot(b, merging=merging) for b in blocks_per_row]
+
+    def account_batch(self, n_blocks, n_groups, far_flags) -> None:
+        """Accumulate one engine step's per-slot DMA stats (numpy vectors over
+        the ACTIVE slots). Matches reduce()'s accounting exactly: one stats
+        'step' per active slot per engine step."""
+        n_blocks = np.asarray(n_blocks, np.int64)
+        n_groups = np.asarray(n_groups, np.int64)
+        far_flags = np.asarray(far_flags, np.int64)
+        if n_blocks.size == 0:
+            return
+        groups = n_groups + far_flags
+        self.stats.steps += int(n_blocks.size)
+        self.stats.total_groups += int(groups.sum())
+        self.stats.max_groups = max(self.stats.max_groups, int(groups.max()))
+        self.stats.total_bytes += int((n_blocks + far_flags).sum()) * self.block_bytes
+        self.stats.unmerged_groups += int((n_blocks + far_flags).sum())
 
     def fill_train_arrays(self, trains: List[Tuple[int, int, int]],
                           train_start: np.ndarray, train_len: np.ndarray,
                           train_dst: np.ndarray, row: int) -> None:
-        """Write one slot's trains into the descriptor arrays (fixed MT)."""
+        """Write one slot's trains into the descriptor arrays (fixed MT).
+
+        Overflow (more trains than MT — only possible under stress, e.g. many
+        staged folds or adversarial fragmentation): the first MT-1 trains are
+        emitted normally and the last slot becomes an explicit DEGENERATE
+        sentinel ``train_start = -1`` whose ``train_len`` is the total block
+        count of the folded remainder. The remainder trains are generally not
+        physically contiguous, so no single (start, len) copy describes them;
+        the sentinel tells the device to fall back to per-block gather via
+        ``block_table`` for those window positions (``train_dst`` marks the
+        first such position). Coverage accounting (sum of train_len) is
+        preserved and the event is counted in ``TransportStats``."""
         mt = train_start.shape[1]
         train_len[row, :] = 0
-        for j, (s, ln, dst) in enumerate(trains[:mt]):
+        if len(trains) <= mt:
+            for j, (s, ln, dst) in enumerate(trains):
+                train_start[row, j] = s
+                train_len[row, j] = ln
+                train_dst[row, j] = dst
+            return
+        for j, (s, ln, dst) in enumerate(trains[:mt - 1]):
             train_start[row, j] = s
             train_len[row, j] = ln
             train_dst[row, j] = dst
-        if len(trains) > mt:
-            # overflow: collapse the remainder into the last slot (counts as
-            # one oversized group; the audit records this as a stress event)
-            s, ln, dst = trains[mt - 1]
-            rest = trains[mt:]
-            total = ln + sum(t[1] for t in rest)
-            train_len[row, mt - 1] = total
+        rest = trains[mt - 1:]
+        train_start[row, mt - 1] = -1            # degenerate-schedule sentinel
+        train_len[row, mt - 1] = sum(t[1] for t in rest)
+        train_dst[row, mt - 1] = rest[0][2]
+        self.stats.train_overflows += 1
+
+    def fill_train_arrays_batch(self, trains_per_row, train_start, train_len,
+                                train_dst, rows) -> None:
+        """Write several slots' trains at once (rows aligned with trains)."""
+        for row, trains in zip(rows, trains_per_row):
+            self.fill_train_arrays(trains, train_start, train_len, train_dst,
+                                   row)

@@ -43,6 +43,11 @@ def pool_write_stacked(pool, vals, write_block, write_offset, active):
                                       active)
 
 
+def pool_write_chunk(pool, vals, write_block, write_offset, n_valid):
+    return ref.pool_write_chunk_ref(pool, vals, write_block, write_offset,
+                                    n_valid)
+
+
 def paged_decode_attention(q, pool_k, pool_v, block_table, window_base,
                            seq_lens, slot_active, *, near_window,
                            far_k=None, far_v=None, far_table=None,
@@ -61,6 +66,22 @@ def paged_decode_attention(q, pool_k, pool_v, block_table, window_base,
         q, pool_k, pool_v, block_table, window_base, seq_lens, slot_active,
         near_window=near_window, far_k=far_k, far_v=far_v,
         far_table=far_table, far_valid=far_valid, cur_k=cur_k, cur_v=cur_v)
+
+
+def chunked_prefill_attention(q, pool_k, pool_v, cur_k, cur_v, block_table,
+                              window_base, start_pos, n_valid, *,
+                              near_window, impl: str | None = None):
+    """One slot's prompt-chunk attention: paged pre-chunk context + in-chunk
+    causal (the chunked prefill executor's core; DESIGN.md §3)."""
+    impl = impl or _DEFAULT_IMPL
+    if impl == "pallas":
+        from repro.kernels import prefill_attention as pfa
+        return pfa.chunked_prefill_attention_pallas(
+            q, pool_k, pool_v, cur_k, cur_v, block_table, window_base,
+            start_pos, n_valid, near_window=near_window)
+    return ref.chunked_prefill_attention_ref(
+        q, pool_k, pool_v, cur_k, cur_v, block_table, window_base,
+        start_pos, n_valid, near_window=near_window)
 
 
 def mla_decode_attention(q_nope, q_rope, pool_lat, w_k_b, w_v_b, block_table,

@@ -1,9 +1,16 @@
-"""Pallas TPU kernel: blocked causal (flash-style) prefill attention.
+"""Pallas TPU kernels: blocked causal (flash-style) prefill attention, plus
+the chunked paged-prefill kernel used by the engine's prompt-ingestion
+executor (DESIGN.md §3).
 
-Grid (B, H, nQ, nK) with online softmax in VMEM scratch; causal blocks above
-the diagonal are skipped via masking (TPU grids are static — the mask makes
-the skipped block a no-op; Mosaic elides the copy when the index map is
-revisited). q/k blocks are MXU-aligned (multiples of 128 recommended).
+Dense kernel: grid (B, H, nQ, nK) with online softmax in VMEM scratch; causal
+blocks above the diagonal are skipped via masking (TPU grids are static — the
+mask makes the skipped block a no-op; Mosaic elides the copy when the index
+map is revisited). q/k blocks are MXU-aligned (multiples of 128 recommended).
+
+Chunked kernel: grid (KV, NB + 1) for ONE slot's C-token chunk. Steps
+0..NB-1 walk the committed near-window block table (scalar prefetch, one
+~tau-byte HBM->VMEM block copy per step — the same merged-transport contract
+as the decode kernel); the final step folds the chunk's own K/V causally.
 """
 from __future__ import annotations
 
@@ -59,6 +66,123 @@ def _prefill_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
     def _fin():
         o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-20)
                        ).astype(o_ref.dtype)
+
+
+def _chunk_kernel(block_tbl_ref, meta_ref,        # scalar prefetch
+                  q_ref, k_ref, v_ref, ck_ref, cv_ref,
+                  o_ref,
+                  acc_ref, m_ref, l_ref,
+                  *, bt: int, chunk: int, n_rep: int, hd: int,
+                  near_window: int, scale: float):
+    i = pl.program_id(1)
+    nb = pl.num_programs(1) - 1                   # pool steps; last = chunk
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    wb = meta_ref[0]
+    start = meta_ref[1]
+    n_valid = meta_ref[2]
+    q = q_ref[:, 0].astype(jnp.float32)           # (C, n_rep, hd)
+    qpos = start + jax.lax.broadcasted_iota(jnp.int32, (chunk, 1, 1), 0)
+
+    def _online_update(s, valid):
+        s = jnp.where(valid, s, NEG_INF)
+        m_prev = m_ref[...]                       # (C, n_rep)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        p = jnp.where(valid, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=-1)
+        m_ref[...] = m_new
+        return p, corr
+
+    @pl.when(i < nb)
+    def _pool_block():
+        kb = k_ref[0, :, 0].astype(jnp.float32)   # (BT, hd)
+        vb = v_ref[0, :, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, kb, (((2,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        pos = wb + i * bt + jax.lax.broadcasted_iota(
+            jnp.int32, (1, 1, bt), 2)             # (1,1,BT)
+        valid = (pos < start) & (pos > qpos - near_window) & (pos >= 0)
+        p, corr = _online_update(s, valid)
+        pv = jax.lax.dot_general(p, vb, (((2,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * corr[..., None] + pv
+
+    @pl.when(i == nb)
+    def _chunk_causal():
+        kc = ck_ref[:, 0].astype(jnp.float32)     # (C, hd)
+        vc = cv_ref[:, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, kc, (((2,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        j = jax.lax.broadcasted_iota(jnp.int32, (1, 1, chunk), 2)
+        valid = (start + j <= qpos) & (start + j > qpos - near_window) \
+            & (j < n_valid)
+        p, corr = _online_update(s, valid)
+        pv = jax.lax.dot_general(p, vc, (((2,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * corr[..., None] + pv
+        # finalize (last grid step along axis 1)
+        denom = jnp.maximum(l_ref[...], 1e-20)[..., None]
+        row_ok = jax.lax.broadcasted_iota(jnp.int32, (chunk, 1, 1), 0) < n_valid
+        o_ref[:, 0] = jnp.where(row_ok, acc_ref[...] / denom, 0.0
+                                ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("near_window", "interpret"))
+def chunked_prefill_attention_pallas(q, pool_k, pool_v, cur_k, cur_v,
+                                     block_table, window_base, start_pos,
+                                     n_valid, *, near_window, interpret=True):
+    """One slot's C-token prompt chunk over the paged near window.
+
+    q: (C,H,hd); pool_k/v: (P,BT,KV,hd); cur_k/v: (C,KV,hd);
+    block_table: (NB,). Returns (C,H,hd) with rows >= n_valid zeroed.
+    Validated against kernels/ref.py chunked_prefill_attention_ref."""
+    C, H, hd = q.shape
+    P, BT, KV, _ = pool_k.shape
+    NB = block_table.shape[0]
+    n_rep = H // KV
+    scale = 1.0 / math.sqrt(hd)
+
+    meta = jnp.stack([window_base, start_pos, n_valid]).astype(jnp.int32)
+    qg = q.reshape(C, KV, n_rep, hd)
+
+    grid = (KV, NB + 1)
+    kernel = functools.partial(_chunk_kernel, bt=BT, chunk=C, n_rep=n_rep,
+                               hd=hd, near_window=near_window, scale=scale)
+    gs = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((C, 1, n_rep, hd), lambda g, i, tbl, meta: (0, g, 0, 0)),
+            pl.BlockSpec((1, BT, 1, hd),
+                         lambda g, i, tbl, meta:
+                         (tbl[jnp.minimum(i, tbl.shape[0] - 1)], 0, g, 0)),
+            pl.BlockSpec((1, BT, 1, hd),
+                         lambda g, i, tbl, meta:
+                         (tbl[jnp.minimum(i, tbl.shape[0] - 1)], 0, g, 0)),
+            pl.BlockSpec((C, 1, hd), lambda g, i, tbl, meta: (0, g, 0)),
+            pl.BlockSpec((C, 1, hd), lambda g, i, tbl, meta: (0, g, 0)),
+        ],
+        out_specs=pl.BlockSpec((C, 1, n_rep, hd),
+                               lambda g, i, tbl, meta: (0, g, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((C, n_rep, hd), jnp.float32),
+            pltpu.VMEM((C, n_rep), jnp.float32),
+            pltpu.VMEM((C, n_rep), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel, grid_spec=gs,
+        out_shape=jax.ShapeDtypeStruct((C, KV, n_rep, hd), q.dtype),
+        interpret=interpret,
+    )(block_table.astype(jnp.int32), meta, qg, pool_k, pool_v, cur_k, cur_v)
+    return out.reshape(C, H, hd)
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "q_blk",

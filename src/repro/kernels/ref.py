@@ -51,6 +51,26 @@ def pool_write_stacked_ref(pool, vals, write_block, write_offset, active):
         jnp.where(mask, vals, cur), mode="drop")
 
 
+def pool_write_chunk_ref(pool, vals, write_block, write_offset, n_valid):
+    """Scatter a batched prefill chunk's tokens (ALL layers) into the pool.
+
+    pool: (L, P, BT, ...payload); vals: (L, B, C, ...payload);
+    write_block/write_offset: (B, C); n_valid: (B,) — tokens beyond a slot's
+    n_valid are chunk padding and are redirected to scratch block 0.
+    """
+    L = pool.shape[0]
+    B, C = write_block.shape
+    valid = (jnp.arange(C)[None, :] < n_valid[:, None]).reshape(B * C)
+    blk = jnp.where(valid, write_block.reshape(B * C), 0)
+    off = jnp.where(valid, write_offset.reshape(B * C), 0)
+    vals = vals.reshape(vals.shape[0], B * C, *vals.shape[3:])
+    l_idx = jnp.arange(L)[:, None]
+    mask = valid[(None, ...) + (None,) * (vals.ndim - 2)]
+    cur = pool[l_idx, blk[None, :], off[None, :]]
+    return pool.at[l_idx, blk[None, :], off[None, :]].set(
+        jnp.where(mask, vals, cur), mode="drop")
+
+
 # ---------------------------------------------------------------------------
 # paged decode attention (near window + optional far view) — GQA
 # ---------------------------------------------------------------------------
@@ -147,6 +167,78 @@ def paged_decode_attention_ref(
     out = ctx.reshape(B, H, hd).astype(q.dtype)
     out = jnp.where((slot_active > 0)[:, None, None], out, 0)
     return out, far_util
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill attention (paged context + in-chunk causal) — GQA
+# ---------------------------------------------------------------------------
+
+def chunked_prefill_attention_ref(
+    q,                      # (C, H, hd) chunk queries (roped at abs positions)
+    pool_k, pool_v,         # (P, BT, KV, hd) paged pools (context BEFORE chunk)
+    cur_k, cur_v,           # (C, KV, hd) this chunk's K/V (roped)
+    block_table,            # (NB,) window blocks covering [window_base, start_pos)
+    window_base,            # ()    absolute position of block_table[0] token 0
+    start_pos,              # ()    absolute position of q[0]
+    n_valid,                # ()    valid tokens in the chunk
+    *,
+    near_window: int,
+    sm_scale: Optional[float] = None,
+):
+    """One slot's prompt chunk: query i (abs pos p_i = start_pos + i) attends
+    to pool context [max(0, p_i+1-W), start_pos) plus the chunk itself
+    causally (j <= i, within W). Returns (C, H, hd); rows >= n_valid are
+    zeroed (their KV writes are redirected to scratch by the caller).
+
+    Semantically identical to feeding the chunk token-at-a-time through
+    paged_decode_attention_ref (DESIGN.md §3) — the softmax for a given
+    query sees exactly the same key set either way.
+    """
+    C, H, hd = q.shape
+    P, BT, KV, _ = pool_k.shape
+    NB = block_table.shape[0]
+    Wn = NB * BT
+    n_rep = H // KV
+    scale = sm_scale if sm_scale is not None else 1.0 / math.sqrt(hd)
+
+    win_k = pool_k[block_table].reshape(Wn, KV, hd)
+    win_v = pool_v[block_table].reshape(Wn, KV, hd)
+
+    qpos = start_pos + jnp.arange(C)                              # (C,)
+    pos_w = window_base + jnp.arange(Wn)                          # (Wn,)
+    valid_w = ((pos_w[None, :] < start_pos)                       # strictly pre-chunk
+               & (pos_w[None, :] > qpos[:, None] - near_window)
+               & (pos_w[None, :] >= 0))                           # (C, Wn)
+
+    qg = q.reshape(C, KV, n_rep, hd)
+    s_w = jnp.einsum("ckrd,wkd->ckrw", qg, win_k,
+                     preferred_element_type=jnp.float32) * scale  # (C,KV,rep,Wn)
+    s_w = jnp.where(valid_w[:, None, None, :], s_w, -jnp.inf)
+
+    # in-chunk causal scores (self included, window-bounded)
+    ij = jnp.arange(C)
+    valid_c = ((ij[None, :] <= ij[:, None])
+               & (qpos[None, :] > qpos[:, None] - near_window)
+               & (ij[None, :] < n_valid))                         # (C, C)
+    s_c = jnp.einsum("ckrd,jkd->ckrj", qg, cur_k.astype(qg.dtype),
+                     preferred_element_type=jnp.float32) * scale
+    s_c = jnp.where(valid_c[:, None, None, :], s_c, -jnp.inf)
+
+    s_all = jnp.concatenate([s_w, s_c], axis=-1)
+    m = s_all.max(axis=-1, keepdims=True)
+    m = jnp.where(jnp.isinf(m), 0.0, m)
+    p = jnp.exp(s_all - m)
+    p = jnp.where(jnp.isinf(s_all), 0.0, p)
+    p = p / jnp.maximum(p.sum(axis=-1, keepdims=True), 1e-20)
+
+    p_w, p_c = p[..., :Wn], p[..., Wn:]
+    ctx = (jnp.einsum("ckrw,wkd->ckrd", p_w.astype(win_v.dtype), win_v,
+                      preferred_element_type=jnp.float32)
+           + jnp.einsum("ckrj,jkd->ckrd", p_c.astype(cur_v.dtype), cur_v,
+                        preferred_element_type=jnp.float32))
+
+    out = ctx.reshape(C, H, hd).astype(q.dtype)
+    return jnp.where((jnp.arange(C) < n_valid)[:, None, None], out, 0)
 
 
 # ---------------------------------------------------------------------------

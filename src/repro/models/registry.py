@@ -39,6 +39,20 @@ def decode_step(params, cfg: ModelConfig, tokens, pools, descr, **kw):
     return get_module(cfg).decode_step(params, cfg, tokens, pools, descr, **kw)
 
 
+def supports_chunked_prefill(cfg: ModelConfig) -> bool:
+    """Families with a fixed-shape chunked prompt-ingestion executor
+    (DESIGN.md §3). Others fall back to token-at-a-time prefill through the
+    decode step (sequential-state families need per-token recurrences; encdec
+    and MLA chunk executors are future work)."""
+    return cfg.family in ("dense", "vlm") and hasattr(get_module(cfg),
+                                                      "prefill_chunk")
+
+
+def prefill_chunk(params, cfg: ModelConfig, pools, descr, **kw):
+    """Ingest one prompt chunk for one slot (see transformer.prefill_chunk)."""
+    return get_module(cfg).prefill_chunk(params, cfg, pools, descr, **kw)
+
+
 # ---------------------------------------------------------------------------
 # decode pool geometry
 # ---------------------------------------------------------------------------

@@ -80,6 +80,51 @@ def forward(params, cfg: ModelConfig, tokens, *, extra_embeds=None,
 
 
 # ---------------------------------------------------------------------------
+# chunked prefill step (prompt ingestion; DESIGN.md §3)
+# ---------------------------------------------------------------------------
+
+def prefill_chunk(params, cfg: ModelConfig, pools, descr):
+    """Ingest one C-token prompt chunk PER SLOT under the KV-RM contract.
+
+    descr: PrefillChunkDescriptor (fixed B / C / NB — compiled once, like
+    the decode step; ONE dispatch per engine step with idle slots masked by
+    n_valid=0). Writes each chunk's K/V into the paged pool and returns the
+    updated pools. No logits: the final prompt token always goes through the
+    decode step, so sampled-token semantics are unchanged.
+    """
+    sv = cfg.serving
+    B, C = descr.tokens.shape
+    x = params["embed"][descr.tokens]                 # (B, C, d)
+    positions = descr.start_pos[:, None] + jnp.arange(C)[None]  # (B, C)
+
+    attend = jax.vmap(
+        lambda q, pk, pv, k, v, tbl, wb, sp, nv: ops.chunked_prefill_attention(
+            q, pk, pv, k, v, tbl, wb, sp, nv, near_window=sv.near_window),
+        in_axes=(0, None, None, 0, 0, 0, 0, 0, 0))
+
+    # Same read-only pool discipline as decode_step: each layer's chunk K/V
+    # attends explicitly and is emitted as a delta, scattered once post-scan.
+    def block(x, layer_xs):
+        layer, pk, pv = layer_xs
+        h = cm.rmsnorm(layer["ln1"], x, cfg.norm_eps)
+        q, k, v = cm.gqa_qkv(layer["attn"], cfg, h, positions)
+        o = attend(q, pk, pv, k, v, descr.block_table, descr.window_base,
+                   descr.start_pos, descr.n_valid)   # (B, C, H, hd)
+        x = x + cm.dense(layer["attn"]["wo"], o.reshape(B, C, -1))
+        h = cm.rmsnorm(layer["ln2"], x, cfg.norm_eps)
+        x = x + cm.mlp_apply(layer["mlp"], h, cfg.mlp_act)
+        return x, (k, v)
+
+    _, ys = jax.lax.scan(block, x, (params["layers"], pools["k"], pools["v"]))
+    new_pools = dict(pools)
+    new_pools["k"] = ops.pool_write_chunk(pools["k"], ys[0], descr.write_block,
+                                          descr.write_offset, descr.n_valid)
+    new_pools["v"] = ops.pool_write_chunk(pools["v"], ys[1], descr.write_block,
+                                          descr.write_offset, descr.n_valid)
+    return new_pools
+
+
+# ---------------------------------------------------------------------------
 # paged decode step (KV-RM path)
 # ---------------------------------------------------------------------------
 

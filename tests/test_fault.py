@@ -80,6 +80,10 @@ def test_engine_failure_drill():
     eng = mk()
     for _ in range(8):
         eng.step()
+    # quiesce the dispatch pipeline first: a consistent checkpoint requires
+    # reading back in-flight steps (DESIGN.md §3); the restored engine then
+    # re-seeds its device-side token feedback from _last_token
+    eng.flush()
     snap_pools = jax.tree.map(np.asarray, eng.pools)
     import copy
     snap_host = copy.deepcopy((eng.pager, eng.sched, eng._slot_len,

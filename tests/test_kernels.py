@@ -8,12 +8,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.kernels import ref
 from repro.kernels.farview_summarize import farview_summarize_pallas
 from repro.kernels.paged_attention import paged_decode_attention_pallas
-from repro.kernels.prefill_attention import prefill_attention_pallas
+from repro.kernels.prefill_attention import (chunked_prefill_attention_pallas,
+                                             prefill_attention_pallas)
 
 
 def _mk_paged(key, B, H, KV, hd, P, BT, NB, dtype, max_t=None):
@@ -111,6 +113,67 @@ def test_prefill_flash_matches_dense(B, S, H, KV, hd, qb, kb, dtype):
     np.testing.assert_allclose(np.asarray(out_p, np.float32),
                                np.asarray(out_r, np.float32),
                                rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("C,H,KV,hd,BT,NB,start,n_valid", [
+    (8, 4, 2, 32, 4, 5, 10, 6),      # partial chunk, GQA
+    (16, 8, 8, 64, 8, 3, 16, 16),    # full chunk, MHA, block-aligned start
+    (4, 4, 2, 32, 4, 0, 0, 3),       # first chunk: no pool context
+])
+def test_chunked_prefill_matches_ref(C, H, KV, hd, BT, NB, start, n_valid, dtype):
+    NBt = max(NB, 1)
+    P = NBt * 2 + 4
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    q = jax.random.normal(ks[0], (C, H, hd), dtype)
+    pk = jax.random.normal(ks[1], (P, BT, KV, hd), dtype)
+    pv = jax.random.normal(ks[2], (P, BT, KV, hd), dtype)
+    ck = jax.random.normal(ks[3], (C, KV, hd), dtype)
+    cv = jax.random.normal(ks[4], (C, KV, hd), dtype)
+    tbl = jnp.asarray((np.arange(NBt) % (P - 1) + 1).astype(np.int32))
+    W = max(NBt * BT, C + 1)
+    args = (q, pk, pv, ck, cv, tbl, jnp.int32(0), jnp.int32(start),
+            jnp.int32(n_valid))
+    out_p = chunked_prefill_attention_pallas(*args, near_window=W)
+    out_r = ref.chunked_prefill_attention_ref(*args, near_window=W)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(out_p, np.float32),
+                               np.asarray(out_r, np.float32),
+                               rtol=tol, atol=tol)
+    # padded query rows contribute nothing downstream
+    assert bool((np.asarray(out_p, np.float32)[n_valid:] == 0).all())
+
+
+def test_chunked_prefill_equals_token_at_a_time():
+    """Feeding a chunk through the chunked kernel == feeding its tokens one
+    at a time through the decode kernel with incremental pool writes."""
+    C, H, KV, hd, BT = 6, 4, 2, 16, 4
+    P, W = 12, 20
+    ks = jax.random.split(jax.random.PRNGKey(4), 5)
+    q = jax.random.normal(ks[0], (C, H, hd), jnp.float32)
+    pk = jax.random.normal(ks[1], (P, BT, KV, hd), jnp.float32)
+    pv = jax.random.normal(ks[2], (P, BT, KV, hd), jnp.float32)
+    ck = jax.random.normal(ks[3], (C, KV, hd), jnp.float32)
+    cv = jax.random.normal(ks[4], (C, KV, hd), jnp.float32)
+    start = 10                         # context tokens 0..9 in blocks 1..3
+    chunk_tbl = jnp.asarray(np.array([1, 2, 3, 0, 0], np.int32))
+    out_c = ref.chunked_prefill_attention_ref(
+        q, pk, pv, ck, cv, chunk_tbl, jnp.int32(0), jnp.int32(start),
+        jnp.int32(C), near_window=W)
+    # oracle: incremental decode with chunk token j written at block 3/4/...
+    wpos = [(3, 2), (3, 3), (4, 0), (4, 1), (4, 2), (4, 3)]
+    dec_tbl = jnp.asarray(np.array([[1, 2, 3, 4, 5, 0]], np.int32))
+    pki, pvi = pk, pv
+    for i in range(C):
+        o, _ = ref.paged_decode_attention_ref(
+            q[i][None], pki, pvi, dec_tbl, jnp.zeros(1, jnp.int32),
+            jnp.asarray([start + i], jnp.int32), jnp.ones(1, jnp.int32),
+            near_window=W, cur_k=ck[i][None], cur_v=cv[i][None])
+        np.testing.assert_allclose(np.asarray(o[0]), np.asarray(out_c[i]),
+                                   rtol=1e-5, atol=1e-5)
+        b, off = wpos[i]
+        pki = pki.at[b, off].set(ck[i])
+        pvi = pvi.at[b, off].set(cv[i])
 
 
 def test_prefill_flash_window():

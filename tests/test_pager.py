@@ -2,7 +2,8 @@
 refcounts, frame idempotency, and hypothesis-driven invariant fuzzing."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.core.pager import BlockPager
 

@@ -1,0 +1,191 @@
+"""Pipelined decode + chunked prefill: token-for-token equivalence of
+pipeline_depth=1 vs the seed-exact pipeline_depth=0 path (and vs the
+teacher-forced reference via debug_logits) across all four engine modes,
+including EOS bursts, prefix-aliased admissions, and chunked-prefill
+boundaries; plus the prefill step-count guarantee and audit invariants
+(one compilation per executor, single commit per step, unchanged DMA
+groups under pipelining). DESIGN.md §3.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.core.engine import EngineConfig, KVRMEngine
+from repro.core.scheduler import Request
+from repro.models import registry
+
+MODES = ["arena", "paged", "paged_merge", "full"]
+
+
+@pytest.fixture(scope="module")
+def dense_setup():
+    cfg = get_reduced("qwen2.5-32b")
+    params = registry.init_params(jax.random.PRNGKey(7), cfg)
+    return cfg, params
+
+
+def _mk_engine(cfg, params, mode, depth, chunk, **kw):
+    base = dict(mode=mode, batch=4, max_seq=64, block_tokens=8,
+                debug_logits=True, pipeline_depth=depth, prefill_chunk=chunk)
+    if mode == "full":
+        base.update(max_seq=128, near_window=32, farview_cap=4, sv_chunk=16)
+    base.update(kw)
+    return KVRMEngine(cfg, params, EngineConfig(**base))
+
+
+def _run(cfg, params, mode, depth, chunk, reqs_fn, **kw):
+    eng = _mk_engine(cfg, params, mode, depth, chunk, **kw)
+    for r in reqs_fn():
+        eng.submit(r)
+    eng.run(max_steps=500)
+    return eng
+
+
+def _mixed_reqs(vocab, with_burst=True):
+    rng = np.random.default_rng(0)
+    lens = [(5, 6), (17, 4), (3, 8), (33, 5), (9, 7), (21, 3)]
+    if with_burst:                      # EOS burst: several finish together
+        lens += [(4, 5), (6, 5), (8, 5)]
+    def make():
+        rng2 = np.random.default_rng(1)
+        return [Request(rid=i, prompt=rng2.integers(0, vocab, size=p)
+                        .astype(np.int32), gen_len=g)
+                for i, (p, g) in enumerate(lens)]
+    return make
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_depth1_matches_depth0(dense_setup, mode):
+    """Pipelined decode is bit-identical to the synchronous seed path: same
+    tokens, same logits, same step count, same DMA/frame accounting."""
+    cfg, params = dense_setup
+    reqs = _mixed_reqs(cfg.vocab_size)
+    e0 = _run(cfg, params, mode, 0, 0, reqs)
+    e1 = _run(cfg, params, mode, 1, 0, reqs)
+    t0 = {r.rid: r.generated for r in e0.sched.finished}
+    t1 = {r.rid: r.generated for r in e1.sched.finished}
+    assert len(t0) == len(t1) == 9
+    assert t0 == t1
+    for r0 in e0.sched.finished:
+        r1 = next(r for r in e1.sched.finished if r.rid == r0.rid)
+        np.testing.assert_array_equal(np.stack(r0.logit_trace),
+                                      np.stack(r1.logit_trace))
+    a0, a1 = e0.audit(), e1.audit()
+    assert e0.steps_run == e1.steps_run
+    assert a1["single_commit_per_step"]
+    assert a1["compilations"] in (-1, 1), a1
+    assert a0["dma_groups_per_step"] == pytest.approx(a1["dma_groups_per_step"])
+    assert a0["frames_committed"] == a1["frames_committed"]
+
+
+@pytest.mark.parametrize("depth", [0, 1])
+def test_chunked_prefill_matches_tokenwise(dense_setup, depth):
+    """Chunked prefill produces the same greedy decode as token-at-a-time
+    prefill (bf16-rounding-level logit agreement, identical tokens here) at
+    both pipeline depths, across chunk/block boundary cases."""
+    cfg, params = dense_setup
+    # prompt lengths straddle chunk (8) and block (8) boundaries:
+    # below / exact / +1 / multiple / multiple+1 / non-aligned
+    lens = [(7, 4), (8, 4), (9, 4), (16, 4), (17, 4), (27, 4)]
+    def reqs():
+        rng = np.random.default_rng(2)
+        return [Request(rid=i, prompt=rng.integers(0, cfg.vocab_size, size=p)
+                        .astype(np.int32), gen_len=g)
+                for i, (p, g) in enumerate(lens)]
+    base = _run(cfg, params, "paged_merge", depth, 0, reqs)
+    chk = _run(cfg, params, "paged_merge", depth, 8, reqs)
+    tb = {r.rid: r.generated for r in base.sched.finished}
+    tc = {r.rid: r.generated for r in chk.sched.finished}
+    assert len(tb) == len(tc) == len(lens)
+    assert tb == tc
+    # chunked path ran fewer engine steps (prompts ingested C tokens/step)
+    assert chk.steps_run < base.steps_run
+    a = chk.audit()
+    assert a["prefill_compilations"] in (-1, 1), a
+    assert a["compilations"] in (-1, 1), a
+    assert a["single_commit_per_step"]
+    assert a["prefill_chunks_run"] > 0
+    chk.pager.check_invariants()
+    assert chk.pager.reserved_blocks() == 0
+
+
+def test_chunked_pipeline_matches_reference(dense_setup):
+    """depth=1 + chunked prefill vs the teacher-forced full-attention oracle
+    (same tolerance contract as the seed engine-vs-reference test)."""
+    cfg, params = dense_setup
+    def reqs():
+        rng = np.random.default_rng(3)
+        return [Request(rid=i, prompt=rng.integers(0, cfg.vocab_size, size=p)
+                        .astype(np.int32), gen_len=g)
+                for i, (p, g) in enumerate([(12, 6), (25, 4)])]
+    eng = _run(cfg, params, "paged_merge", 1, 8, reqs)
+    import jax.numpy as jnp
+    for req in eng.sched.finished:
+        toks = list(map(int, req.prompt)) + list(req.generated)
+        logits = registry.forward(params, cfg, jnp.asarray([toks], jnp.int32))
+        idx = np.arange(len(req.prompt) - 1, len(toks) - 1)
+        ref = np.asarray(logits[0, idx], np.float32)
+        got = np.stack(req.logit_trace)
+        np.testing.assert_allclose(got, ref, rtol=0.05, atol=0.05)
+
+
+def test_pipelined_alias_prefix(dense_setup):
+    """Prefix-aliased admission under pipelining + chunking: the aliased
+    session skips the shared prefix and decodes identically to depth 0."""
+    cfg, params = dense_setup
+    rng = np.random.default_rng(4)
+    shared = rng.integers(0, cfg.vocab_size, size=16).astype(np.int32)
+    def reqs():
+        return [Request(rid=0, prompt=shared.copy(), gen_len=20),
+                Request(rid=1, prompt=np.concatenate([shared, shared[:5]]),
+                        gen_len=4, prefix_of=0, prefix_len=16)]
+    outs = {}
+    for depth, chunk in ((0, 0), (1, 0), (1, 8)):
+        eng = _run(cfg, params, "paged_merge", depth, chunk, reqs,
+                   span_blocks=1)
+        assert len(eng.sched.finished) == 2
+        outs[(depth, chunk)] = {r.rid: r.generated for r in eng.sched.finished}
+        eng.pager.check_invariants()
+        assert eng.pager.reserved_blocks() == 0
+    assert outs[(0, 0)] == outs[(1, 0)] == outs[(1, 8)]
+
+
+def test_prefill_step_count():
+    """A 256-token prompt completes prefill in <= 256/chunk + 1 engine steps
+    (vs 256 at seed): the chunked executor ingests C tokens per step and the
+    decode step feeds the final prompt token."""
+    cfg = get_reduced("qwen2.5-32b")
+    params = registry.init_params(jax.random.PRNGKey(0), cfg)
+    C = 64
+    prompt = np.random.default_rng(5).integers(
+        0, cfg.vocab_size, size=256).astype(np.int32)
+    eng = KVRMEngine(cfg, params, EngineConfig(
+        mode="paged_merge", batch=2, max_seq=512, block_tokens=8,
+        pipeline_depth=1, prefill_chunk=C))
+    eng.submit(Request(rid=0, prompt=prompt, gen_len=3))
+    eng.run(max_steps=300)
+    req = eng.sched.finished[0]
+    # first_token_step is the engine step that fed the LAST prompt token
+    steps_to_prefill = req.first_token_step - req.start_step + 1
+    assert steps_to_prefill <= 256 // C + 1, steps_to_prefill
+    assert len(req.generated) == 3
+    a = eng.audit()
+    assert a["prefill_chunks_run"] == -(-255 // C)
+    assert a["single_commit_per_step"]
+
+
+def test_pipeline_flush_on_partial_run(dense_setup):
+    """Manually stepped engines finalize generated tokens on flush()."""
+    cfg, params = dense_setup
+    eng = _mk_engine(cfg, params, "paged_merge", 1, 0)
+    eng.submit(Request(rid=0, prompt=np.arange(4, dtype=np.int32), gen_len=6))
+    for _ in range(6):
+        eng.step()
+    eng.flush()
+    req = eng.sched.requests[0]
+    # 4 prefill steps + 2 decode emissions read back after flush
+    assert len(req.generated) == 3  # steps 4,5,6 emit; 3 values after flush
+    eng.run(max_steps=50)
+    assert len(eng.sched.finished) == 1
+    assert len(req.generated) == 6

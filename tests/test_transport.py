@@ -1,7 +1,8 @@
 """Merge-staged transport tests: run merging, tau splitting, delta holds,
 fragmentation regimes, and hypothesis coverage-equivalence property."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.core.transport import MergeStagedTransport, StagedDescriptor, merge_runs
 
@@ -85,7 +86,11 @@ def test_fragmentation_regimes_degrade_gracefully():
     assert g <= 32
 
 
-def test_fill_train_arrays_overflow_collapses():
+def test_fill_train_arrays_overflow_sentinel():
+    """Overflow beyond MT: the folded remainder trains are generally NOT
+    physically contiguous, so no (start, len) copy describes them; the last
+    slot must be an explicit degenerate sentinel (train_start=-1) covering
+    the remainder's block count, and the stress event must be counted."""
     t = _mk(mt=2)
     trains = [(1, 1, 0), (5, 1, 1), (9, 1, 2), (13, 1, 3)]
     ts = np.zeros((1, 2), np.int32)
@@ -93,6 +98,43 @@ def test_fill_train_arrays_overflow_collapses():
     td = np.zeros((1, 2), np.int32)
     t.fill_train_arrays(trains, ts, tl, td, 0)
     assert tl[0].sum() == 4                    # coverage preserved
+    assert (ts[0, 0], tl[0, 0], td[0, 0]) == (1, 1, 0)   # in-bounds train
+    assert ts[0, 1] == -1                      # degenerate sentinel ...
+    assert tl[0, 1] == 3                       # ... covers the remainder
+    assert td[0, 1] == 1                       # first folded window position
+    assert t.stats.train_overflows == 1
+    # no overflow -> no sentinel, no stress count
+    t.fill_train_arrays([(1, 2, 0), (7, 1, 2)], ts, tl, td, 0)
+    assert ts[0, 1] == 7 and tl[0, 1] == 1
+    assert t.stats.train_overflows == 1
+
+
+def test_held_descriptors_drain():
+    """held_descriptors must fall back to zero when staged descriptors fold
+    into trains (it used to grow monotonically)."""
+    t = _mk(delta=2)
+    t.stage([StagedDescriptor(block=50, dst=9), StagedDescriptor(block=60, dst=10)])
+    assert t.stats.held_descriptors == 2
+    t.reduce([1, 2, 3])                        # age 1 < delta: still held
+    assert t.stats.held_descriptors == 2
+    t.reduce([1, 2, 3])                        # age hits delta: both drain
+    assert t.stats.held_descriptors == 0
+    assert len(t._staged) == 0
+
+
+def test_account_batch_matches_reduce():
+    """Vectorized stats accounting == per-slot reduce() accounting."""
+    windows = [[1, 2, 3, 7, 8], [4, 5], [10, 12, 14]]
+    t1 = _mk()
+    for w in windows:
+        t1.reduce(w)
+    t2 = _mk()
+    trains = t2.reduce_batch(windows)
+    t2.account_batch([len(w) for w in windows],
+                     [len(tr) for tr in trains], [0, 0, 0])
+    for f in ("steps", "total_groups", "total_bytes", "max_groups",
+              "unmerged_groups"):
+        assert getattr(t1.stats, f) == getattr(t2.stats, f), f
 
 
 @settings(max_examples=100, deadline=None)
