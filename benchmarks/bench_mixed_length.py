@@ -14,8 +14,8 @@ import argparse
 
 import numpy as np
 
-from benchmarks.common import (engine, print_rows, row, run_workload,
-                               smoke_scale, write_json)
+from benchmarks.common import (engine, print_rows, record_audit, row,
+                               run_workload, smoke_scale, write_json)
 from repro.core.scheduler import Request
 from repro.data import traces
 
@@ -85,6 +85,7 @@ def run():
         lat = eng.latency_stats()
         rl = eng.request_latency_stats()
         a = eng.audit()
+        record_audit(f"mixed_length/{mode}", a)
         results[mode] = (eng.throughput(), rl["completion_p99_ms"])
         rows.append(row(
             f"mixed_length/{mode}", lat["mean_ms"] * 1e3,
@@ -106,7 +107,37 @@ def run():
                         core_tput_share=(core_t - base_t) / max(full_t - base_t, 1e-9),
                         core_p99_share=(base_p - core_p) / max(base_p - full_p, 1e-9)))
     _pipeline_ab(rows)
+    _tp_ab(rows)
     return rows
+
+
+def _tp_ab(rows):
+    """TP decode A/B on the same workload (DESIGN.md §4): single-device vs a
+    2-way model mesh — identical token stream, halved per-device KV. Only
+    emitted when the process holds >= 2 devices (the multi-device CI job and
+    bench_scaling's forced-topology child do; the default lane skips)."""
+    import jax
+    if len(jax.devices()) < 2:
+        return
+    from repro.launch.mesh import make_engine_mesh
+    scale = smoke_scale()
+    for label, mesh in (("tp1", None), ("tp2", make_engine_mesh(1, 2))):
+        eng = engine("paged_merge", batch=BUDGET_SLOTS_PAGED, max_seq=MAX_SEQ,
+                     pool_budget=0.5, pipeline_depth=1,
+                     prefill_chunk=PREFILL_CHUNK, mesh=mesh)
+        reqs = traces.mixed_length_workload(traces.TraceConfig(
+            n_requests=max(6, int(24 * scale)), token_scale=0.3,
+            vocab=eng.cfg.vocab_size, seed=3))
+        run_workload(eng, reqs)
+        a = eng.audit()
+        record_audit(f"mixed_length/{label}", a)
+        rows.append(row(
+            f"mixed_length/{label}", eng.latency_stats()["mean_ms"] * 1e3,
+            tok_s=eng.throughput(), tp=a["tp_degree"],
+            per_device_peak_reserved_kv=a["per_device_peak_reserved_kv"],
+            submit_share=a["submit_share"],
+            dma_groups=a["dma_groups_per_step"],
+            finished=len(eng.sched.finished)))
 
 
 if __name__ == "__main__":

@@ -17,6 +17,19 @@ from repro.models import registry
 ARCH = "qwen2.5-32b"      # bench model family (paper uses qwen2.5-7B)
 _PARAM_CACHE = {}
 
+# engine audits recorded during a bench run, aggregated by run.py --json
+# into the per-PR perf-trajectory artifact (BENCH_PR<n>.json)
+_AUDITS = {}
+
+
+def record_audit(name: str, audit: dict) -> None:
+    _AUDITS[name] = {k: (float(v) if hasattr(v, "item") else v)
+                     for k, v in audit.items()}
+
+
+def collected_audits() -> dict:
+    return dict(_AUDITS)
+
 
 def engine(mode: str, *, batch=8, max_seq=256, near_window=None,
            block_tokens=8, pool_budget=1.0, arch=ARCH, seed=0, **kw) -> KVRMEngine:
@@ -31,12 +44,19 @@ def engine(mode: str, *, batch=8, max_seq=256, near_window=None,
 
 
 def run_workload(eng: KVRMEngine, reqs, warmup: int = 3, replay_scale=None):
+    if replay_scale is not None:
+        # compress trace time into WALL seconds up front so arrivals and the
+        # engine's finish/ttft stamps share one clock — admission timing is
+        # unchanged (arrival*s <= wall  <=>  arrival <= wall/s) and
+        # request_latency_stats' arrival subtraction is dimensionally right
+        for r in reqs:
+            r.arrival *= replay_scale
     for r in reqs:
         eng.submit(r)
     if replay_scale is not None:
         t0 = time.perf_counter()
         eng.run(max_steps=200_000,
-                now_fn=lambda: (time.perf_counter() - t0) / replay_scale)
+                now_fn=lambda: time.perf_counter() - t0)
     else:
         eng.run(max_steps=200_000)
     return eng

@@ -1,0 +1,79 @@
+"""Perf-trajectory diff: compare two aggregated bench JSONs (run.py --json)
+and WARN on regressions of key metrics. Never fails the build — CPU CI
+timing is noisy; the warnings are a review signal, the committed
+BENCH_PR<n>.json sequence is the record.
+
+    python -m benchmarks.diff_json --old BENCH_PR1.json --new BENCH_PR2.json
+"""
+import argparse
+import json
+import sys
+
+# metric -> direction ('up' = bigger is better, 'down' = smaller is better)
+KEY_METRICS = {
+    "tok_s": "up",
+    "lane_tok_s": "up",
+    "submit_share": "down",
+    "step_p99_ms": "down",
+    "completion_p99_ms": "down",
+    "ttft_p99_ms": "down",
+    "per_device_peak_reserved_kv": "down",
+    "peak_reserved_kv": "down",
+    "dma_groups": "down",
+}
+TOLERANCE = 0.15     # relative slack before a change counts as a regression
+
+
+def diff(old: dict, new: dict) -> list:
+    warnings = []
+    ob, nb = old.get("benches", old), new.get("benches", new)
+    for bench, rows in nb.items():
+        orows = ob.get(bench)
+        if not isinstance(orows, dict) or not isinstance(rows, dict):
+            continue
+        for rname, rvals in rows.items():
+            ovals = orows.get(rname)
+            if not isinstance(ovals, dict) or not isinstance(rvals, dict):
+                continue
+            for metric, direction in KEY_METRICS.items():
+                if metric not in rvals or metric not in ovals:
+                    continue
+                try:
+                    o, n = float(ovals[metric]), float(rvals[metric])
+                except (TypeError, ValueError):
+                    continue
+                if o == 0:
+                    continue
+                rel = (n - o) / abs(o)
+                worse = rel < -TOLERANCE if direction == "up" \
+                    else rel > TOLERANCE
+                if worse:
+                    warnings.append(
+                        f"WARN {bench}/{rname}.{metric}: "
+                        f"{o:.4g} -> {n:.4g} ({rel:+.1%})")
+    return warnings
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--old", required=True)
+    ap.add_argument("--new", required=True)
+    args = ap.parse_args(argv)
+    try:
+        with open(args.old) as f:
+            old = json.load(f)
+        with open(args.new) as f:
+            new = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"# diff skipped: {e}", file=sys.stderr)
+        return 0
+    warnings = diff(old, new)
+    for w in warnings:
+        print(w)
+    print(f"# {len(warnings)} regression warning(s) "
+          f"({args.old} -> {args.new}); warn-only, not failing")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,14 +1,22 @@
-"""Benchmark harness — one module per paper table/figure (DESIGN.md §6).
+"""Benchmark harness — one module per paper table/figure (DESIGN.md §7).
 Prints ``name,us_per_call,derived`` CSV per row.
 
     PYTHONPATH=src python -m benchmarks.run [--only idle_floor,mixed_length]
+    PYTHONPATH=src python -m benchmarks.run --json BENCH_PR2.json
+
+``--json PATH`` aggregates every module's rows PLUS the engine audits
+recorded during the run into one JSON artifact — the per-PR perf
+trajectory (BENCH_PR<n>.json committed at the repo root; CI uploads the
+fresh file and diffs it against the committed previous one with
+benchmarks/diff_json.py, warn-only).
 """
 import argparse
+import json
 import sys
 import time
 import traceback
 
-from benchmarks.common import print_rows
+from benchmarks.common import collected_audits, print_rows, rows_to_json
 
 MODULES = [
     ("idle_floor", "benchmarks.bench_idle_floor"),
@@ -21,6 +29,7 @@ MODULES = [
     ("boundary_stress", "benchmarks.bench_boundary_stress"),
     ("longcontext_budget", "benchmarks.bench_longcontext_budget"),
     ("kernels", "benchmarks.bench_kernels"),
+    ("scaling", "benchmarks.bench_scaling"),
 ]
 
 
@@ -28,10 +37,14 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of bench names")
+    ap.add_argument("--json", default=None,
+                    help="aggregate all rows + engine audits into one JSON "
+                         "artifact (perf trajectory)")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
     failed = []
+    agg = {}
     print("name,us_per_call,derived")
     for name, modname in MODULES:
         if only and name not in only:
@@ -41,11 +54,20 @@ def main() -> None:
             mod = __import__(modname, fromlist=["run"])
             rows = mod.run()
             print_rows(rows)
+            agg[name] = rows_to_json(rows)
             print(f"# {name}: {time.time() - t0:.1f}s", file=sys.stderr)
         except Exception:
             failed.append(name)
             print(f"# {name}: FAILED", file=sys.stderr)
             traceback.print_exc()
+
+    if args.json:
+        payload = {"benches": agg, "audits": collected_audits(),
+                   "failed": failed}
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=True, default=float)
+        print(f"# wrote {args.json}", file=sys.stderr)
+
     if failed:
         print(f"# FAILED: {failed}", file=sys.stderr)
         raise SystemExit(1)

@@ -25,6 +25,14 @@ Hot-path structure (DESIGN.md §3):
     chunked prefill executor (compiled once) at C tokens per engine step
     instead of one; the final prompt token always goes through the decode
     step so sampled-token semantics are unchanged.
+  * ``mesh`` (DESIGN.md §4) runs the SAME executors SPMD over a device mesh:
+    params shard by the name-based TP rules, KV pools shard their kv-head
+    axis over ``model``, and both executors compile ONCE with explicit
+    in/out shardings (descriptor + token feedback replicated, donated pools
+    keep their sharding). The host control plane — scheduler, pager,
+    transport, the single flat descriptor commit — is untouched, so every
+    audit invariant and the full token stream are identical to the
+    single-device engine at every TP degree.
 """
 from __future__ import annotations
 
@@ -68,6 +76,9 @@ class EngineConfig:
     # --- host/device overlap + chunked prefill (DESIGN.md §3) ---
     pipeline_depth: int = 1          # 0 = seed-exact synchronous loop (A/B)
     prefill_chunk: int = 0           # tokens per prefill-executor call (0 = off)
+    # --- SPMD decode (DESIGN.md §4): jax Mesh with a 'model' axis (TP);
+    # None = single-device (seed-exact placement) ---
+    mesh: Optional[object] = None
 
 
 @dataclass
@@ -133,6 +144,39 @@ class KVRMEngine:
         self.fv = (FarViewPolicy(ecfg.batch, self.max_chunks, self.cap,
                                  ecfg.sv_chunk, bt) if self.farview else None)
 
+        # --- SPMD placement (DESIGN.md §4) ------------------------------
+        # Params shard by the name-based TP rules; paged KV pools shard the
+        # kv-head axis over `model` (n_rep grouping preserved per shard, so
+        # attention needs no collective — the one psum per layer is at the
+        # output projection). Everything host-committed (descriptor, tokens,
+        # feed mask) is replicated. mesh=None keeps seed-exact placement.
+        self.mesh = ecfg.mesh
+        self.tp_degree = 1
+        self._kv_shards = 1
+        self._repl = self._param_sh = self._pool_sh = None
+        if self.mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec
+            from repro.distributed import sharding as shd
+            tp = shd.model_shards(self.mesh)
+            err = registry.tp_decode_error(cfg, tp)
+            if err is not None:
+                raise ValueError(err)
+            self.tp_degree = tp
+            pspecs = shd.sanitize_specs(self.mesh, self.params,
+                                        shd.param_specs(cfg, self.params))
+            self._param_sh = shd.to_shardings(self.mesh, pspecs)
+            self.params = jax.device_put(self.params, self._param_sh)
+            kvspecs = shd.sanitize_specs(
+                self.mesh, self.pools,
+                registry.decode_pool_partition_specs(cfg, self.pools))
+            self._pool_sh = shd.to_shardings(self.mesh, kvspecs)
+            self.pools = jax.device_put(self.pools, self._pool_sh)
+            self._repl = NamedSharding(self.mesh, PartitionSpec())
+            paged_key = "k" if "k" in kvspecs else (
+                "lat" if "lat" in kvspecs else None)
+            if paged_key is not None and shd.MODEL in tuple(kvspecs[paged_key]):
+                self._kv_shards = tp
+
         # arena bookkeeping: slot -> fixed block range
         self._arena_base = [1 + i * self.blocks_per_seq for i in range(ecfg.batch)]
         self._slot_len = np.zeros(ecfg.batch, np.int64)   # tokens in cache
@@ -167,9 +211,16 @@ class KVRMEngine:
                               self.chunk_blocks)
         self._flat_descr_size = descriptor_flat_size(B, NB, CAP, MT, CB)
         D = self._flat_descr_size
+        # explicit executor shardings under a mesh: donated pools keep their
+        # kv-head sharding, the control plane is replicated — exactly one
+        # compilation per executor either way (audited)
+        R, PS = self._repl, self._pool_sh
         if self.depth <= 0:
             # seed-exact executor: per-array descriptor operands
-            self._step_fn = jax.jit(_step_core, donate_argnums=(4,))
+            kw = ({} if self.mesh is None else dict(
+                in_shardings=(self._param_sh, R, R, R, PS, R),
+                out_shardings=(R, PS, R, R)))
+            self._step_fn = jax.jit(_step_core, donate_argnums=(4,), **kw)
         else:
             # pipelined executor: the whole control plane (descriptor + host
             # tokens + feed mask) arrives as ONE flat int32 operand — one
@@ -180,7 +231,10 @@ class KVRMEngine:
                 feed_sampled = flat[D + B:D + 2 * B]
                 return _step_core(params, host_tokens, feed_sampled, prev_nxt,
                                   pools, descr)
-            self._step_fn = jax.jit(_step_flat, donate_argnums=(3,))
+            kw = ({} if self.mesh is None else dict(
+                in_shardings=(self._param_sh, R, R, PS),
+                out_shardings=(R, PS, R, R)))
+            self._step_fn = jax.jit(_step_flat, donate_argnums=(3,), **kw)
         self._compiles = 0
         self.debug_logits: List[np.ndarray] = []
 
@@ -195,7 +249,9 @@ class KVRMEngine:
             def _chunk_step(params, pools, cflat):
                 cdescr = unflatten_chunk_descriptor(cflat, B, C, NB)
                 return registry.prefill_chunk(params, cfg_dec, pools, cdescr)
-            self._chunk_fn = jax.jit(_chunk_step, donate_argnums=(1,))
+            ckw = ({} if self.mesh is None else dict(
+                in_shardings=(self._param_sh, PS, R), out_shardings=PS))
+            self._chunk_fn = jax.jit(_chunk_step, donate_argnums=(1,), **ckw)
             self._cflat = np.zeros(CD, np.int32)
             self._cdescr = flat_chunk_views(self._cflat, B, self.chunk, self.NB)
         else:
@@ -213,6 +269,13 @@ class KVRMEngine:
         self._inflight: Deque[dict] = deque()
         self._prev_nxt = jnp.zeros(ecfg.batch, jnp.int32)
         self._zero_feed = jnp.zeros(ecfg.batch, jnp.int32)
+        if self.mesh is not None:
+            # commit the device-side feedback chain to the replicated layout
+            # up front: the executor's later outputs are committed replicated
+            # arrays, and an uncommitted first-step operand would key a
+            # second (spurious) compilation of the same executable
+            self._prev_nxt = jax.device_put(self._prev_nxt, self._repl)
+            self._zero_feed = jax.device_put(self._zero_feed, self._repl)
         # device-side feedback chain validity: True once a slot has emitted in
         # a step dispatched BY THIS ENGINE. A restored checkpoint starts with
         # a broken chain (no _prev_nxt) and re-seeds from host _last_token.
@@ -296,6 +359,10 @@ class KVRMEngine:
                 self.pools = self._set_cross(
                     self.pools, onehot, ck[:, None], cv[:, None],
                     jnp.full((self.e.batch,), se, jnp.int32))
+                if self.mesh is not None:
+                    # the (unsharded) encode path hands back single-device
+                    # pools; restore the executor's expected placement
+                    self.pools = jax.device_put(self.pools, self._pool_sh)
 
     # ------------------------------------------------------------------
     def _window_blocks(self, slot: int) -> (List[int], int):
@@ -761,6 +828,19 @@ class KVRMEngine:
             "active_kv_bytes": self.active_kv_bytes(),
             "peak_reserved_kv": self.peak_reserved_kv,
             "peak_active_kv": self.peak_active_kv,
+            # --- SPMD decode (DESIGN.md §4): per-DEVICE memory pressure.
+            # The logical totals above count the whole pool; with the kv-head
+            # axis sharded over `model`, each device holds 1/kv_shards of it —
+            # reporting the total as per-device overstates pressure by the TP
+            # degree.
+            "mesh": (None if self.mesh is None
+                     else "x".join(str(self.mesh.shape[a])
+                                   for a in self.mesh.axis_names)),
+            "tp_degree": self.tp_degree,
+            "kv_shards": self._kv_shards,
+            "per_device_reserved_kv": self.reserved_kv_bytes() // self._kv_shards,
+            "per_device_active_kv": self.active_kv_bytes() // self._kv_shards,
+            "per_device_peak_reserved_kv": self.peak_reserved_kv // self._kv_shards,
         }
 
     def reserved_kv_bytes(self) -> int:
@@ -795,12 +875,19 @@ class KVRMEngine:
 
     def request_latency_stats(self) -> dict:
         """Request-level completion / time-to-first-token (wall seconds,
-        relative to engine start; arrival offsets subtracted when present)."""
+        relative to each request's ARRIVAL when present, engine start
+        otherwise). Raw ``finish_wall``/``ttft_wall`` stamps are engine-start
+        relative, so trace replay (arrivals gate admission) must subtract the
+        arrival offset or late requests inflate the percentiles by their own
+        arrival time; clamped at 0 for in-flight edge stamps."""
         fin = self.sched.finished
         if not fin:
             return {}
-        comp = np.array([getattr(r, "finish_wall", 0.0) for r in fin])
-        ttft = np.array([getattr(r, "ttft_wall", 0.0) for r in fin])
+        arr = np.array([getattr(r, "arrival", 0.0) or 0.0 for r in fin])
+        comp = np.maximum(
+            np.array([getattr(r, "finish_wall", 0.0) for r in fin]) - arr, 0.0)
+        ttft = np.maximum(
+            np.array([getattr(r, "ttft_wall", 0.0) for r in fin]) - arr, 0.0)
         q = lambda a, p: float(np.percentile(a * 1e3, p))
         return {"completion_p50_ms": q(comp, 50), "completion_p99_ms": q(comp, 99),
                 "ttft_p50_ms": q(ttft, 50), "ttft_p99_ms": q(ttft, 99)}

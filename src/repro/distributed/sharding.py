@@ -111,6 +111,52 @@ def data_shards(mesh: Mesh) -> int:
     return n
 
 
+def model_shards(mesh: Mesh) -> int:
+    return mesh.shape.get(MODEL, 1) if mesh is not None else 1
+
+
+# ---------------------------------------------------------------------------
+# engine pool shardings (serving-engine layout: NO leading group dim)
+# ---------------------------------------------------------------------------
+
+def engine_pool_specs(cfg: ModelConfig, pools_shapes):
+    """PartitionSpecs for KVRMEngine decode pools (DESIGN.md §4).
+
+    Tensor-parallel decode shards the *kv-head* axis over `model`: each shard
+    owns KV/tp kv heads with their full head_dim, so the GQA `n_rep` grouping
+    (H/KV query heads per kv head) is preserved per shard and the attention
+    softmax needs no collective — the single psum per layer happens at the
+    output projection. This differs from `grouped_pool_specs` (dry-run
+    grouped layout), which shards head_dim for head-count-agnostic analysis.
+
+    Replicated: MLA latent pools (the compressed c_kv is shared by ALL heads —
+    that is the point of MLA; head parallelism lives in w_k_b/w_v_b instead),
+    sequential-state buffers (conv/ssd/xlstm), and scalar per-slot metadata.
+    """
+
+    def spec(path: str, shape):
+        nd = len(shape)
+        name = path.split("/")[-1].lower()
+        full = path.lower()
+        if (full.startswith("m/") or full.startswith("s/")) and name != "conv":
+            # xlstm recurrent states (pairs, B, H, ...): heads over model
+            return P(None, None, MODEL, *([None] * (nd - 3)))
+        if name in ("k", "v"):          # (L, P, BT, KV, hd)
+            return P(None, None, None, MODEL, None)
+        if name.startswith("far_") and name != "far_lat":
+            return P(*([None] * (nd - 2)), MODEL, None)   # (L,B,MAXC,KV,hd)
+        if name.startswith("cross_"):   # (L, B, Se, KV, hd)
+            return P(None, None, None, MODEL, None)
+        return P(*([None] * nd))        # lat / far_lat / states / enc_len
+
+    def walk(tree, prefix=""):
+        if isinstance(tree, dict):
+            return {k: walk(v, f"{prefix}{k}/") for k, v in tree.items()}
+        return spec(prefix[:-1], tree.shape)
+
+    return walk(pools_shapes)
+
+
 # ---------------------------------------------------------------------------
 # decode pool shardings (grouped layout: leading G dim = serving groups)
 # ---------------------------------------------------------------------------

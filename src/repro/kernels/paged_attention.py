@@ -15,6 +15,14 @@ Layout notes (TPU):
   * KV block = (BT, KV*hd) rows — BT >= 8 sublanes;
   * softmax state kept in VMEM scratch as (H, 128) replicated lanes.
 
+Tensor-parallel decode (DESIGN.md §4): the kernel is shard-oblivious over a
+kv-head slice — grid, BlockSpecs, and the GQA grouping ``n_rep = H // KV``
+are all derived from the LOCAL operand shapes, so each `model` shard
+instantiates the identical executable over its KV/tp kv heads (per-shard
+softmax state (KV/tp, n_rep); no cross-shard state). Launch it per shard
+via shard_map with q sharded on H, pools on KV, table/meta replicated; the
+layer's single psum happens downstream at the output projection.
+
 Validated in interpret mode against kernels/ref.py on CPU.
 """
 from __future__ import annotations
@@ -94,6 +102,7 @@ def paged_decode_attention_pallas(q, pool_k, pool_v, block_table, window_base,
     B, H, hd = q.shape
     P, BT, KV, _ = pool_k.shape
     NB = block_table.shape[1]
+    assert H % KV == 0, (H, KV)          # holds globally AND per TP shard
     n_rep = H // KV
     scale = 1.0 / math.sqrt(hd)
 

@@ -90,11 +90,25 @@ def paged_decode_attention_ref(
                              # inside the layer scan; see §Perf iteration 8)
     sm_scale: Optional[float] = None,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Returns (attn_out (B,H,hd), far_utility (B,CAP))."""
+    """Returns (attn_out (B,H,hd), far_utility (B,CAP)).
+
+    Shard-oblivious over a kv-head slice (DESIGN.md §4): every contraction,
+    mask, and the softmax are independent per kv head, and the GQA grouping
+    is derived as ``n_rep = H // KV`` from the *local* shapes — so calling
+    this on a TP shard holding KV/tp kv heads and their H/tp grouped query
+    heads (heads divisible by the TP degree) computes exactly the
+    corresponding slice of the full output, with no collective. Under
+    ``shard_map`` or jit-auto over a `model`-sharded pool the only cross-
+    shard reduction in the whole layer is the output-projection psum that
+    CONSUMES this function's result. (``far_utility`` sums over local kv
+    heads; jit-auto inserts its psum automatically, shard_map callers far
+    view is per-slot host policy and disabled under TP tests.)
+    """
     B, H, hd = q.shape
     P, BT, KV, _ = pool_k.shape
     NB = block_table.shape[1]
     W = NB * BT
+    assert H % KV == 0, (H, KV)          # holds globally AND per shard
     n_rep = H // KV
     scale = sm_scale if sm_scale is not None else 1.0 / math.sqrt(hd)
 

@@ -29,7 +29,7 @@ from repro.configs import ARCH_IDS, SHAPES, get_config
 from repro.configs.base import ModelConfig, ServingConfig, ShapeConfig
 from repro.core.descriptor import FrameDescriptor
 from repro.distributed import sharding as shd
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import make_production_mesh, mesh_context
 from repro.models import registry
 from repro.roofline import analysis
 from repro.training.optimizer import OptimizerConfig, OptState
@@ -333,7 +333,7 @@ def run_cell(arch: str, shape_name: str, mesh_name: str,
             if shape.kind in ("train", "prefill") else None
         q_model = ("model" if (VARIANT_OPTS.get("q_model_constraint")
                                and shape.kind == "decode") else None)
-        with jax.set_mesh(mesh), use_batch_axes(act_axes), \
+        with mesh_context(mesh), use_batch_axes(act_axes), \
                 use_model_axis(q_model):
             lowered = jax.jit(fn, in_shardings=in_sh,
                               donate_argnums=donate).lower(*args)
@@ -342,6 +342,8 @@ def run_cell(arch: str, shape_name: str, mesh_name: str,
             t_compile = time.time() - t0 - t_lower
         ma = compiled.memory_analysis()
         cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):   # jax 0.4.x: list of dicts
+            cost = cost[0] if cost else {}
         hlo = compiled.as_text()
         vis = (serving_plan(cfg, shape)["near_window"]
                if shape.kind == "decode" else None)

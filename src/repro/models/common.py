@@ -43,7 +43,15 @@ def dense_init(key, d_in: int, d_out: int, bias: bool = False, scale: float | No
 
 
 def dense(p, x):
-    y = x @ p["w"]
+    # f32 accumulation with one rounding at the end. Under tensor-parallel
+    # decode (DESIGN.md §4) a contraction-sharded projection (wo, mlp down,
+    # lm_head) becomes per-shard partial dots + one psum; keeping the partials
+    # and the all-reduce in f32 makes the sharded result match the
+    # single-device result bitwise on every tested degree — a bf16-output dot
+    # would round each partial before a bf16 all-reduce and drift ~1e-2,
+    # flipping greedy argmax at bf16 logit ties.
+    y = jax.lax.dot_general(x, p["w"], (((x.ndim - 1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32).astype(x.dtype)
     if "b" in p:
         y = y + p["b"]
     return y

@@ -132,6 +132,40 @@ def uses_paged_kv(cfg: ModelConfig) -> bool:
     return cfg.family != "ssm"
 
 
+# ---------------------------------------------------------------------------
+# tensor-parallel decode (DESIGN.md §4)
+# ---------------------------------------------------------------------------
+
+def decode_pool_partition_specs(cfg: ModelConfig, pools):
+    """PartitionSpecs sharding each decode pool's kv-head axis over `model`
+    (replicated where the family has no head-sharded paged payload — MLA
+    latents are shared by all heads, sequential states stay local)."""
+    from repro.distributed import sharding as shd
+    return shd.engine_pool_specs(cfg, pools)
+
+
+def tp_decode_error(cfg: ModelConfig, tp: int) -> str | None:
+    """Why this config can NOT shard decode tp-ways (None = compatible).
+
+    GQA-paged families need kv-heads (and q heads, to preserve the per-shard
+    n_rep grouping) divisible by the TP degree; MLA pages a head-shared
+    latent, so the pool itself stays replicated and only head projections
+    shard (n_heads divisibility enforced by spec sanitation instead)."""
+    if tp <= 1:
+        return None
+    if cfg.family == "ssm":
+        return None                     # recurrent states; specs sanitize
+    if cfg.use_mla:
+        return None
+    if cfg.n_kv_heads % tp:
+        return (f"TP degree {tp} must divide n_kv_heads={cfg.n_kv_heads} "
+                f"for kv-head-sharded decode")
+    if cfg.n_heads % tp:
+        return (f"TP degree {tp} must divide n_heads={cfg.n_heads} "
+                f"(per-shard GQA n_rep grouping)")
+    return None
+
+
 def paged_payload_bytes_per_token(cfg: ModelConfig) -> int:
     """Bytes/token/layer moved through the paged pool (bf16)."""
     return cfg.kv_width * 2

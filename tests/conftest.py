@@ -1,0 +1,14 @@
+"""Force a multi-device CPU topology for the whole suite.
+
+The sharded-decode tests (tests/test_sharding.py) need >= 2 devices IN the
+pytest process, and jax locks the host device count at first backend
+initialization — so the flag must be set here, before any test module
+imports jax. Everything else is unaffected: unsharded computations stay on
+device 0, and subprocess-based tests (test_dryrun_small) set their own
+count inside the child.
+"""
+import os
+
+_FLAG = "--xla_force_host_platform_device_count=4"
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") + " " + _FLAG).strip()

@@ -16,17 +16,16 @@ SCRIPT = textwrap.dedent("""
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import json
     import jax
-    from jax.sharding import AxisType
     import repro.launch.dryrun as dr
     from repro.configs import get_reduced, SHAPES
     from repro.configs.base import ShapeConfig
 
-    # shrink the production mesh for the test
+    # shrink the production mesh for the test (make_mesh handles the
+    # AxisType API difference across jax versions)
     import repro.launch.mesh as mesh_mod
-    mesh_mod.make_production_mesh = lambda multi_pod=False: jax.make_mesh(
+    mesh_mod.make_production_mesh = lambda multi_pod=False: mesh_mod.make_mesh(
         (2, 2, 2) if multi_pod else (4, 2),
-        ("pod", "data", "model") if multi_pod else ("data", "model"),
-        axis_types=(AxisType.Auto,) * (3 if multi_pod else 2))
+        ("pod", "data", "model") if multi_pod else ("data", "model"))
     dr.make_production_mesh = mesh_mod.make_production_mesh
 
     # reduced configs + reduced shapes

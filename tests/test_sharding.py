@@ -1,0 +1,244 @@
+"""Tensor-parallel sharded decode (DESIGN.md §4): token-for-token equality
+with the single-device engine on a forced multi-device CPU mesh, with
+pipelining and chunked prefill on; audit invariants unchanged (one
+compilation per executor, single commit per step, identical DMA
+groups/step); per-device KV accounting shrinks by the TP degree; the jnp
+attention reference is shard-oblivious under shard_map; and the sharded
+executor's collectives are exactly the f32 output-projection psums.
+
+The >= 2 CPU devices come from tests/conftest.py
+(--xla_force_host_platform_device_count=4).
+"""
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import get_reduced
+from repro.core.engine import EngineConfig, KVRMEngine
+from repro.core.scheduler import Request
+from repro.distributed import sharding as shd
+from repro.launch.mesh import make_engine_mesh, lane_meshes
+from repro.models import registry
+
+pytestmark = pytest.mark.skipif(
+    len(jax.devices()) < 2, reason="needs a forced multi-device CPU topology")
+
+MODES = ["arena", "paged", "paged_merge"]
+
+
+@pytest.fixture(scope="module")
+def dense_setup():
+    cfg = get_reduced("qwen2.5-32b")
+    params = registry.init_params(jax.random.PRNGKey(7), cfg)
+    return cfg, params
+
+
+def _reqs(vocab):
+    rng = np.random.default_rng(1)
+    lens = [(5, 6), (17, 4), (3, 8), (33, 5), (9, 7), (21, 3),
+            (4, 5), (6, 5), (8, 5)]          # EOS burst tail
+    return [Request(rid=i, prompt=rng.integers(0, vocab, size=p)
+                    .astype(np.int32), gen_len=g)
+            for i, (p, g) in enumerate(lens)]
+
+
+def _run(cfg, params, mesh, mode="paged_merge", depth=1, chunk=8, **kw):
+    eng = KVRMEngine(cfg, params, EngineConfig(
+        mode=mode, batch=4, max_seq=64, block_tokens=8, mesh=mesh,
+        pipeline_depth=depth, prefill_chunk=chunk, **kw))
+    for r in _reqs(cfg.vocab_size):
+        eng.submit(r)
+    eng.run(max_steps=500)
+    return eng
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_tp2_token_identical(dense_setup, mode):
+    """model=2 TP decode is token-for-token identical to the single-device
+    engine (pipelining + chunked prefill on), with the full audit contract:
+    one compilation per executor, one frame commit per step, and the same
+    DMA groups/step — the transport timeline must not see the mesh."""
+    cfg, params = dense_setup
+    e0 = _run(cfg, params, None, mode)
+    e1 = _run(cfg, params, make_engine_mesh(1, 2), mode)
+    t0 = {r.rid: r.generated for r in e0.sched.finished}
+    t1 = {r.rid: r.generated for r in e1.sched.finished}
+    assert len(t0) == len(t1) == 9
+    assert t0 == t1
+    a0, a1 = e0.audit(), e1.audit()
+    assert e0.steps_run == e1.steps_run
+    assert a1["compilations"] in (-1, 1), a1
+    assert a1["prefill_compilations"] in (-1, 0, 1), a1
+    assert a1["single_commit_per_step"]
+    assert a0["frames_committed"] == a1["frames_committed"]
+    assert a0["dma_groups_per_step"] == pytest.approx(a1["dma_groups_per_step"])
+    assert a1["tp_degree"] == 2
+
+
+def test_tp_with_data_axis(dense_setup):
+    """A (data=2, model=2) mesh (pools replicated over `data`, sharded over
+    `model`) still decodes token-for-token identically."""
+    cfg, params = dense_setup
+    if len(jax.devices()) < 4:
+        pytest.skip("needs 4 devices")
+    e0 = _run(cfg, params, None)
+    e1 = _run(cfg, params, make_engine_mesh(2, 2))
+    assert {r.rid: r.generated for r in e0.sched.finished} == \
+           {r.rid: r.generated for r in e1.sched.finished}
+    assert e1.audit()["kv_shards"] == 2
+
+
+def test_lane_mesh_pure_dp(dense_setup):
+    """A ('model',)=1 lane submesh (pure data-parallel lane) is the
+    single-device engine with placement plumbing on — identical stream."""
+    cfg, params = dense_setup
+    lanes = lane_meshes(make_engine_mesh(2, 1))
+    assert len(lanes) == 2
+    e0 = _run(cfg, params, None)
+    e1 = _run(cfg, params, lanes[0])
+    assert {r.rid: r.generated for r in e0.sched.finished} == \
+           {r.rid: r.generated for r in e1.sched.finished}
+    assert e1.audit()["tp_degree"] == 1
+
+
+def test_per_device_kv_accounting(dense_setup):
+    """audit() per-device KV shrinks by the TP degree: the same workload's
+    peak logical reservation is unchanged, but each device holds half."""
+    cfg, params = dense_setup
+    e0 = _run(cfg, params, None)
+    e1 = _run(cfg, params, make_engine_mesh(1, 2))
+    a0, a1 = e0.audit(), e1.audit()
+    assert a0["peak_reserved_kv"] == a1["peak_reserved_kv"] > 0
+    assert a1["kv_shards"] == 2
+    assert a1["per_device_peak_reserved_kv"] * 2 == a1["peak_reserved_kv"]
+    assert a1["per_device_peak_reserved_kv"] < a0["per_device_peak_reserved_kv"]
+    # mid-flight live accounting shrinks the same way
+    e2 = KVRMEngine(cfg, params, EngineConfig(
+        mode="paged_merge", batch=4, max_seq=64, block_tokens=8,
+        mesh=make_engine_mesh(1, 2)))
+    for r in _reqs(cfg.vocab_size)[:4]:
+        e2.submit(r)
+    for _ in range(6):
+        e2.step()
+    a2 = e2.audit()
+    assert a2["reserved_kv_bytes"] > 0
+    assert a2["per_device_reserved_kv"] * 2 == a2["reserved_kv_bytes"]
+    e2.run(max_steps=200)
+
+
+def test_tp_divisibility_guard(dense_setup):
+    """kv-heads not divisible by the TP degree is a clear constructor error
+    (reduced config has n_kv_heads=2)."""
+    cfg, params = dense_setup
+    if len(jax.devices()) < 4:
+        pytest.skip("needs 4 devices")
+    with pytest.raises(ValueError, match="n_kv_heads"):
+        KVRMEngine(cfg, params, EngineConfig(
+            mode="paged_merge", batch=4, max_seq=64, block_tokens=8,
+            mesh=make_engine_mesh(1, 4)))
+
+
+@pytest.mark.parametrize("arch", ["zamba2-7b", "deepseek-v3-671b"])
+def test_tp2_other_families(arch):
+    """The mesh path serves the other families too: hybrid shards its
+    attention-site KV pools (kv_shards=2); MLA keeps its head-shared latent
+    pool replicated (kv_shards=1) and shards only head projections. Token
+    streams match the single-device engine either way."""
+    cfg = get_reduced(arch)
+    params = registry.init_params(jax.random.PRNGKey(0), cfg)
+    outs = {}
+    for label, mesh in (("1dev", None), ("tp2", make_engine_mesh(1, 2))):
+        eng = KVRMEngine(cfg, params, EngineConfig(
+            mode="paged_merge", batch=2, max_seq=64, block_tokens=8,
+            mesh=mesh))
+        rng = np.random.default_rng(5)
+        for i in range(3):
+            eng.submit(Request(rid=i, prompt=rng.integers(0, 100, size=4)
+                               .astype(np.int32), gen_len=4))
+        eng.run(max_steps=200)
+        assert len(eng.sched.finished) == 3
+        assert eng.audit()["compilations"] in (-1, 1)
+        outs[label] = {r.rid: r.generated for r in eng.sched.finished}
+    assert outs["1dev"] == outs["tp2"]
+
+
+def test_ref_attention_shard_map(dense_setup):
+    """kernels/ref.paged_decode_attention_ref is shard-oblivious: running it
+    per kv-head shard under shard_map (q sharded on H, pools on KV, control
+    replicated) reproduces the full-head result exactly."""
+    from jax.experimental.shard_map import shard_map
+
+    from repro.kernels import ref
+
+    B, H, KV, hd, BT, NBLK, NB, W = 4, 4, 2, 16, 8, 20, 4, 32
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(B, H, hd)), jnp.bfloat16)
+    pk = jnp.asarray(rng.normal(size=(NBLK, BT, KV, hd)), jnp.bfloat16)
+    pv = jnp.asarray(rng.normal(size=(NBLK, BT, KV, hd)), jnp.bfloat16)
+    tbl = jnp.asarray(rng.integers(1, NBLK, size=(B, NB)), jnp.int32)
+    wb = jnp.zeros((B,), jnp.int32)
+    sl = jnp.asarray([5, 9, 17, 2], jnp.int32)
+    act = jnp.ones((B,), jnp.int32)
+
+    full, _ = ref.paged_decode_attention_ref(
+        q, pk, pv, tbl, wb, sl, act, near_window=W)
+
+    mesh = Mesh(np.array(jax.devices()[:2]), ("model",))
+    sharded_fn = shard_map(
+        lambda q_, pk_, pv_: ref.paged_decode_attention_ref(
+            q_, pk_, pv_, tbl, wb, sl, act, near_window=W)[0],
+        mesh=mesh,
+        in_specs=(P(None, "model", None), P(None, None, "model", None),
+                  P(None, None, "model", None)),
+        out_specs=P(None, "model", None))
+    got = sharded_fn(q, pk, pv)
+    np.testing.assert_array_equal(np.asarray(full, np.float32),
+                                  np.asarray(got, np.float32))
+
+
+def test_sharded_executor_collectives(dense_setup):
+    """The compiled sharded decode step contains only f32 all-reduces (the
+    output-projection psums + the vocab-sharded embedding gather): attention
+    itself is collective-free over the kv-head slice, and no psum runs in
+    bf16 — that is what keeps TP greedy decode bit-identical."""
+    cfg, params = dense_setup
+    from repro.core.descriptor import descriptor_flat_size, unflatten_descriptor
+
+    B, NB, CAP, MT, CB = 4, 9, 1, 10, 1
+    pools = registry.init_decode_pools(cfg, batch=B, num_blocks=40,
+                                       block_tokens=8, max_chunks=0, enc_len=0)
+    cfg_dec = cfg.replace(serving=cfg.serving.__class__(near_window=64))
+    D = descriptor_flat_size(B, NB, CAP, MT, CB)
+
+    def step(params, flatv, prev_nxt, pools):
+        descr = unflatten_descriptor(flatv[:D], B, NB, CAP, MT, CB)
+        tokens = jnp.where(flatv[D + B:D + 2 * B] > 0, prev_nxt,
+                           flatv[D:D + B])
+        logits, pools, fu = registry.decode_step(params, cfg_dec, tokens,
+                                                 pools, descr)
+        return jnp.argmax(logits, -1).astype(jnp.int32), pools, fu
+
+    mesh = make_engine_mesh(1, 2)
+    psh = shd.to_shardings(mesh, shd.sanitize_specs(
+        mesh, params, shd.param_specs(cfg, params)))
+    poolsh = shd.to_shardings(mesh, shd.sanitize_specs(
+        mesh, pools, registry.decode_pool_partition_specs(cfg, pools)))
+    repl = NamedSharding(mesh, P())
+    f = jax.jit(step, donate_argnums=(3,),
+                in_shardings=(psh, repl, repl, poolsh),
+                out_shardings=(repl, poolsh, repl))
+    sds = lambda t: jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), t)
+    hlo = f.lower(sds(params), jax.ShapeDtypeStruct((D + 2 * B,), jnp.int32),
+                  jax.ShapeDtypeStruct((B,), jnp.int32),
+                  sds(pools)).compile().as_text()
+    ars = re.findall(r"= (\w+)\[[^\]]*\]\S* all-reduce\(", hlo)
+    # layer scan keeps the body once in HLO: wo psum + mlp-down psum +
+    # embed-gather psum — bounded, and every one of them f32
+    assert 1 <= len(ars) <= 6, hlo.count("all-reduce(")
+    assert all(t == "f32" for t in ars), ars
+    assert hlo.count("all-to-all") == 0
