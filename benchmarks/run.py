@@ -23,6 +23,7 @@ MODULES = [
     ("bandwidth_wall", "benchmarks.bench_bandwidth_wall"),
     ("mixed_length", "benchmarks.bench_mixed_length"),
     ("trace_replay", "benchmarks.bench_trace_replay"),
+    ("oversubscribe", "benchmarks.bench_oversubscribe"),
     ("predictable", "benchmarks.bench_predictable"),
     ("transport_audit", "benchmarks.bench_transport_audit"),
     ("farview_quality", "benchmarks.bench_farview_quality"),

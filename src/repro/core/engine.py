@@ -52,7 +52,7 @@ from repro.core.descriptor import (FrameDescriptor, chunk_flat_size,
                                    unflatten_chunk_descriptor,
                                    unflatten_descriptor)
 from repro.core.farview import FarViewPolicy
-from repro.core.pager import BlockPager
+from repro.core.pager import RES_DEVICE, RES_HOST, BlockPager
 from repro.core.scheduler import Request, Scheduler
 from repro.core.transport import MergeStagedTransport, StagedDescriptor, merge_runs
 from repro.models import registry
@@ -79,6 +79,14 @@ class EngineConfig:
     # --- SPMD decode (DESIGN.md §4): jax Mesh with a 'model' axis (TP);
     # None = single-device (seed-exact placement) ---
     mesh: Optional[object] = None
+    # --- host KV tier + preemption-aware scheduling (DESIGN.md §8) ---
+    host_pool_blocks: int = 0        # host backing pool (blocks); 0 = off
+    kv_oversubscribe: float = 1.0    # derives host_pool_blocks when > 1.0:
+    #                                  host = (ratio - 1) * device pool
+    swap_high_watermark: float = 0.92  # device-pool fill that triggers
+    swap_low_watermark: float = 0.80   # cold swap-out down to this fill
+    admit_watermark: float = 0.85    # admission caps committed KV at
+    #                                  admit_wm * device + host blocks
 
 
 @dataclass
@@ -106,10 +114,21 @@ class KVRMEngine:
         self.MT = self.NB + 1
         self.blocks_per_seq = -(-ecfg.max_seq // bt) + 1
         worst = ecfg.batch * self.blocks_per_seq
+        # Without a host tier the pool floor keeps every slot's near window
+        # device-resident simultaneously (no swap path exists). WITH the
+        # host tier (DESIGN.md §8) the floor drops to one window + growth
+        # slack: the device pool may be genuinely oversubscribed — admission
+        # watermarks and preemption keep the concurrent working set inside
+        # it, and the host pool absorbs the rest.
+        want_host = ecfg.mode != "arena" and (ecfg.host_pool_blocks > 0
+                                              or ecfg.kv_oversubscribe > 1.0)
         if ecfg.mode == "arena":
             self.num_blocks = worst + 1
         else:
-            self.num_blocks = max(self.NB * ecfg.batch,
+            floor = self.NB * ecfg.batch
+            if want_host:
+                floor = min(floor, self.NB + ecfg.span_blocks + 2)
+            self.num_blocks = max(floor,
                                   int(worst * ecfg.pool_budget_frac)) + 1
 
         # per-layer payload bytes (transport accounting uses the real model)
@@ -132,10 +151,30 @@ class KVRMEngine:
         if cfg.family == "encdec":
             self.pools["enc_len"] = jnp.zeros((ecfg.batch,), jnp.int32)
 
+        # --- host KV tier (DESIGN.md §8) -------------------------------
+        hostb = int(ecfg.host_pool_blocks)
+        if hostb == 0 and ecfg.kv_oversubscribe > 1.0:
+            hostb = int(np.ceil((ecfg.kv_oversubscribe - 1.0)
+                                * (self.num_blocks - 1)))
+        self.host_pool_blocks = hostb if ecfg.mode != "arena" else 0
+        self._host_tier = self.host_pool_blocks > 0
+        if self._host_tier:
+            # swap moves block-indexed pool payload only; families with
+            # slot-indexed decode state (recurrent/conv/cross-KV) or
+            # far-view summaries would lose it across a preemption
+            if ecfg.mode == "full" or cfg.family not in ("dense", "vlm", "moe"):
+                raise ValueError(
+                    "host KV tier requires a block-paged family "
+                    "(dense/vlm/moe) and mode != 'full'")
+            if ecfg.mesh is not None:
+                raise ValueError("host KV tier is single-device for now "
+                                 "(sharded swap gather/scatter untested)")
+
         # --- host control plane ---
         self.sched = Scheduler(ecfg.batch)
         self.pager = (BlockPager(self.num_blocks, bt, self.block_bytes,
-                                 span_blocks=ecfg.span_blocks)
+                                 span_blocks=ecfg.span_blocks,
+                                 host_pool_blocks=self.host_pool_blocks)
                       if ecfg.mode != "arena" else None)
         self.transport = MergeStagedTransport(
             block_bytes=self.block_bytes,
@@ -294,6 +333,31 @@ class KVRMEngine:
         self._win_nblocks = np.zeros(ecfg.batch, np.int64)
         self._merging = ecfg.mode != "paged"
 
+        # --- host-tier swap machinery (DESIGN.md §8) --------------------
+        # Block-indexed pools (block axis 1) are the swap payload; the host
+        # backing store is allocated lazily on first swap-out. Gather and
+        # scatter are padded to a fixed blocks_per_seq index width so each
+        # direction compiles exactly once per pool key (padding targets
+        # scratch block 0, whose contents are masked by contract).
+        self.preemptions = 0
+        self._committed_blocks = 0
+        self._resume_pending = 0
+        self._step_touched: set = set()
+        self._host_kv: Dict[str, np.ndarray] = {}
+        self._swap_keys = [k for k, v in self.pools.items()
+                           if getattr(v, "ndim", 0) >= 2
+                           and v.shape[1] == self.num_blocks] \
+            if self._host_tier else []
+        if self._host_tier:
+            self._swap_gather_fn = jax.jit(lambda pool, idx: pool[:, idx])
+            self._swap_scatter_fn = jax.jit(
+                lambda pool, idx, data: pool.at[:, idx].set(data),
+                donate_argnums=(0,))
+        # fixed swap-transfer index width: a session can overshoot its token
+        # need by up to a placement span (reserve takes whole spans while the
+        # pool is comfortable), so the pad must cover blocks_per_seq + span
+        self._swap_pad = self.blocks_per_seq + ecfg.span_blocks
+
         # metrics
         self.metrics: List[StepMetrics] = []
         self.frames_committed = 0
@@ -327,18 +391,42 @@ class KVRMEngine:
 
     # ------------------------------------------------------------------
     def _admit(self, now: float) -> None:
-        for slot, req, sid in self.sched.admit(now):
-            self._slot_len[slot] = 0
-            self._last_token[slot] = int(req.prompt[0]) if len(req.prompt) else 0
+        kv_ok = self._admission_ok if self._host_tier else None
+        self._resume_pending = 0         # per-admit-call swap-in demand
+        for slot, req, sid in self.sched.admit(now, kv_ok=kv_ok):
             self._win_dirty[slot] = True
             self._win_base_cache[slot] = -1
             self._feed_ok[slot] = False
+            self._step_touched.add(slot)
+            if req.swap_sid >= 0 and req.swap_sid == sid:
+                # resume from the host tier (DESIGN.md §8): swap the window
+                # working set back onto device in merged groups and
+                # re-attach — generation state rides the Request, so no
+                # recompute. Blocks below the window stay host-resident.
+                s = self.pager.sessions[sid]
+                assert s.swap_state == RES_HOST
+                first_local = self._first_window_local(s, req.resume_len)
+                pairs = self.pager.swap_in_begin(sid, first_local)
+                if pairs:
+                    self.transport.account_swap(pairs, direction="in")
+                    self._swap_copy_in([p[0] for p in pairs],
+                                       [p[1] for p in pairs])
+                self.pager.swap_in_commit(sid)
+                self._slot_sid[slot] = sid
+                self._slot_len[slot] = req.resume_len
+                self._last_token[slot] = req.resume_last_token
+                req.swap_sid = -1
+                continue
+            self._slot_len[slot] = 0
+            self._last_token[slot] = int(req.prompt[0]) if len(req.prompt) else 0
             if self.pager is not None:
                 self.pager.open_session(sid)
                 self._slot_sid[slot] = sid
                 if req.prefix_of is not None and req.prefix_len >= self.bt:
                     src_sid = self._rid_to_sid.get(req.prefix_of)
-                    if src_sid is not None and src_sid in self.pager.sessions:
+                    if src_sid is not None and src_sid in self.pager.sessions \
+                            and self._alias_src_resident(src_sid,
+                                                         req.prefix_len):
                         self.pager.alias(src_sid, sid, req.prefix_len)
                         self._slot_len[slot] = self.pager.sessions[sid].length
                         req.prompt_pos = int(self._slot_len[slot])
@@ -365,6 +453,17 @@ class KVRMEngine:
                     self.pools = jax.device_put(self.pools, self._pool_sh)
 
     # ------------------------------------------------------------------
+    def _alias_src_resident(self, src_sid: int, prefix_len: int) -> bool:
+        """COW aliasing shares PHYSICAL device blocks, so the whole shared
+        prefix (including the partial-tail copy source) must be
+        device-resident. A cold-swapped or preempted source (§8) simply
+        forfeits the share — the new request prefills the prefix itself."""
+        s = self.pager.sessions[src_sid]
+        nb = prefix_len // self.bt + (1 if prefix_len % self.bt else 0)
+        return (s.swap_state == RES_DEVICE
+                and all(b > 0 for b in s.blocks[:nb]))
+
+    # ------------------------------------------------------------------
     def _window_blocks(self, slot: int) -> (List[int], int):
         """Physical blocks covering the near window + window_base (tokens)."""
         t = int(self._slot_len[slot])              # position of current token
@@ -376,10 +475,13 @@ class KVRMEngine:
             return [base + first + i for i in range(self.NB)], wb
         sid = int(self._slot_sid[slot])
         s = self.pager.sessions[sid]
-        trimmed = s.trimmed_prefix_blocks
-        wb = max(wb, trimmed * self.bt)
-        first_local = wb // self.bt - trimmed
+        first_local = self._first_window_local(s, t)
+        wb = (first_local + s.trimmed_prefix_blocks) * self.bt
         blocks = s.blocks[first_local:first_local + self.NB]
+        # residency invariant (DESIGN.md §8): the compiled executor must
+        # never observe a host-resident (sign-encoded) block
+        assert all(b > 0 for b in blocks), \
+            f"host-resident block in window: sid={sid} {blocks}"
         return blocks + [0] * (self.NB - len(blocks)), wb
 
     # ------------------------------------------------------------------
@@ -410,8 +512,10 @@ class KVRMEngine:
     # ------------------------------------------------------------------
     def _retire_slot(self, slot: int) -> None:
         """EOS retirement: return the slot + its blocks, clear caches."""
-        self.sched.requests[self.sched.slots[slot].rid].finish_wall = \
-            self.cum_wall
+        req = self.sched.requests[self.sched.slots[slot].rid]
+        req.finish_wall = self.cum_wall
+        if self._host_tier:
+            self._committed_blocks -= self._footprint_blocks(req)
         self.sched.retire(slot)
         if self.pager is not None:
             self.pager.trim(int(self._slot_sid[slot]), close=True)
@@ -426,6 +530,235 @@ class KVRMEngine:
         self._win_dirty[slot] = True
         self._win_groups[slot] = 0
         self._win_nblocks[slot] = 0
+
+    # ------------------------------------------------------------------
+    # host KV tier: swap data movement + preemption policy (DESIGN.md §8)
+    # ------------------------------------------------------------------
+    def _ensure_host_kv(self) -> None:
+        if self._host_kv or not self._swap_keys:
+            return
+        for k in self._swap_keys:
+            arr = self.pools[k]
+            shp = (self.host_pool_blocks, arr.shape[0]) + tuple(arr.shape[2:])
+            self._host_kv[k] = np.zeros(shp, arr.dtype)
+
+    def _swap_copy_out(self, dev_blocks, host_slots) -> None:
+        """Execute one swap-out transfer: ONE padded gather per pool key
+        (device -> host), then write the rows into the host backing pool.
+        Blocking readback — swap-out is a preemption/pressure event, not a
+        steady-state path."""
+        self._ensure_host_kv()
+        n = len(dev_blocks)
+        idx = np.zeros(self._swap_pad, np.int32)
+        idx[:n] = dev_blocks
+        jidx = jnp.asarray(idx)
+        for k in self._swap_keys:
+            got = np.asarray(self._swap_gather_fn(self.pools[k], jidx))
+            self._host_kv[k][host_slots] = np.moveaxis(got[:, :n], 1, 0)
+
+    def _swap_copy_in(self, host_slots, dev_blocks) -> None:
+        """Execute one swap-in transfer: ONE padded scatter per pool key
+        (host -> device). The scatter is dispatched async on the pool chain
+        (like token feedback), so it overlaps whatever the device is
+        running; the next decode step consuming the pools orders after it."""
+        self._ensure_host_kv()
+        n = len(dev_blocks)
+        idx = np.zeros(self._swap_pad, np.int32)
+        idx[:n] = dev_blocks
+        jidx = jnp.asarray(idx)
+        for k in self._swap_keys:
+            arr = self.pools[k]
+            data = np.zeros((arr.shape[0], self._swap_pad)
+                            + tuple(arr.shape[2:]), self._host_kv[k].dtype)
+            data[:, :n] = np.moveaxis(self._host_kv[k][host_slots], 0, 1)
+            self.pools[k] = self._swap_scatter_fn(arr, jidx, jnp.asarray(data))
+
+    def _first_window_local(self, s, t: int) -> int:
+        """Local block index where the near window starts for a session at
+        logical length t (same math as _window_blocks)."""
+        wb = (max(0, t + 1 - self.W) // self.bt) * self.bt
+        wb = max(wb, s.trimmed_prefix_blocks * self.bt)
+        return wb // self.bt - s.trimmed_prefix_blocks
+
+    def _footprint_blocks(self, req) -> int:
+        """Worst-case device blocks a request can reach (EOS is a fixed
+        token budget, so this is exact up to span-placement slack)."""
+        tokens = len(req.prompt) + req.gen_len + 1
+        return -(-tokens // self.bt) + self.e.span_blocks
+
+    def _admission_ok(self, req, is_resume: bool) -> bool:
+        """Watermark admission gate (DESIGN.md §8). Fresh requests are
+        admitted only while the committed worst-case footprint of all live
+        requests fits in admit_wm * device + host blocks — this is what
+        bounds host-tier demand so preemption can always find room. Resumes
+        are already committed; they additionally need their window working
+        set device-resident right now."""
+        margin = self.e.span_blocks + 1
+        if is_resume:
+            s = self.pager.sessions[req.swap_sid]
+            first_local = self._first_window_local(s, req.resume_len)
+            need = sum(1 for b in s.blocks[first_local:] if b < 0)
+            # reserve on accept: the swap-ins run only after ALL of this
+            # admit() call's gate checks, so later resumes in the same call
+            # must see earlier ones' demand or they jointly overshoot the
+            # pool and swap_in_begin raises an uncatchable MemoryError
+            if self.pager.free_blocks() < self._resume_pending + need + margin:
+                return False
+            self._resume_pending += need
+            return True
+        total_dev = self.num_blocks - 1
+        capacity = (int(total_dev * self.e.admit_watermark)
+                    + self.host_pool_blocks)
+        if self._committed_blocks + self._footprint_blocks(req) > capacity:
+            return False
+        # device headroom NOW: room for the prompt (capped at one window)
+        # plus growth slack, so a fresh admission doesn't immediately
+        # preempt what it just queued behind
+        need = min(-(-(len(req.prompt) + 1) // self.bt), self.NB)
+        if self.pager.free_blocks() < need + margin:
+            return False
+        # commit on accept (the scheduler admits immediately after a True):
+        # later candidates in the SAME admit() call must see this request's
+        # footprint or a burst could collectively overshoot the watermark
+        self._committed_blocks += self._footprint_blocks(req)
+        return True
+
+    def _cold_swap(self, target_free: int) -> None:
+        """Swap below-window blocks to the host tier until ``target_free``
+        device blocks are free: sessions with the largest cold backlog
+        first, oldest (coldest) blocks within a session first. Shared (COW)
+        and window blocks are never moved, so the compiled executor never
+        observes the difference."""
+        cands = []
+        for slot in self.sched.active_slots():
+            sid = int(self._slot_sid[slot])
+            if sid < 0 or sid not in self.pager.sessions:
+                continue
+            s = self.pager.sessions[sid]
+            fl = self._first_window_local(s, int(self._slot_len[slot]))
+            cold = sum(1 for b in s.blocks[:fl]
+                       if b > 0 and self.pager.refcount[b] == 1)
+            if cold:
+                cands.append((cold, slot, sid, fl))
+        for cold, slot, sid, fl in sorted(cands, reverse=True):
+            if self.pager.free_blocks() >= target_free:
+                return
+            try:
+                pairs = self.pager.swap_out_cold(sid, fl)
+            except MemoryError:
+                return                        # host pool full: nothing to do
+            if pairs:
+                self.transport.account_swap(pairs, direction="out")
+                self._swap_copy_out([p[0] for p in pairs],
+                                    [p[1] for p in pairs])
+
+    def _memory_pressure_pass(self) -> None:
+        """Step-start watermark check: above the high watermark, cold-swap
+        down toward the low watermark so reactive preemption stays rare."""
+        if not self._host_tier:
+            return
+        total = self.num_blocks - 1
+        if (total - self.pager.free_blocks()) / total \
+                > self.e.swap_high_watermark:
+            self._cold_swap(int(np.ceil(
+                (1.0 - self.e.swap_low_watermark) * total)))
+
+    def _swap_victim(self) -> Optional[int]:
+        """Latest-admitted swap-eligible active slot (protects the oldest
+        work, which is closest to completion); slots already assembled into
+        THIS step's descriptor are never victims — their rows reference
+        blocks the swap would free."""
+        cands = []
+        for slot in self.sched.active_slots():
+            if slot in self._step_touched:
+                continue
+            sid = int(self._slot_sid[slot])
+            if sid >= 0 and self.pager.swap_eligible(sid):
+                req = self.sched.request_at(slot)
+                cands.append((req.start_step, req.rid, slot))
+        return max(cands)[2] if cands else None
+
+    def _preempt_slot(self, slot: int) -> None:
+        """Evict a request to the host tier: drain the pipeline (its
+        sampled-token values must land before the slot state is captured),
+        swap the whole session out, and re-queue the request for resume."""
+        self.flush()
+        req = self.sched.request_at(slot)
+        sid = int(self._slot_sid[slot])
+        pairs = self.pager.swap_out_session(sid)
+        assert pairs is not None, "victim was not swap-eligible"
+        if pairs:
+            self.transport.account_swap(pairs, direction="out")
+            self._swap_copy_out([p[0] for p in pairs],
+                                [p[1] for p in pairs])
+        req.swap_sid = sid
+        req.resume_len = int(self._slot_len[slot])
+        req.resume_last_token = int(self._last_token[slot])
+        self.sched.preempt(slot)
+        self.preemptions += 1
+        self._slot_sid[slot] = -1
+        self._slot_len[slot] = 0
+        self._feed_ok[slot] = False
+        d = self._pdescr
+        d.block_table[slot, :] = 0
+        d.train_len[slot, :] = 0
+        d.window_base[slot] = 0
+        self._win_base_cache[slot] = -1
+        self._win_dirty[slot] = True
+        self._win_groups[slot] = 0
+        self._win_nblocks[slot] = 0
+
+    def _ensure_step_capacity(self) -> None:
+        """Preemption-aware scheduling pass (DESIGN.md §8), run BEFORE any
+        token is consumed or descriptor row assembled: total up the device
+        blocks this step's reservations will need (decode lookahead + prompt
+        chunks) and, if the pool can't cover them, cold-swap then preempt
+        latest-admitted victims until it can. Running it up front means a
+        victim can be ANY active slot — once assembly starts, assembled
+        slots are pinned (their descriptor rows reference their blocks)."""
+        if not self._host_tier:
+            return
+        while True:
+            need = 0
+            for slot in self.sched.active_slots():
+                sid = int(self._slot_sid[slot])
+                if sid < 0:
+                    continue
+                if self._chunked and \
+                        self.sched.chunk_remaining(slot) >= self._chunk_min:
+                    n_tok = min(self.chunk, self.sched.chunk_remaining(slot))
+                else:
+                    n_tok = 2                  # this token + lookahead
+                need += self.pager.blocks_needed(sid, n_tok)
+            if self.pager.free_blocks() >= need:
+                return
+            self._cold_swap(need)
+            if self.pager.free_blocks() >= need:
+                return
+            victim = self._swap_victim()
+            if victim is None:
+                return                         # backstop: _reserve raises
+            self._preempt_slot(victim)         # loop: recompute without it
+
+    def _reserve(self, slot: int, sid: int, n_tokens: int):
+        """pager.reserve with preemption-aware pressure relief: on device
+        exhaustion, cold-swap first, then preempt latest-admitted eligible
+        victims until the reservation fits (MemoryError only when neither
+        can free enough — e.g. host pool exhausted too). The step-start
+        capacity pass makes this a rare backstop."""
+        if not self._host_tier:
+            return self.pager.reserve(sid, n_tokens)
+        try:
+            return self.pager.reserve(sid, n_tokens)
+        except MemoryError:
+            need = self.pager.blocks_needed(sid, n_tokens)
+            self._cold_swap(need)
+            while self.pager.free_blocks() < need:
+                victim = self._swap_victim()
+                if victim is None or victim == slot:
+                    raise
+                self._preempt_slot(victim)   # may raise: host pool full
+            return self.pager.reserve(sid, n_tokens)
 
     # ------------------------------------------------------------------
     def _prefill_chunks(self) -> None:
@@ -444,6 +777,7 @@ class KVRMEngine:
             if not any_chunk:
                 cd.n_valid[:] = 0
                 any_chunk = True
+            self._step_touched.add(slot)
             toks = self.sched.consume_prompt_chunk(slot, C)
             n = len(toks)
             t0 = int(self._slot_len[slot])
@@ -454,7 +788,7 @@ class KVRMEngine:
                 woff = (idx % self.bt).astype(np.int32)
             else:
                 sid = int(self._slot_sid[slot])
-                self.pager.reserve(sid, n)
+                self._reserve(slot, sid, n)
                 wblk, woff = self.pager.append_tokens(sid, n)
             # context = the near window as seen by the chunk's FIRST query;
             # later queries only need a suffix of it (masked in-kernel)
@@ -497,7 +831,10 @@ class KVRMEngine:
         self.sched.step_idx = self.steps_run
 
         # ---- Shift: retire EOS (handled at end of prev step), admit
+        self._step_touched = set()
+        self._memory_pressure_pass()
         self._admit(now)
+        self._ensure_step_capacity()
         if self._chunked:
             self._prefill_chunks()
         active = self.sched.active_slots()
@@ -510,11 +847,14 @@ class KVRMEngine:
 
         parts = []                       # slots participating in this step
         for slot in active:
+            req = self.sched.request_at(slot)
+            if req is None:
+                continue                 # preempted mid-step by a neighbour
             if self._chunked and \
                     self.sched.chunk_remaining(slot) >= self._chunk_min:
                 continue                 # still mid-chunk: no decode this step
             parts.append(slot)
-            req = self.sched.request_at(slot)
+            self._step_touched.add(slot)
             tokens[slot] = self.sched.next_token(slot, int(self._last_token[slot]))
             t = int(self._slot_len[slot])
             descr.seq_lens[slot] = t
@@ -528,7 +868,7 @@ class KVRMEngine:
                 descr.write_offset[slot] = off
             else:
                 sid = int(self._slot_sid[slot])
-                self.pager.reserve(sid, 2)        # this token + lookahead
+                self._reserve(slot, sid, 2)       # this token + lookahead
                 blk, off = self.pager.append_token(sid)
                 descr.write_block[slot] = blk
                 descr.write_offset[slot] = off
@@ -613,7 +953,10 @@ class KVRMEngine:
         m = StepMetrics()
         self.sched.step_idx = self.steps_run
 
+        self._step_touched = set()
+        self._memory_pressure_pass()
         self._admit(now)
+        self._ensure_step_capacity()
         if self._chunked:
             self._prefill_chunks()
         active = self.sched.active_slots()
@@ -634,10 +977,13 @@ class KVRMEngine:
         parts: List[int] = []
         emits: List[tuple] = []          # (slot, req) emitting this step
         for slot in active:
+            req = self.sched.request_at(slot)
+            if req is None:
+                continue                 # preempted mid-step by a neighbour
             if self._chunked and \
                     self.sched.chunk_remaining(slot) >= self._chunk_min:
                 continue                 # still mid-chunk: no decode this step
-            req = self.sched.request_at(slot)
+            self._step_touched.add(slot)
             was_prefilling = req.prompt_pos < len(req.prompt)
             tokens[slot] = self.sched.next_token(slot, int(self._last_token[slot]))
             if not was_prefilling and req.emitted > 0 and self._feed_ok[slot]:
@@ -659,7 +1005,7 @@ class KVRMEngine:
                 d.write_offset[slot] = off
             else:
                 sid = int(self._slot_sid[slot])
-                if self.pager.reserve(sid, 2):    # this token + lookahead
+                if self._reserve(slot, sid, 2):   # this token + lookahead
                     self._win_dirty[slot] = True  # new tail block in window
                 blk, off = self.pager.append_token(sid)
                 d.write_block[slot] = blk
@@ -791,8 +1137,8 @@ class KVRMEngine:
 
     # ------------------------------------------------------------------
     def run(self, max_steps: int = 10_000, now_fn=None) -> None:
-        while (self.sched.waiting or self.sched.active_slots()) \
-                and self.steps_run < max_steps:
+        while (self.sched.waiting or self.sched.preempted
+               or self.sched.active_slots()) and self.steps_run < max_steps:
             self.step(now=now_fn() if now_fn else float("inf"))
         self.flush()
 
@@ -833,6 +1179,28 @@ class KVRMEngine:
             # axis sharded over `model`, each device holds 1/kv_shards of it —
             # reporting the total as per-device overstates pressure by the TP
             # degree.
+            # --- host KV tier + preemption (DESIGN.md §8). Byte figures are
+            # per paged layer (same basis as the window-DMA transport stats);
+            # admission-stall counters split compute-bound (no_slot) from
+            # memory-bound (kv_watermark) queueing for operators.
+            "host_pool_blocks": self.host_pool_blocks,
+            "host_blocks_used": (self.pager.host_used if self.pager else 0),
+            "host_blocks_peak": (self.pager.host_peak if self.pager else 0),
+            "preemptions": self.preemptions,
+            "swap_out_blocks": (self.pager.stats["swap_out_blocks"]
+                                if self.pager else 0),
+            "swap_in_blocks": (self.pager.stats["swap_in_blocks"]
+                               if self.pager else 0),
+            "swap_refusals": (self.pager.stats["swap_refusals"]
+                              if self.pager else 0),
+            "swap_groups": self.transport.stats.swap_groups,
+            "swap_bytes": self.transport.stats.swap_bytes,
+            "swap_out_bytes": self.transport.stats.swap_out_bytes,
+            "swap_in_bytes": self.transport.stats.swap_in_bytes,
+            "avg_swap_group_blocks": self.transport.stats.avg_swap_group_blocks,
+            "admit_blocked_no_slot": self.sched.admit_blocked["no_slot"],
+            "admit_blocked_kv_watermark":
+                self.sched.admit_blocked["kv_watermark"],
             "mesh": (None if self.mesh is None
                      else "x".join(str(self.mesh.shape[a])
                                    for a in self.mesh.axis_names)),

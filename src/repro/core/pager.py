@@ -16,15 +16,42 @@ Verbs:
   * frame()                 — seal all edits for step t into ONE atomic
     descriptor commit (shadow -> active double buffer, epoch counter;
     linearizable + idempotent under retries; O(|delta_t|) per step).
+  * swap_out / swap_in      — host-tier residency (DESIGN.md §8): move
+    cold or preempted blocks into a host backing pool and back. A
+    session's ``blocks`` list encodes per-block residency by sign:
+    entry >= 1 is a DEVICE block id, entry <= -1 is host slot
+    ``-(entry + 1)``. The compiled executor must never observe a
+    host-resident block; ``_window_blocks``/descriptor assembly only read
+    window-range entries, which swap_in restores to device first.
 
 Block 0 is scratch (never allocated): inactive slots' writes land there.
 """
 from __future__ import annotations
 
+import bisect
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
+
+# session-level residency state machine (DESIGN.md §8):
+#   DEVICE --swap_out_session--> HOST --swap_in_begin--> IN_FLIGHT
+#     ^                                                      |
+#     +----------------------swap_in_commit------------------+
+# (swap_out_cold keeps the session DEVICE: only below-window blocks move)
+RES_DEVICE = "device"
+RES_HOST = "host"
+RES_IN_FLIGHT = "in_flight"
+
+
+def host_slot_of(entry: int) -> int:
+    """Decode a sign-encoded host-resident block entry."""
+    assert entry < 0
+    return -(entry + 1)
+
+
+def host_entry_of(slot: int) -> int:
+    return -(slot + 1)
 
 
 @dataclass
@@ -35,20 +62,38 @@ class Session:
     shared_prefix_blocks: int = 0                     # aliased (COW) prefix
     cow_pending: Optional[Tuple[int, int]] = None     # (src, dst) tail copy
     trimmed_prefix_blocks: int = 0                    # far-view: summarized+trimmed
+    swap_state: str = RES_DEVICE                      # DESIGN.md §8 state machine
+
+    def device_blocks(self) -> List[int]:
+        return [b for b in self.blocks if b > 0]
+
+    def host_slots(self) -> List[int]:
+        return [host_slot_of(b) for b in self.blocks if b < 0]
 
 
 class FrameError(RuntimeError):
     pass
 
 
+class SwapError(RuntimeError):
+    """Swap refused (COW-shared blocks, wrong residency state)."""
+
+
 class BlockPager:
     def __init__(self, num_blocks: int, block_tokens: int,
                  bytes_per_block: int = 0, size_classes=(32, 8, 2, 1),
-                 span_blocks: int = 4):
+                 span_blocks: int = 4, host_pool_blocks: int = 0):
         assert num_blocks > 1
         self.num_blocks = num_blocks
         self.block_tokens = block_tokens
         self.bytes_per_block = bytes_per_block
+        # host backing tier (DESIGN.md §8): a fixed pool of host block slots
+        # that absorbs swapped-out device blocks; 0 disables the tier
+        self.host_pool_blocks = host_pool_blocks
+        self._host_free: List[int] = list(range(host_pool_blocks))
+        self.host_used = 0
+        self.host_peak = 0
+        self._swap_in_pairs: Dict[int, List[Tuple[int, int]]] = {}
         # lookahead placement granularity: sessions grow in spans of
         # `span_blocks` contiguous blocks so interleaved growth stays
         # burst-friendly (paper: BLOCKALIGN(S_{t+1}) + placement planning)
@@ -68,7 +113,10 @@ class BlockPager:
         self._last_frame: Optional[dict] = None
         # stats
         self.stats = {"reserve_ops": 0, "trim_ops": 0, "alias_ops": 0,
-                      "frames": 0, "blocks_allocated": 0, "blocks_freed": 0}
+                      "frames": 0, "blocks_allocated": 0, "blocks_freed": 0,
+                      "swap_out_blocks": 0, "swap_in_blocks": 0,
+                      "swap_out_ops": 0, "swap_in_ops": 0,
+                      "swap_refusals": 0}
 
     # ------------------------------------------------------------------
     # free-run bookkeeping (size-partitioned, O(1) amortized)
@@ -135,6 +183,12 @@ class BlockPager:
                     chosen = self._free_by_class[c][-1]
                     break
             if chosen is None:
+                # rollback the partial take: callers may catch MemoryError
+                # and retry after relieving pressure (DESIGN.md §8), so the
+                # blocks taken so far must return to the free list or the
+                # pool bleeds one run per failed reservation
+                for b in out:
+                    self._insert_run(b, 1)
                 raise MemoryError(
                     f"KV pool exhausted: want {need} more blocks, "
                     f"{self.free_blocks()} free")
@@ -150,6 +204,36 @@ class BlockPager:
         if self.refcount[b] == 0:
             self._insert_run(b, 1)
             self.stats["blocks_freed"] += 1
+
+    def _free_entry(self, e: int) -> None:
+        """Free one session block entry, device- or host-resident."""
+        if e > 0:
+            self._free_block(e)
+        else:
+            self._host_free_slot(host_slot_of(e))
+
+    # ------------------------------------------------------------------
+    # host pool slot bookkeeping
+    # ------------------------------------------------------------------
+    def _host_alloc(self, n: int) -> List[int]:
+        """Take n host slots, lowest-first (keeps swap groups mergeable:
+        the free list is sorted, so consecutive takes are usually
+        physically contiguous host slots)."""
+        if n > len(self._host_free):
+            raise MemoryError(
+                f"host KV pool exhausted: want {n} slots, "
+                f"{len(self._host_free)} free of {self.host_pool_blocks}")
+        taken, self._host_free = self._host_free[:n], self._host_free[n:]
+        self.host_used += n
+        self.host_peak = max(self.host_peak, self.host_used)
+        return taken
+
+    def _host_free_slot(self, h: int) -> None:
+        bisect.insort(self._host_free, h)
+        self.host_used -= 1
+
+    def host_free_blocks(self) -> int:
+        return len(self._host_free)
 
     # ------------------------------------------------------------------
     # verbs
@@ -189,6 +273,8 @@ class BlockPager:
         nb_full = n_tokens // self.block_tokens
         rem = n_tokens % self.block_tokens
         shared = src.blocks[:nb_full]
+        assert all(b > 0 for b in shared), \
+            "cannot alias a host-resident prefix (swap it in first)"
         self.refcount[shared] += 1
         dst.blocks = list(shared)
         dst.shared_prefix_blocks = nb_full
@@ -211,14 +297,14 @@ class BlockPager:
         freed: List[int] = []
         if close:
             for b in s.blocks:
-                self._free_block(b)
+                self._free_entry(b)
             freed = s.blocks
             s.blocks = []
             del self.sessions[sid]
         elif prefix_blocks:
             take = s.blocks[:prefix_blocks]
             for b in take:
-                self._free_block(b)
+                self._free_entry(b)
             freed = take
             s.blocks = s.blocks[prefix_blocks:]
             s.trimmed_prefix_blocks += prefix_blocks
@@ -236,7 +322,10 @@ class BlockPager:
         bi, off = divmod(local, self.block_tokens)
         assert bi < len(s.blocks), f"no capacity: sid={sid} len={s.length}"
         s.length += 1
-        return s.blocks[bi], off
+        blk = s.blocks[bi]
+        assert blk > 0, \
+            f"write targets host-resident block: sid={sid} entry={blk}"
+        return blk, off
 
     def append_tokens(self, sid: int, n: int) -> Tuple[np.ndarray, np.ndarray]:
         """Account n token writes at once (chunked prefill); returns
@@ -251,7 +340,129 @@ class BlockPager:
             f"no capacity: sid={sid} len={s.length} n={n}"
         blocks = np.asarray(s.blocks, np.int32)[bi]
         s.length += n
+        assert n == 0 or (blocks > 0).all(), \
+            f"write targets host-resident block: sid={sid}"
         return blocks.astype(np.int32), off.astype(np.int32)
+
+    # ------------------------------------------------------------------
+    # host-tier swap verbs (DESIGN.md §8)
+    # ------------------------------------------------------------------
+    def blocks_needed(self, sid: int, n_tokens: int) -> int:
+        """Device blocks a reserve(sid, n_tokens) would allocate (exact-fit
+        math; span placement may take more when the pool is comfortable)."""
+        s = self.sessions[sid]
+        cap = len(s.blocks) * self.block_tokens
+        local_len = s.length - s.trimmed_prefix_blocks * self.block_tokens
+        need_tokens = local_len + n_tokens - cap
+        return max(0, -(-need_tokens // self.block_tokens))
+
+    def swap_eligible(self, sid: int) -> bool:
+        """A session can move to the host tier only if it shares no block
+        with another session: every device block has refcount 1 and no COW
+        tail copy is pending. Aliased (COW) blocks are REFUSED — swapping
+        one side would either tear the share or need a copy-split; the
+        engine must pick another victim."""
+        s = self.sessions[sid]
+        if s.cow_pending is not None or s.swap_state != RES_DEVICE:
+            return False
+        dev = s.device_blocks()
+        return all(self.refcount[b] == 1 for b in dev)
+
+    def swap_out_cold(self, sid: int, keep_from_local: int
+                      ) -> List[Tuple[int, int]]:
+        """Move the session's blocks BELOW logical index ``keep_from_local``
+        (i.e. strictly below the near window) to the host tier, coldest
+        (oldest) first. Shared (refcount > 1) and already-host blocks are
+        skipped. The session stays DEVICE-resident: its window never
+        references the moved blocks again (the window only advances), so the
+        executor-residency invariant holds with no swap-in path needed.
+        Returns (device_block, host_slot) copy pairs for the transport."""
+        s = self.sessions[sid]
+        if s.swap_state != RES_DEVICE:
+            raise SwapError(f"sid={sid} not device-resident")
+        # never move the append tail: only FULL blocks strictly below the
+        # current write position are cold, whatever the caller asked for
+        local = s.length - s.trimmed_prefix_blocks * self.block_tokens
+        limit = min(keep_from_local, local // self.block_tokens, len(s.blocks))
+        pairs: List[Tuple[int, int]] = []
+        for i in range(limit):
+            b = s.blocks[i]
+            if b < 0 or self.refcount[b] != 1:
+                continue
+            h = self._host_alloc(1)[0]
+            pairs.append((b, h))
+            s.blocks[i] = host_entry_of(h)
+            self._free_block(b)
+        if pairs:
+            self.stats["swap_out_blocks"] += len(pairs)
+            self.stats["swap_out_ops"] += 1
+            self._edit_log.append(("swap_out", sid,
+                                   tuple(p[0] for p in pairs)))
+        return pairs
+
+    def swap_out_session(self, sid: int) -> Optional[List[Tuple[int, int]]]:
+        """Preemption swap-out: move ALL the session's device blocks to the
+        host tier and mark it HOST-resident. Returns (device_block,
+        host_slot) copy pairs, or None if the session is REFUSED (COW-shared
+        blocks — the caller must pick another victim)."""
+        if not self.swap_eligible(sid):
+            self.stats["swap_refusals"] += 1
+            return None
+        s = self.sessions[sid]
+        dev_idx = [i for i, b in enumerate(s.blocks) if b > 0]
+        hosts = self._host_alloc(len(dev_idx))
+        pairs = []
+        for i, h in zip(dev_idx, hosts):
+            b = s.blocks[i]
+            pairs.append((b, h))
+            s.blocks[i] = host_entry_of(h)
+            self._free_block(b)
+        s.swap_state = RES_HOST
+        s.shared_prefix_blocks = 0
+        self.stats["swap_out_blocks"] += len(pairs)
+        self.stats["swap_out_ops"] += 1
+        self._edit_log.append(("swap_out", sid, tuple(p[0] for p in pairs)))
+        return pairs
+
+    def swap_in_begin(self, sid: int, from_local: int
+                      ) -> List[Tuple[int, int]]:
+        """Resume phase 1: allocate device blocks for every host-resident
+        entry at logical index >= ``from_local`` (the resumed window + tail)
+        and mark the session IN_FLIGHT. Blocks strictly below the window
+        stay host-resident (the window never retreats). Returns (host_slot,
+        device_block) copy pairs; raises MemoryError when the device pool
+        cannot hold the working set (caller must gate admission first)."""
+        s = self.sessions[sid]
+        if s.swap_state != RES_HOST:
+            raise SwapError(f"sid={sid} not host-resident")
+        # the append tail must come back whatever the caller asked for:
+        # cap from_local at the current write position's block
+        local = s.length - s.trimmed_prefix_blocks * self.block_tokens
+        from_local = min(from_local, local // self.block_tokens)
+        idx = [i for i in range(from_local, len(s.blocks)) if s.blocks[i] < 0]
+        pairs: List[Tuple[int, int]] = []
+        if idx:
+            newb = self._alloc_blocks(len(idx))
+            for i, b in zip(idx, newb):
+                pairs.append((host_slot_of(s.blocks[i]), b))
+                s.blocks[i] = b
+        s.swap_state = RES_IN_FLIGHT
+        self._swap_in_pairs[sid] = pairs
+        return pairs
+
+    def swap_in_commit(self, sid: int) -> None:
+        """Resume phase 2: the copies landed on device — release the host
+        slots and mark the session DEVICE-resident again."""
+        s = self.sessions[sid]
+        if s.swap_state != RES_IN_FLIGHT:
+            raise SwapError(f"sid={sid} not in-flight")
+        pairs = self._swap_in_pairs.pop(sid, [])
+        for h, _ in pairs:
+            self._host_free_slot(h)
+        s.swap_state = RES_DEVICE
+        self.stats["swap_in_blocks"] += len(pairs)
+        self.stats["swap_in_ops"] += 1
+        self._edit_log.append(("swap_in", sid, tuple(p[1] for p in pairs)))
 
     # ------------------------------------------------------------------
     # frame commit (shadow -> active, epoch, idempotent)
@@ -297,12 +508,20 @@ class BlockPager:
                    for s in self.sessions.values())
 
     def check_invariants(self) -> None:
-        """Property-test hook: refcounts/ownership/free-list consistency."""
+        """Property-test hook: refcounts/ownership/free-list consistency,
+        plus host-tier slot accounting (DESIGN.md §8)."""
         owned = {}
+        host_owned: List[int] = []
         for sid, s in self.sessions.items():
             for i, b in enumerate(s.blocks):
+                if b < 0:
+                    host_owned.append(host_slot_of(b))
+                    continue
                 owned.setdefault(b, []).append(sid)
                 assert 0 < b < self.num_blocks
+            if s.swap_state == RES_HOST:
+                assert not s.device_blocks(), \
+                    f"host-resident sid={sid} still owns device blocks"
         for b, owners in owned.items():
             assert self.refcount[b] == len(owners), \
                 f"block {b}: refcount {self.refcount[b]} != owners {owners}"
@@ -311,3 +530,12 @@ class BlockPager:
         ref_live = int((self.refcount[1:] > 0).sum())
         assert ref_live + total_free == self.num_blocks - 1, \
             f"leak: live {ref_live} + free {total_free} != {self.num_blocks - 1}"
+        # host tier: owned slots are unique, in range, disjoint from the
+        # free list, and the used counter matches ownership exactly
+        assert len(host_owned) == len(set(host_owned)), \
+            f"host slot double-owned: {sorted(host_owned)}"
+        assert all(0 <= h < self.host_pool_blocks for h in host_owned)
+        assert not set(host_owned) & set(self._host_free), "host slot owned AND free"
+        assert self.host_used == len(host_owned), \
+            f"host leak: used {self.host_used} != owned {len(host_owned)}"
+        assert self.host_used + len(self._host_free) == self.host_pool_blocks

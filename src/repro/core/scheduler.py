@@ -31,6 +31,11 @@ class Request:
     # token budget, so retirement is host-predictable); token VALUES land in
     # ``generated`` at readback, one step later under pipelining (DESIGN.md §3)
     emitted: int = 0
+    # --- preemption / host-tier resume (DESIGN.md §8) ---
+    swap_sid: int = -1               # pager session holding swapped-out KV
+    resume_len: int = 0              # tokens in cache at preemption
+    resume_last_token: int = 0       # host token mirror for the resume step
+    preempt_count: int = 0
 
 
 @dataclass
@@ -44,10 +49,16 @@ class Scheduler:
         self.n_slots = n_slots
         self.slots = [SlotState() for _ in range(n_slots)]
         self.waiting: List[Request] = []
+        self.preempted: List[Request] = []   # resume-priority queue (§8)
         self.requests: Dict[int, Request] = {}
         self.finished: List[Request] = []
         self._next_sid = 0
         self.step_idx = 0
+        # admission-stall counters: one count per admit() call whose queue
+        # head was arrived but could not be placed, keyed by why — lets
+        # operators split compute-bound (no_slot) from memory-bound
+        # (kv_watermark) queueing in serve.py's audit
+        self.admit_blocked = {"no_slot": 0, "kv_watermark": 0}
 
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -60,24 +71,64 @@ class Scheduler:
     def active_slots(self) -> List[int]:
         return [i for i, s in enumerate(self.slots) if s.rid >= 0]
 
-    def admit(self, now: float = float("inf")) -> List[tuple]:
+    def admit(self, now: float = float("inf"), kv_ok=None) -> List[tuple]:
         """Admit waiting requests (arrival <= now) into free slots.
-        Returns [(slot, request, sid)] admissions."""
+        Returns [(slot, request, sid)] admissions.
+
+        Preempted requests resume FIRST (FIFO within the preempted queue)
+        and reuse their swapped-out pager session (``req.swap_sid``); fresh
+        requests behind a blocked resume wait with it (no overtaking — a
+        resume's working set shrinks only when others finish, so letting
+        fresh admissions in front would starve it).
+
+        ``kv_ok(req, is_resume)``, when given, is the KV watermark gate
+        (DESIGN.md §8): a request that has a slot available but fails the
+        gate is counted in ``admit_blocked['kv_watermark']``; a request
+        with no free slot counts in ``admit_blocked['no_slot']``."""
         out = []
         free = self.free_slots()
-        still = []
-        for req in self.waiting:
-            if free and req.arrival <= now:
+        blocked = False
+        for queue, is_resume in ((self.preempted, True), (self.waiting, False)):
+            still = []
+            for req in queue:
+                if blocked or req.arrival > now:
+                    still.append(req)
+                    continue
+                if not free:
+                    self.admit_blocked["no_slot"] += 1
+                    blocked = True
+                    still.append(req)
+                    continue
+                if kv_ok is not None and not kv_ok(req, is_resume):
+                    self.admit_blocked["kv_watermark"] += 1
+                    blocked = True
+                    still.append(req)
+                    continue
                 slot = free.pop(0)
-                sid = self._next_sid
-                self._next_sid += 1
+                if is_resume:
+                    sid = req.swap_sid
+                else:
+                    sid = self._next_sid
+                    self._next_sid += 1
+                    req.start_step = self.step_idx
                 self.slots[slot] = SlotState(rid=req.rid, sid=sid)
-                req.start_step = self.step_idx
                 out.append((slot, req, sid))
-            else:
-                still.append(req)
-        self.waiting = still
+            queue[:] = still
         return out
+
+    def preempt(self, slot: int) -> Request:
+        """Evict a live request from its slot into the resume queue
+        (DESIGN.md §8). The caller (engine) swaps its KV to the host tier
+        first and stamps ``swap_sid`` / ``resume_len`` /
+        ``resume_last_token``; generation state (prompt_pos, emitted,
+        generated) rides on the Request itself, so resume needs no
+        recompute."""
+        st = self.slots[slot]
+        req = self.requests[st.rid]
+        req.preempt_count += 1
+        self.preempted.append(req)
+        self.slots[slot] = SlotState()
+        return req
 
     def retire(self, slot: int) -> Request:
         st = self.slots[slot]

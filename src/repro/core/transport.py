@@ -30,6 +30,13 @@ class TransportStats:
     unmerged_groups: int = 0      # what the group count would be w/o merging
     held_descriptors: int = 0     # staged but deferred (age < delta)
     train_overflows: int = 0      # slots whose trains exceeded MT (stress)
+    # --- host-tier swap traffic (DESIGN.md §8): swaps ride the same
+    # large-copy discipline as window trains — coalesced into groups
+    # contiguous in BOTH source and destination coordinates ---
+    swap_groups: int = 0          # merged host<->device copy groups
+    swap_unmerged: int = 0        # blocks moved (group count w/o merging)
+    swap_out_bytes: int = 0       # device -> host
+    swap_in_bytes: int = 0        # host -> device
 
     @property
     def groups_per_step(self) -> float:
@@ -43,12 +50,41 @@ class TransportStats:
     def unmerged_groups_per_step(self) -> float:
         return self.unmerged_groups / max(1, self.steps)
 
+    @property
+    def swap_bytes(self) -> int:
+        return self.swap_out_bytes + self.swap_in_bytes
+
+    @property
+    def avg_swap_group_blocks(self) -> float:
+        return self.swap_unmerged / max(1, self.swap_groups)
+
 
 @dataclass
 class StagedDescriptor:
     block: int
     dst: int          # destination window slot (block index in window)
     age: int = 0      # steps held
+
+
+def merge_swap_pairs(pairs: Sequence[Tuple[int, int]]
+                     ) -> List[Tuple[int, int, int]]:
+    """Coalesce (src_block, dst_block) swap copy pairs into maximal
+    (src_start, dst_start, len) groups contiguous in BOTH coordinates —
+    the same large-copy discipline as window trains (§2), applied to
+    host<->device swap traffic (DESIGN.md §8). Pair order is preserved:
+    the pager emits swap pairs oldest-block-first and allocates host slots
+    lowest-first, so both sides are usually long runs."""
+    groups: List[Tuple[int, int, int]] = []
+    i, n = 0, len(pairs)
+    while i < n:
+        s0, d0 = pairs[i]
+        ln = 1
+        while (i + ln < n and pairs[i + ln][0] == s0 + ln
+               and pairs[i + ln][1] == d0 + ln):
+            ln += 1
+        groups.append((s0, d0, ln))
+        i += ln
+    return groups
 
 
 def merge_runs(blocks: Sequence[int]) -> List[Tuple[int, int, int]]:
@@ -83,6 +119,25 @@ class MergeStagedTransport:
         for d in descriptors:
             self._staged.append(d)
         self.stats.held_descriptors += len(descriptors)
+
+    # -- swap groups (host tier, DESIGN.md §8) ---------------------------
+    def account_swap(self, pairs: Sequence[Tuple[int, int]], *,
+                     direction: str) -> List[Tuple[int, int, int]]:
+        """Coalesce one swap transfer's copy pairs into merged groups and
+        fold them into the transport audit. ``direction`` is 'out'
+        (device -> host) or 'in' (host -> device). Returns the merged
+        (src_start, dst_start, len) groups — the copy program the engine
+        executes as ONE gather/scatter per swap event."""
+        assert direction in ("out", "in")
+        groups = merge_swap_pairs(pairs)
+        nbytes = len(pairs) * self.block_bytes
+        self.stats.swap_groups += len(groups)
+        self.stats.swap_unmerged += len(pairs)
+        if direction == "out":
+            self.stats.swap_out_bytes += nbytes
+        else:
+            self.stats.swap_in_bytes += nbytes
+        return groups
 
     # -- Reduce ----------------------------------------------------------
     def reduce(self, window_blocks: Sequence[int], *,

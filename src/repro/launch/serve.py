@@ -10,6 +10,18 @@ lanes, each lane one replicated engine whose params and KV pools shard
 M-ways over its row's `model` axis. The trace is striped round-robin over
 lanes; lanes are stepped round-robin so their (async) device work overlaps.
 
+Oversubscription (DESIGN.md §8): ``--kv-oversubscribe R`` (R > 1) or
+``--host-pool-blocks N`` enables the host KV tier — the device pool may
+be smaller than the admitted working set; bursts are absorbed by cold
+swap-out and preemption-aware scheduling below the fixed descriptor
+interface. ``audit()`` splits admission stalls into compute-bound
+(``admit_blocked_no_slot``) vs memory-bound
+(``admit_blocked_kv_watermark``) so operators can tell which resource is
+gating the queue.
+
+    PYTHONPATH=src python -m repro.launch.serve --workload replay \
+        --requests 48 --kv-oversubscribe 1.5
+
     XLA_FLAGS=--xla_force_host_platform_device_count=4 \
         PYTHONPATH=src python -m repro.launch.serve --mesh 2x2
     (when launched as __main__ the flag is set automatically for CPU runs)
@@ -102,7 +114,8 @@ def run_lanes(engines: list, reqs, *, max_steps: int = 100_000,
     while steps < max_steps:
         busy = False
         for eng in engines:
-            if eng.sched.waiting or eng.sched.active_slots():
+            if eng.sched.waiting or eng.sched.preempted \
+                    or eng.sched.active_slots():
                 eng.step(now=now_fn() if now_fn else float("inf"))
                 busy = True
         if steps == 0:
@@ -146,11 +159,26 @@ def main(argv=None):
     ap.add_argument("--mesh", default="1x1",
                     help="DxM device mesh: D data-parallel engine lanes, "
                          "M-way tensor-parallel decode per lane (DESIGN.md §4)")
+    ap.add_argument("--pool-budget", type=float, default=1.0,
+                    help="device KV pool size as a fraction of worst case")
+    ap.add_argument("--kv-oversubscribe", type=float, default=1.0,
+                    help="KV capacity ratio vs the device pool (> 1 enables "
+                         "the host tier: host = (R-1) * device blocks, "
+                         "DESIGN.md §8)")
+    ap.add_argument("--host-pool-blocks", type=int, default=0,
+                    help="explicit host KV tier size in blocks "
+                         "(overrides --kv-oversubscribe's derivation)")
     ap.add_argument("--json", action="store_true")
     args = ap.parse_args(argv)
 
+    if (args.kv_oversubscribe > 1.0 or args.host_pool_blocks > 0) \
+            and args.mesh not in ("1x1", "1X1"):
+        ap.error("the host KV tier is single-device for now: "
+                 "use --mesh 1x1 with --kv-oversubscribe/--host-pool-blocks")
     engines = build_lanes(args.arch, args.mode, args.batch, args.max_seq,
-                          args.mesh)
+                          args.mesh, pool_budget_frac=args.pool_budget,
+                          kv_oversubscribe=args.kv_oversubscribe,
+                          host_pool_blocks=args.host_pool_blocks)
     tcfg = traces.TraceConfig(n_requests=args.requests,
                               vocab=engines[0].cfg.vocab_size,
                               token_scale=args.token_scale)

@@ -1,0 +1,456 @@
+"""Host KV tier + preemption-aware scheduling (DESIGN.md §8): pager
+residency state machine and COW-refcount interaction, transport swap-group
+merging, scheduler preempt/resume + admission-stall reasons, and the
+engine-level guarantee that a preempted-and-resumed run emits bitwise
+identical tokens to an unpreempted one."""
+import jax
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.configs import get_reduced
+from repro.core.engine import EngineConfig, KVRMEngine
+from repro.core.pager import (RES_DEVICE, RES_HOST, BlockPager, host_slot_of)
+from repro.core.scheduler import Request, Scheduler
+from repro.core.transport import MergeStagedTransport, merge_swap_pairs
+from repro.models import registry
+
+
+# ---------------------------------------------------------------------------
+# pager: residency state machine + refcount interaction
+# ---------------------------------------------------------------------------
+
+def _paged(host=16, blocks=64):
+    p = BlockPager(blocks, 16, bytes_per_block=1024, span_blocks=1,
+                   host_pool_blocks=host)
+    return p
+
+
+def test_residency_roundtrip_device_host_device():
+    p = _paged()
+    p.open_session(0)
+    p.reserve(0, 64)
+    for _ in range(64):
+        p.append_token(0)
+    dev_before = list(p.sessions[0].blocks)
+    pairs = p.swap_out_session(0)
+    s = p.sessions[0]
+    assert s.swap_state == RES_HOST
+    assert [a for a, _ in pairs] == dev_before
+    assert all(b < 0 for b in s.blocks)          # sign-encoded host entries
+    assert p.host_used == 4 and p.reserved_blocks() == 0
+    p.check_invariants()
+    # swap back in (whole working set: from_local=0)
+    back = p.swap_in_begin(0, 0)
+    assert len(back) == 4
+    assert [h for h, _ in back] == [host_slot_of(e) for e in
+                                    [-(h + 1) for h, _ in back]]
+    p.swap_in_commit(0)
+    assert s.swap_state == RES_DEVICE
+    assert all(b > 0 for b in s.blocks)
+    assert p.host_used == 0 and p.reserved_blocks() == 4
+    # appending continues where it left off
+    p.reserve(0, 1)
+    blk, off = p.append_token(0)
+    assert blk > 0 and off == 0
+    p.check_invariants()
+    p.trim(0, close=True)
+    p.check_invariants()
+    assert p.reserved_blocks() == 0
+
+
+def test_swap_refused_for_cow_aliased_blocks():
+    """Swap-out of a session holding COW-shared blocks must be REFUSED
+    (not torn): both alias sides are ineligible while the share lives."""
+    p = _paged()
+    p.open_session(0)
+    p.reserve(0, 48)
+    for _ in range(48):
+        p.append_token(0)
+    p.open_session(1)
+    p.alias(0, 1, 32)                    # 2 full shared blocks
+    assert not p.swap_eligible(0)
+    assert not p.swap_eligible(1)
+    assert p.swap_out_session(0) is None
+    assert p.swap_out_session(1) is None
+    assert p.stats["swap_refusals"] == 2
+    p.check_invariants()
+    # closing the alias drops refcounts back to 1: src eligible again
+    p.trim(1, close=True)
+    assert p.swap_eligible(0)
+    assert p.swap_out_session(0) is not None
+    p.check_invariants()
+
+
+def test_cold_swap_skips_shared_and_partial_swaps_rest():
+    """swap_out_cold moves only non-shared below-window blocks; the
+    session stays device-resident and shared blocks stay put."""
+    p = _paged()
+    p.open_session(0)
+    p.reserve(0, 96)
+    for _ in range(96):
+        p.append_token(0)
+    p.open_session(1)
+    p.alias(0, 1, 16)                    # share block 0 of session 0
+    pairs = p.swap_out_cold(0, keep_from_local=3)
+    # blocks 1, 2 move; block 0 is shared (refcount 2) and is skipped
+    assert len(pairs) == 2
+    s = p.sessions[0]
+    assert s.swap_state == RES_DEVICE
+    assert s.blocks[0] > 0 and s.blocks[1] < 0 and s.blocks[2] < 0
+    assert all(b > 0 for b in s.blocks[3:])
+    p.check_invariants()
+    # idempotent: nothing cold left below 3
+    assert p.swap_out_cold(0, keep_from_local=3) == []
+
+
+def test_failed_reserve_rolls_back_partial_allocation():
+    """A reserve that exhausts the pool mid-allocation must return the
+    already-taken runs to the free list: §8 callers catch MemoryError and
+    retry after preempting, so a partial take would leak blocks."""
+    p = BlockPager(6, 8, span_blocks=1)       # 5 usable blocks
+    p.open_session(0)
+    p.reserve(0, 24)                          # 3 blocks; 2 free
+    free_before = p.free_blocks()
+    with pytest.raises(MemoryError):
+        p.reserve(0, 26 + 24)                 # needs 4 more, only 2 free
+    assert p.free_blocks() == free_before     # partial take rolled back
+    p.check_invariants()
+    assert len(p.reserve(0, 24 + 16)) == 2    # the 2 free blocks still work
+
+
+def test_host_pool_exhaustion_raises():
+    p = _paged(host=2)
+    p.open_session(0)
+    p.reserve(0, 64)
+    for _ in range(64):
+        p.append_token(0)
+    with pytest.raises(MemoryError):
+        p.swap_out_session(0)
+
+
+def test_swap_preserves_frame_edit_log():
+    p = _paged()
+    p.open_session(0)
+    p.reserve(0, 32)
+    for _ in range(32):
+        p.append_token(0)
+    p.frame()
+    p.swap_out_session(0)
+    f = p.frame()
+    assert any(e[0] == "swap_out" for e in f["edits"])
+    p.swap_in_begin(0, 0)
+    p.swap_in_commit(0)
+    f2 = p.frame()
+    assert any(e[0] == "swap_in" for e in f2["edits"])
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from(["open", "reserve", "append",
+                                           "cold", "preempt", "resume",
+                                           "trim", "frame"]),
+                          st.integers(0, 5), st.integers(1, 40)),
+                min_size=1, max_size=60))
+def test_swap_invariants_fuzz(ops):
+    """Random verb sequences over BOTH tiers preserve refcount/free-list
+    AND host-slot invariants; closing everything drains both pools."""
+    p = BlockPager(64, 8, span_blocks=1, host_pool_blocks=24)
+    live = set()
+    for op, sid, n in ops:
+        try:
+            if op == "open" and sid not in live:
+                p.open_session(sid)
+                live.add(sid)
+            elif sid in live and p.sessions[sid].swap_state != RES_DEVICE:
+                if op == "resume":
+                    p.swap_in_begin(sid, max(0, n - 35))
+                    p.swap_in_commit(sid)
+            elif op == "reserve" and sid in live:
+                p.reserve(sid, n)
+            elif op == "append" and sid in live:
+                s = p.sessions[sid]
+                if s.length < len(s.blocks) * p.block_tokens:
+                    p.append_token(sid)
+            elif op == "cold" and sid in live:
+                p.swap_out_cold(sid, min(n, len(p.sessions[sid].blocks)))
+            elif op == "preempt" and sid in live:
+                p.swap_out_session(sid)
+            elif op == "trim" and sid in live:
+                p.trim(sid, close=True)
+                live.discard(sid)
+            elif op == "frame":
+                p.frame()
+        except MemoryError:
+            pass
+        p.check_invariants()
+    for sid in list(live):
+        p.trim(sid, close=True)
+    p.check_invariants()
+    assert p.reserved_blocks() == 0 and p.host_used == 0
+
+
+# ---------------------------------------------------------------------------
+# transport: swap-group merging
+# ---------------------------------------------------------------------------
+
+def test_merge_swap_pairs_requires_both_coordinates_contiguous():
+    # contiguous in both src and dst -> one group
+    assert merge_swap_pairs([(5, 0), (6, 1), (7, 2)]) == [(5, 0, 3)]
+    # contiguous in src only -> split (dst jumps)
+    assert merge_swap_pairs([(5, 0), (6, 4)]) == [(5, 0, 1), (6, 4, 1)]
+    # contiguous in dst only -> split (src jumps)
+    assert merge_swap_pairs([(5, 0), (9, 1)]) == [(5, 0, 1), (9, 1, 1)]
+    assert merge_swap_pairs([]) == []
+
+
+def test_account_swap_directions_and_stats():
+    t = MergeStagedTransport(block_bytes=1024, merge_threshold_bytes=8192,
+                             max_hold_steps=2, max_trains=8)
+    g1 = t.account_swap([(5, 0), (6, 1), (7, 2), (11, 3)], direction="out")
+    assert [g[2] for g in g1] == [3, 1]
+    g2 = t.account_swap([(0, 9), (1, 10)], direction="in")
+    assert g2 == [(0, 9, 2)]
+    st = t.stats
+    assert st.swap_groups == 3
+    assert st.swap_unmerged == 6
+    assert st.swap_out_bytes == 4 * 1024
+    assert st.swap_in_bytes == 2 * 1024
+    assert st.swap_bytes == 6 * 1024
+    assert st.avg_swap_group_blocks == pytest.approx(2.0)
+
+
+# ---------------------------------------------------------------------------
+# scheduler: preempt/resume queue + admission-stall reasons
+# ---------------------------------------------------------------------------
+
+def _req(rid, plen=4, gen=3, arrival=0.0):
+    return Request(rid=rid, prompt=np.arange(plen, dtype=np.int32),
+                   gen_len=gen, arrival=arrival)
+
+
+def test_preempted_requests_resume_first_with_same_sid():
+    s = Scheduler(2)
+    for i in range(3):
+        s.submit(_req(i))
+    adm = s.admit()
+    assert len(adm) == 2
+    req = s.preempt(0)
+    assert req.preempt_count == 1
+    req.swap_sid = adm[0][2]             # engine stamps the swapped session
+    # resume beats the fresh rid=2 that has been waiting
+    adm2 = s.admit()
+    assert [a[1].rid for a in adm2] == [req.rid]
+    assert adm2[0][2] == req.swap_sid    # session id reused
+
+
+def test_admission_stall_reasons_split_compute_vs_memory():
+    s = Scheduler(1)
+    s.submit(_req(0))
+    s.submit(_req(1))
+    s.admit()            # rid 0 takes the only slot; rid 1 stalls (no_slot)
+    assert s.admit_blocked["no_slot"] == 1
+    s.admit()
+    assert s.admit_blocked["no_slot"] == 2
+    assert s.admit_blocked["kv_watermark"] == 0
+    s.retire(0)
+    s.admit(kv_ok=lambda req, is_resume: False)
+    assert s.admit_blocked["kv_watermark"] == 1
+    assert s.free_slots() == [0]         # still free: gate refused
+    adm = s.admit(kv_ok=lambda req, is_resume: True)
+    assert len(adm) == 1
+
+
+def test_kv_gate_blocks_fresh_behind_blocked_resume():
+    """No overtaking: a fresh request must not jump a blocked resume."""
+    s = Scheduler(2)
+    s.submit(_req(0))
+    (slot, req0, sid0), = s.admit()
+    req0.swap_sid = sid0
+    s.preempt(slot)
+    s.submit(_req(1))
+    adm = s.admit(kv_ok=lambda req, is_resume: not is_resume)
+    assert adm == []                     # resume blocked -> fresh waits too
+    assert s.admit_blocked["kv_watermark"] == 1
+
+
+# ---------------------------------------------------------------------------
+# engine: preempt -> resume round-trip is bitwise identical
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def dense_setup():
+    cfg = get_reduced("qwen2.5-32b")
+    params = registry.init_params(jax.random.PRNGKey(7), cfg)
+    return cfg, params
+
+
+def _uniform_reqs(vocab, n=6):
+    # uniform lengths: concurrent sessions cross block boundaries on the
+    # same step — the demand spike cold swap cannot absorb (forces
+    # preemption once the device pool is oversubscribed)
+    rng = np.random.default_rng(1)
+    return [Request(rid=i, prompt=rng.integers(0, vocab, size=8)
+                    .astype(np.int32), gen_len=48) for i in range(n)]
+
+
+@pytest.mark.parametrize("depth", [0, 1])
+def test_preempt_resume_tokens_bitwise_identical(dense_setup, depth):
+    cfg, params = dense_setup
+    ample = KVRMEngine(cfg, params, EngineConfig(
+        mode="paged_merge", batch=4, max_seq=64, block_tokens=8,
+        near_window=32, pipeline_depth=depth))
+    for r in _uniform_reqs(cfg.vocab_size):
+        ample.submit(r)
+    ample.run(max_steps=1000)
+    t_ample = {r.rid: list(r.generated) for r in ample.sched.finished}
+    assert len(t_ample) == 6
+
+    tight = KVRMEngine(cfg, params, EngineConfig(
+        mode="paged_merge", batch=4, max_seq=64, block_tokens=8,
+        near_window=32, pipeline_depth=depth,
+        pool_budget_frac=0.1, host_pool_blocks=40))
+    for r in _uniform_reqs(cfg.vocab_size):
+        tight.submit(r)
+    tight.run(max_steps=3000)
+    t_tight = {r.rid: list(r.generated) for r in tight.sched.finished}
+
+    a = tight.audit()
+    assert tight.num_blocks < ample.num_blocks // 2   # truly oversubscribed
+    assert a["preemptions"] >= 1, a
+    assert a["swap_in_blocks"] >= 1
+    assert a["swap_out_blocks"] >= a["swap_in_blocks"]
+    assert a["host_blocks_peak"] >= 1
+    assert a["single_commit_per_step"]
+    assert a["compilations"] in (-1, 1)
+    # the headline guarantee: preempt -> swap-out -> resume -> swap-in
+    # changed NOTHING about any request's token stream
+    assert t_tight == t_ample
+    tight.pager.check_invariants()
+    assert tight.pager.reserved_blocks() == 0         # EOS returned all
+    assert tight.pager.host_used == 0
+
+
+def test_sync_and_pipelined_oversubscribed_audits_match(dense_setup):
+    """Preemption decisions are structural (free blocks vs need), so the
+    depth-0 and depth-1 paths preempt/swap on identical timelines."""
+    cfg, params = dense_setup
+    audits = []
+    for depth in (0, 1):
+        eng = KVRMEngine(cfg, params, EngineConfig(
+            mode="paged_merge", batch=4, max_seq=64, block_tokens=8,
+            near_window=32, pipeline_depth=depth,
+            pool_budget_frac=0.1, host_pool_blocks=40))
+        for r in _uniform_reqs(cfg.vocab_size):
+            eng.submit(r)
+        eng.run(max_steps=3000)
+        audits.append((eng.steps_run, eng.audit()))
+    (s0, a0), (s1, a1) = audits
+    assert s0 == s1
+    for key in ("preemptions", "swap_out_blocks", "swap_in_blocks",
+                "swap_groups", "host_blocks_peak", "frames_committed"):
+        assert a0[key] == a1[key], key
+
+
+def test_executor_never_observes_host_resident_block(dense_setup):
+    """Every committed block table entry during an oversubscribed run is a
+    device block id (>= 0): host residency is sign-encoded, so a negative
+    entry in the descriptor would be the invariant violation."""
+    cfg, params = dense_setup
+    eng = KVRMEngine(cfg, params, EngineConfig(
+        mode="paged_merge", batch=4, max_seq=64, block_tokens=8,
+        near_window=32, pool_budget_frac=0.1, host_pool_blocks=40))
+    for r in _uniform_reqs(cfg.vocab_size):
+        eng.submit(r)
+    steps = 0
+    while (eng.sched.waiting or eng.sched.preempted
+           or eng.sched.active_slots()) and steps < 3000:
+        eng.step()
+        d = eng._pdescr
+        assert (d.block_table >= 0).all()
+        assert (d.write_block >= 0).all()
+        steps += 1
+    eng.flush()
+    assert eng.audit()["preemptions"] >= 1
+
+
+def test_engine_audit_exposes_admission_reasons(dense_setup):
+    cfg, params = dense_setup
+    eng = KVRMEngine(cfg, params, EngineConfig(
+        mode="paged_merge", batch=2, max_seq=64, block_tokens=8,
+        near_window=32, pool_budget_frac=0.1, host_pool_blocks=40))
+    rng = np.random.default_rng(3)
+    for i in range(8):
+        eng.submit(Request(rid=i, prompt=rng.integers(0, 100, size=6)
+                           .astype(np.int32), gen_len=40))
+    eng.run(max_steps=3000)
+    a = eng.audit()
+    assert len(eng.sched.finished) == 8
+    # with 8 requests on 2 slots, both stall reasons must be observable
+    assert a["admit_blocked_no_slot"] > 0
+    assert "admit_blocked_kv_watermark" in a
+    assert a["host_pool_blocks"] == 40
+
+
+def test_resume_gate_accounts_same_call_pending(dense_setup):
+    """Two resumes admitted by the same admit() call must not jointly
+    overshoot the device pool: the gate reserves blocks on accept."""
+    cfg, params = dense_setup
+    eng = KVRMEngine(cfg, params, EngineConfig(
+        mode="paged_merge", batch=4, max_seq=64, block_tokens=8,
+        near_window=32, pool_budget_frac=0.1, host_pool_blocks=40))
+    reqs = []
+    for sid in (0, 1):
+        eng.pager.open_session(sid)
+        eng.pager.reserve(sid, 24)
+        for _ in range(24):
+            eng.pager.append_token(sid)
+        assert eng.pager.swap_out_session(sid) is not None
+        r = Request(rid=sid, prompt=np.zeros(4, np.int32), gen_len=8)
+        r.swap_sid, r.resume_len = sid, 24
+        reqs.append(r)
+    eng._resume_pending = 0
+    free = eng.pager.free_blocks()            # 10 of the 11-block pool
+    assert eng._admission_ok(reqs[0], True)   # needs 3 + margin 5 <= 10
+    # second resume must see the first's 3 pending blocks: 3+3+5 > 10
+    assert not eng._admission_ok(reqs[1], True)
+    assert eng.pager.free_blocks() == free    # gate itself allocates nothing
+
+
+def test_alias_skipped_when_source_prefix_swapped(dense_setup):
+    """Prefix aliasing shares physical device blocks; a cold-swapped source
+    prefix must forfeit the share (full prefill), not crash admission."""
+    cfg, params = dense_setup
+    rng = np.random.default_rng(8)
+    shared = rng.integers(0, 100, size=16).astype(np.int32)
+    eng = KVRMEngine(cfg, params, EngineConfig(
+        mode="paged_merge", batch=4, max_seq=64, block_tokens=8,
+        near_window=16, span_blocks=1, host_pool_blocks=16))
+    eng.submit(Request(rid=0, prompt=shared, gen_len=24))
+    for _ in range(30):                       # run rid=0 past its prefix
+        eng.step()
+    src_sid = int(eng._slot_sid[0])
+    s = eng.pager.sessions[src_sid]
+    fl = eng._first_window_local(s, int(eng._slot_len[0]))
+    assert eng.pager.swap_out_cold(src_sid, fl), "prefix should be cold"
+    assert s.blocks[0] < 0                    # shared block now host-resident
+    eng.submit(Request(rid=1, prompt=np.concatenate([shared, shared[:4]]),
+                       gen_len=4, prefix_of=0, prefix_len=16))
+    eng.run(max_steps=300)                    # no crash; alias was skipped
+    assert len(eng.sched.finished) == 2
+    r1 = next(r for r in eng.sched.finished if r.rid == 1)
+    assert len(r1.generated) == 4
+
+
+def test_host_tier_rejects_unsupported_configs(dense_setup):
+    cfg, params = dense_setup
+    with pytest.raises(ValueError):
+        KVRMEngine(cfg, params, EngineConfig(
+            mode="full", batch=2, max_seq=128, near_window=32,
+            block_tokens=8, host_pool_blocks=8))
+    hyb = get_reduced("zamba2-7b")
+    hparams = registry.init_params(jax.random.PRNGKey(0), hyb)
+    with pytest.raises(ValueError):
+        KVRMEngine(hyb, hparams, EngineConfig(
+            mode="paged_merge", batch=2, max_seq=64, block_tokens=8,
+            kv_oversubscribe=1.5))
