@@ -1,0 +1,116 @@
+"""Shared-prefix KV reuse via the radix prefix cache (DESIGN.md §9).
+
+Replays a shared-system-prompt trace (``traces.shared_prefix_workload``:
+a few distinct system prompts, unique user suffixes, chat-length
+generations) twice per pipeline depth: once cold (prefix cache disabled —
+every request re-prefills its full prompt) and once warm (cache enabled —
+admissions COW-alias the committed prefix blocks and skip the covered
+prefill chunks). The warm run must emit BITWISE-IDENTICAL tokens per
+request, spend >= 2x fewer prefill-executor steps, and deliver higher
+tokens/s; the correctness fields (``token_divergence``,
+``alloc_failures``) are hard-failed by CI's diff_json gate.
+
+Reported per row: tokens/s, prefill-executor steps, hit rate, tokens
+served from cache, COW tail copies (own transport group kind), cache
+occupancy/evictions — all folded into the ``run.py --json`` artifact and
+recorded engine audits.
+"""
+import numpy as np
+
+from benchmarks.common import engine, print_rows, record_audit, row, \
+    run_workload, smoke_scale
+from repro.data import traces
+
+
+def _tokens(eng):
+    return {r.rid: list(r.generated) for r in eng.sched.finished}
+
+
+def _mk_reqs(n):
+    # 20-block system prompts (3 tenants) + ~8-token unique suffixes:
+    # prefill dominates the cold run, which is exactly the regime the
+    # prefix cache targets. All arrivals at t=0 keeps admission order
+    # structural (slot availability), so hit counts are deterministic.
+    tcfg = traces.TraceConfig(n_requests=n, vocab=256, seed=23,
+                              shared_prefix_len=160, n_prefixes=3,
+                              prompt_mean=8, gen_mean=18, window_s=0.0)
+    reqs = traces.shared_prefix_workload(tcfg)
+    for r in reqs:
+        r.arrival = 0.0
+    return reqs
+
+
+def run():
+    rows = []
+    n = max(12, int(32 * smoke_scale()))
+    kw = dict(batch=4, max_seq=256, near_window=128, block_tokens=8,
+              prefill_chunk=16)
+
+    def _run_pair(depth):
+        cold = engine("paged_merge", pipeline_depth=depth, **kw)
+        run_workload(cold, _mk_reqs(n))
+        warm = engine("paged_merge", pipeline_depth=depth,
+                      prefix_cache=True, prefix_cache_blocks=96, **kw)
+        run_workload(warm, _mk_reqs(n))
+        return cold, warm
+
+    for depth in (0, 1):
+        # a MemoryError in either run raises out of run(): run.py records
+        # the module under "failed", which the diff_json gate hard-fails —
+        # so a completed pair IS the alloc_failures=0 evidence
+        cold, warm = _run_pair(depth)
+        t_cold = _tokens(cold)
+        a_cold = cold.audit()
+        lat = cold.latency_stats()
+        rows.append(row(f"prefix_reuse/cold_depth{depth}",
+                        lat["mean_ms"] * 1e3,
+                        tok_s=cold.throughput(), step_p99_ms=lat["p99_ms"],
+                        prefill_steps=a_cold["prefill_chunks_run"],
+                        steps=cold.steps_run,
+                        finished=len(cold.sched.finished)))
+        record_audit(f"prefix_reuse/cold_depth{depth}", a_cold)
+
+        t_warm = _tokens(warm)
+        diverged = sum(1 for rid, toks in t_warm.items()
+                       if t_cold.get(rid) != toks)
+        a = warm.audit()
+        lat = warm.latency_stats()
+        hits, misses = a["prefix_hits"], a["prefix_misses"]
+        rows.append(row(
+            f"prefix_reuse/warm_depth{depth}", lat["mean_ms"] * 1e3,
+            tok_s=warm.throughput(), step_p99_ms=lat["p99_ms"],
+            prefill_steps=a["prefill_chunks_run"],
+            prefill_steps_cold=a_cold["prefill_chunks_run"],
+            steps=warm.steps_run,
+            hit_rate=hits / max(1, hits + misses),
+            prefix_hits=hits, prefix_misses=misses,
+            prefix_tokens_reused=a["prefix_tokens_reused"],
+            prefix_cached_blocks=a["prefix_cached_blocks"],
+            prefix_evicted_blocks=a["prefix_evicted_blocks"],
+            cow_copies=a["cow_copies"], cow_bytes=a["cow_bytes"],
+            # measured, not asserted-by-construction: a request that never
+            # finished means an allocation dead-ended somewhere
+            alloc_failures=n - len(warm.sched.finished),
+            token_divergence=diverged,
+            finished=len(warm.sched.finished)))
+        record_audit(f"prefix_reuse/warm_depth{depth}", a)
+        # the §9 contract, asserted per depth: bitwise-identical output,
+        # >= 2x fewer prefill-executor steps, faster end to end
+        assert diverged == 0, \
+            f"{diverged} requests diverged with the prefix cache on"
+        assert hits >= 1, "shared-prefix trace produced no cache hits"
+        assert 2 * a["prefill_chunks_run"] <= a_cold["prefill_chunks_run"], \
+            (a["prefill_chunks_run"], a_cold["prefill_chunks_run"])
+        assert warm.steps_run < cold.steps_run
+        # wall-clock assert: the warm run does strictly less work for the
+        # same emissions, but shared-CI timing is noisy — one re-measure
+        # of the pair before declaring a perf regression
+        if not warm.throughput() > cold.throughput():
+            cold, warm = _run_pair(depth)
+            assert warm.throughput() > cold.throughput(), \
+                (warm.throughput(), cold.throughput())
+    return rows
+
+
+if __name__ == "__main__":
+    print_rows(run())

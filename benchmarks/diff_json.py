@@ -1,9 +1,20 @@
-"""Perf-trajectory diff: compare two aggregated bench JSONs (run.py --json)
-and WARN on regressions of key metrics. Never fails the build — CPU CI
-timing is noisy; the warnings are a review signal, the committed
-BENCH_PR<n>.json sequence is the record.
+"""Perf-trajectory diff + correctness gate over aggregated bench JSONs
+(run.py --json).
 
-    python -m benchmarks.diff_json --old BENCH_PR1.json --new BENCH_PR2.json
+Two verdict tiers (CI uses both in one invocation):
+
+* **Correctness fields** (``CORRECTNESS_METRICS``) are HARD-FAILED: any
+  nonzero ``token_divergence`` or ``alloc_failures`` row in the NEW
+  artifact exits nonzero. These are absolute invariants of the runtime
+  (oversubscribed replay and prefix-cache reuse must be bitwise exact and
+  allocation-clean) — timing noise cannot excuse them, so the multi-device
+  CI job gates on this.
+* **Perf metrics** (``KEY_METRICS``) stay WARN-ONLY vs the committed
+  BENCH_PR<n>.json — CPU CI timing is noisy; the warnings are a review
+  signal, the committed sequence is the record.
+
+    python -m benchmarks.diff_json --old BENCH_PR3.json --new BENCH_PR4.json
+    python -m benchmarks.diff_json --new bench_pr_ci.json   # gate only
 """
 import argparse
 import json
@@ -22,6 +33,31 @@ KEY_METRICS = {
     "dma_groups": "down",
 }
 TOLERANCE = 0.15     # relative slack before a change counts as a regression
+
+# absolute correctness invariants: nonzero in the new artifact = build FAIL
+CORRECTNESS_METRICS = ("token_divergence", "alloc_failures")
+
+
+def correctness_failures(new: dict) -> list:
+    """Scan every row of the new artifact for nonzero correctness fields."""
+    errors = []
+    for bench, rows in new.get("benches", new).items():
+        if not isinstance(rows, dict):
+            continue
+        for rname, rvals in rows.items():
+            if not isinstance(rvals, dict):
+                continue
+            for metric in CORRECTNESS_METRICS:
+                try:
+                    v = float(rvals.get(metric, 0))
+                except (TypeError, ValueError):
+                    continue
+                if v != 0:
+                    errors.append(f"FAIL {bench}/{rname}.{metric} = {v:g} "
+                                  f"(must be 0)")
+    for mod in new.get("failed", []):
+        errors.append(f"FAIL bench module raised: {mod}")
+    return errors
 
 
 def diff(old: dict, new: dict) -> list:
@@ -56,23 +92,41 @@ def diff(old: dict, new: dict) -> list:
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--old", required=True)
+    ap.add_argument("--old", default=None,
+                    help="committed artifact to diff against (perf metrics, "
+                         "warn-only); omit to run the correctness gate alone")
     ap.add_argument("--new", required=True)
     args = ap.parse_args(argv)
     try:
-        with open(args.old) as f:
-            old = json.load(f)
         with open(args.new) as f:
             new = json.load(f)
     except (OSError, json.JSONDecodeError) as e:
-        print(f"# diff skipped: {e}", file=sys.stderr)
-        return 0
-    warnings = diff(old, new)
+        # fail CLOSED: an unreadable fresh artifact means the correctness
+        # gate cannot run — a truncated bench_pr_ci.json must not go green
+        print(f"FAIL cannot read --new artifact ({e}): "
+              f"correctness gate did not run", file=sys.stderr)
+        return 2
+
+    # hard gate first: correctness fields in the new artifact
+    errors = correctness_failures(new)
+    for e in errors:
+        print(e)
+
+    # perf diff: warn-only, and only when an old artifact is readable
+    warnings = []
+    if args.old is not None:
+        try:
+            with open(args.old) as f:
+                old = json.load(f)
+            warnings = diff(old, new)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"# perf diff skipped: {e}", file=sys.stderr)
     for w in warnings:
         print(w)
-    print(f"# {len(warnings)} regression warning(s) "
-          f"({args.old} -> {args.new}); warn-only, not failing")
-    return 0
+    print(f"# {len(warnings)} regression warning(s) (warn-only), "
+          f"{len(errors)} correctness failure(s) (hard gate) "
+          f"[{args.old or '-'} -> {args.new}]")
+    return 1 if errors else 0
 
 
 if __name__ == "__main__":

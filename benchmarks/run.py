@@ -24,6 +24,7 @@ MODULES = [
     ("mixed_length", "benchmarks.bench_mixed_length"),
     ("trace_replay", "benchmarks.bench_trace_replay"),
     ("oversubscribe", "benchmarks.bench_oversubscribe"),
+    ("prefix_reuse", "benchmarks.bench_prefix_reuse"),
     ("predictable", "benchmarks.bench_predictable"),
     ("transport_audit", "benchmarks.bench_transport_audit"),
     ("farview_quality", "benchmarks.bench_farview_quality"),

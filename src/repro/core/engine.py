@@ -25,6 +25,12 @@ Hot-path structure (DESIGN.md §3):
     chunked prefill executor (compiled once) at C tokens per engine step
     instead of one; the final prompt token always goes through the decode
     step so sampled-token semantics are unchanged.
+  * ``prefix_cache`` (DESIGN.md §9) indexes committed full prompt blocks
+    in a radix tree keyed on token-id block chunks; admissions that match
+    COW-alias the cached chain (unaligned tails get an audited device-side
+    COW copy) and skip the covered prefill entirely — a cached system
+    prompt costs zero prefill steps. Eviction is refcount-aware LRU over
+    unpinned leaves, preferring unshared (immediately freeable) blocks.
   * ``mesh`` (DESIGN.md §4) runs the SAME executors SPMD over a device mesh:
     params shard by the name-based TP rules, KV pools shard their kv-head
     axis over ``model``, and both executors compile ONCE with explicit
@@ -52,7 +58,8 @@ from repro.core.descriptor import (FrameDescriptor, chunk_flat_size,
                                    unflatten_chunk_descriptor,
                                    unflatten_descriptor)
 from repro.core.farview import FarViewPolicy
-from repro.core.pager import RES_DEVICE, RES_HOST, BlockPager
+from repro.core.pager import (RES_DEVICE, RES_HOST, BlockPager, SwapRefused)
+from repro.core.prefix_cache import PrefixCache
 from repro.core.scheduler import Request, Scheduler
 from repro.core.transport import MergeStagedTransport, StagedDescriptor, merge_runs
 from repro.models import registry
@@ -87,6 +94,11 @@ class EngineConfig:
     swap_low_watermark: float = 0.80   # cold swap-out down to this fill
     admit_watermark: float = 0.85    # admission caps committed KV at
     #                                  admit_wm * device + host blocks
+    # --- automatic shared-prefix KV reuse (radix prefix cache, §9) ---
+    prefix_cache: bool = False       # index committed prompt blocks and
+    #                                  COW-alias matches at admission
+    prefix_cache_blocks: int = 0     # cache pin budget (blocks);
+    #                                  0 = auto (half the device pool)
 
 
 @dataclass
@@ -170,6 +182,21 @@ class KVRMEngine:
                 raise ValueError("host KV tier is single-device for now "
                                  "(sharded swap gather/scatter untested)")
 
+        # --- radix prefix cache (DESIGN.md §9): shared-prefix KV reuse --
+        # same scope rules as the host tier: block aliasing moves paged KV
+        # only, so families with extra slot-indexed decode state (and the
+        # far view's summaries) cannot skip prefill by block sharing
+        self._prefix_on = ecfg.prefix_cache
+        if self._prefix_on:
+            if ecfg.mode == "arena" or self.farview \
+                    or cfg.family not in ("dense", "vlm", "moe"):
+                raise ValueError(
+                    "prefix cache requires a paged mode (not 'arena' or "
+                    "'full') and a block-paged family (dense/vlm/moe)")
+            if ecfg.mesh is not None:
+                raise ValueError("prefix cache is single-device for now "
+                                 "(sharded COW tail copy untested)")
+
         # --- host control plane ---
         self.sched = Scheduler(ecfg.batch)
         self.pager = (BlockPager(self.num_blocks, bt, self.block_bytes,
@@ -182,6 +209,17 @@ class KVRMEngine:
             max_hold_steps=cfg.serving.max_hold_steps, max_trains=self.MT)
         self.fv = (FarViewPolicy(ecfg.batch, self.max_chunks, self.cap,
                                  ecfg.sv_chunk, bt) if self.farview else None)
+
+        # --- prefix cache state (DESIGN.md §9) --------------------------
+        self.prefix_cache = None
+        if self._prefix_on:
+            cap_blocks = ecfg.prefix_cache_blocks or \
+                max(self.NB, (self.num_blocks - 1) // 2)
+            self.prefix_cache = PrefixCache(self.pager, bt, cap_blocks)
+        self._pinned_paths: Dict[int, list] = {}   # rid -> matched path
+        self._indexed_rids: set = set()            # prompts already indexed
+        self._cow_pairs_step: List = []            # COW tail copies to run
+        self._cow_origin: Dict[int, int] = {}      # this round: dst -> src
 
         # --- SPMD placement (DESIGN.md §4) ------------------------------
         # Params shard by the name-based TP rules; paged KV pools shard the
@@ -344,14 +382,27 @@ class KVRMEngine:
         self._resume_pending = 0
         self._step_touched: set = set()
         self._host_kv: Dict[str, np.ndarray] = {}
-        self._swap_keys = [k for k, v in self.pools.items()
-                           if getattr(v, "ndim", 0) >= 2
-                           and v.shape[1] == self.num_blocks] \
-            if self._host_tier else []
+        # block-indexed pool keys (block axis 1): the payload both the
+        # host-tier swaps and the §9 COW tail copies move
+        self._block_pool_keys = [k for k, v in self.pools.items()
+                                 if getattr(v, "ndim", 0) >= 2
+                                 and v.shape[1] == self.num_blocks] \
+            if self.pager is not None else []
+        self._swap_keys = self._block_pool_keys if self._host_tier else []
         if self._host_tier:
             self._swap_gather_fn = jax.jit(lambda pool, idx: pool[:, idx])
             self._swap_scatter_fn = jax.jit(
                 lambda pool, idx, data: pool.at[:, idx].set(data),
+                donate_argnums=(0,))
+        # COW tail copy executor (§9): one padded block->block copy per
+        # pool key, dispatched async on the donated pool chain (like
+        # swap-in); padding copies scratch block 0 onto itself. Built for
+        # ANY paged single-device engine — the legacy prefix_of hint path
+        # needs it too whenever the shared prefix is not block-aligned.
+        self._cow_copy_fn = None
+        if self.pager is not None and self.mesh is None:
+            self._cow_copy_fn = jax.jit(
+                lambda pool, src, dst: pool.at[:, dst].set(pool[:, src]),
                 donate_argnums=(0,))
         # fixed swap-transfer index width: a session can overshoot its token
         # need by up to a placement span (reserve takes whole spans while the
@@ -416,20 +467,41 @@ class KVRMEngine:
                 self._slot_len[slot] = req.resume_len
                 self._last_token[slot] = req.resume_last_token
                 req.swap_sid = -1
+                if self.prefix_cache is not None:
+                    # re-index (§9): the preempt dropped this prompt from
+                    # the cache (swap eligibility required refcount 1);
+                    # its device-resident full prompt blocks are committed
+                    # KV again, so future admissions can share them
+                    self._prefix_index(slot, req)
                 continue
             self._slot_len[slot] = 0
             self._last_token[slot] = int(req.prompt[0]) if len(req.prompt) else 0
             if self.pager is not None:
                 self.pager.open_session(sid)
                 self._slot_sid[slot] = sid
-                if req.prefix_of is not None and req.prefix_len >= self.bt:
+                aliased = False
+                if self.prefix_cache is not None:
+                    # §9: automatic reuse — radix match over committed
+                    # prompt blocks, COW alias, skip the covered prefill
+                    aliased = self._prefix_admit(slot, req, sid)
+                if not aliased and req.prefix_of is not None \
+                        and req.prefix_len >= self.bt:
+                    # legacy explicit hint path (trace-provided prefix_of)
                     src_sid = self._rid_to_sid.get(req.prefix_of)
                     if src_sid is not None and src_sid in self.pager.sessions \
                             and self._alias_src_resident(src_sid,
                                                          req.prefix_len):
-                        self.pager.alias(src_sid, sid, req.prefix_len)
-                        self._slot_len[slot] = self.pager.sessions[sid].length
-                        req.prompt_pos = int(self._slot_len[slot])
+                        n_share = req.prefix_len
+                        if self._cow_copy_fn is None:
+                            # no COW executor (sharded engine): share full
+                            # blocks only, prefill the unaligned tail
+                            n_share = (n_share // self.bt) * self.bt
+                        if n_share >= self.bt:
+                            self.pager.alias(src_sid, sid, n_share)
+                            self._capture_cow(sid)
+                            self._slot_len[slot] = \
+                                self.pager.sessions[sid].length
+                            req.prompt_pos = int(self._slot_len[slot])
                 self._rid_to_sid[req.rid] = sid
             if self.fv is not None:
                 self.fv.reset_slot(slot)
@@ -451,16 +523,138 @@ class KVRMEngine:
                     # the (unsharded) encode path hands back single-device
                     # pools; restore the executor's expected placement
                     self.pools = jax.device_put(self.pools, self._pool_sh)
+        if self._cow_pairs_step:
+            # materialize this admit round's COW tails: ONE batched padded
+            # copy per pool key, audited as its own group kind (§9)
+            pairs, self._cow_pairs_step = self._cow_pairs_step, []
+            self._cow_origin.clear()
+            self.transport.account_cow(pairs)
+            self._cow_copy(pairs)
+
+    # ------------------------------------------------------------------
+    # prefix cache: admission match / prompt indexing / COW copies (§9)
+    # ------------------------------------------------------------------
+    def _capture_cow(self, sid: int) -> None:
+        """Queue a fresh alias's pending COW tail copy for this admit
+        round's batched execution (frame() would silently consume it).
+
+        Chained same-round aliases (C aliases B which aliased A in the
+        SAME round): C's copy source is B's dst block, which the batched
+        scatter has not materialized yet — the gather reads the pre-update
+        pool. COW copies are whole-block, so copying from the transitive
+        ORIGIN block is exact; resolve the chain host-side."""
+        cp = self.pager.sessions[sid].cow_pending
+        if cp is not None and self._cow_copy_fn is not None:
+            src, dst = cp
+            src = self._cow_origin.get(src, src)
+            self._cow_origin[dst] = src
+            self._cow_pairs_step.append((src, dst))
+
+    def _prefix_admit(self, slot: int, req, sid: int) -> bool:
+        """Consult the radix index for req's prompt; on a usable match,
+        COW-alias the matched chain and skip the covered prefill. At least
+        the LAST prompt token always goes through the decode step (sampled
+        -token semantics), so the alias covers min(match, len(prompt)-1)."""
+        pc = self.prefix_cache
+        m = pc.match(req.prompt)
+        n_alias = min(m.tokens, max(0, len(req.prompt) - 1))
+        if n_alias < self.bt:
+            if len(req.prompt) > self.bt:
+                pc.miss()                  # an indexable prompt found nothing
+            self._reconcile_commit(req, 0)
+            return False
+        need = -(-n_alias // self.bt)
+        try:
+            self.pager.alias_blocks(sid, m.blocks[:need], n_alias)
+        except (MemoryError, SwapRefused):
+            # pool too tight for the COW tail block (or an impossible
+            # host-resident cache block): forfeit the share — the normal
+            # prefill path has its own pressure relief
+            pc.miss()
+            self._reconcile_commit(req, 0)
+            return False
+        self._capture_cow(sid)
+        pc.hit(m.nodes[:need], n_alias)
+        self._pinned_paths[req.rid] = m.nodes[:need]
+        s = self.pager.sessions[sid]
+        self._slot_len[slot] = s.length
+        req.prompt_pos = int(s.length)
+        self._reconcile_commit(req, (n_alias // self.bt))
+        return True
+
+    def _reconcile_commit(self, req, shared_blocks: int) -> None:
+        """Re-stamp the §8 admission charge with the share that actually
+        happened: the kv_ok gate discounted its own (earlier) cache peek,
+        but the alias at admit time can cover fewer blocks — or none, when
+        the COW tail allocation fails — and an under-charged request would
+        let later bursts overshoot the watermark the host pool was sized
+        by."""
+        if not self._host_tier:
+            return
+        want = max(1, self._footprint_blocks(req) - shared_blocks)
+        self._committed_blocks += want - req.committed_blocks
+        req.committed_blocks = want
+
+    def _prefix_index(self, slot: int, req) -> None:
+        """Index a fully-prefilled prompt's committed full blocks. Called
+        at the prefill->decode transition and again after a resume (§9
+        re-index). Only the device-resident prefix is indexable: blocks
+        cold-swapped to the host tier (or left there by a resume) stop the
+        chain — the index must stay root-contiguous."""
+        if req.rid in self._indexed_rids \
+                or req.prompt_pos < len(req.prompt):
+            return
+        sid = int(self._slot_sid[slot])
+        s = self.pager.sessions.get(sid)
+        if s is None or s.trimmed_prefix_blocks:
+            return
+        npb = len(req.prompt) // self.bt
+        dev = 0
+        while dev < npb and dev < len(s.blocks) and s.blocks[dev] > 0:
+            dev += 1
+        if dev < 1:
+            return
+        self._indexed_rids.add(req.rid)
+        self.prefix_cache.insert(np.asarray(req.prompt[:dev * self.bt]),
+                                 s.blocks[:dev])
+
+    def _prefix_release(self, req) -> None:
+        """Unpin the request's matched path (retire/preempt); the cached
+        blocks themselves stay indexed for the next match."""
+        if self.prefix_cache is None:
+            return
+        path = self._pinned_paths.pop(req.rid, None)
+        if path:
+            self.prefix_cache.unpin_path(path)
+
+    def _cow_copy(self, pairs) -> None:
+        """Execute COW tail copies: one padded (src -> dst) block copy per
+        block-indexed pool key, async on the donated pool chain — the next
+        step consuming the pools orders after it, exactly like swap-in."""
+        P = max(1, self.e.batch)
+        for i0 in range(0, len(pairs), P):
+            chunk = pairs[i0:i0 + P]
+            src = np.zeros(P, np.int32)
+            dst = np.zeros(P, np.int32)
+            src[:len(chunk)] = [p[0] for p in chunk]
+            dst[:len(chunk)] = [p[1] for p in chunk]
+            jsrc, jdst = jnp.asarray(src), jnp.asarray(dst)
+            for k in self._block_pool_keys:
+                self.pools[k] = self._cow_copy_fn(self.pools[k], jsrc, jdst)
 
     # ------------------------------------------------------------------
     def _alias_src_resident(self, src_sid: int, prefix_len: int) -> bool:
-        """COW aliasing shares PHYSICAL device blocks, so the whole shared
-        prefix (including the partial-tail copy source) must be
-        device-resident. A cold-swapped or preempted source (§8) simply
-        forfeits the share — the new request prefills the prefix itself."""
+        """COW aliasing shares PHYSICAL device blocks, so the source must
+        have actually COMMITTED the prefix (a source admitted in the same
+        step has written nothing yet — sharing its unwritten blocks would
+        read uninitialized KV) and the whole shared prefix (including the
+        partial-tail copy source) must be device-resident. A too-young,
+        cold-swapped or preempted source (§8) simply forfeits the share —
+        the new request prefills the prefix itself."""
         s = self.pager.sessions[src_sid]
         nb = prefix_len // self.bt + (1 if prefix_len % self.bt else 0)
         return (s.swap_state == RES_DEVICE
+                and s.length >= prefix_len and len(s.blocks) >= nb
                 and all(b > 0 for b in s.blocks[:nb]))
 
     # ------------------------------------------------------------------
@@ -515,7 +709,11 @@ class KVRMEngine:
         req = self.sched.requests[self.sched.slots[slot].rid]
         req.finish_wall = self.cum_wall
         if self._host_tier:
-            self._committed_blocks -= self._footprint_blocks(req)
+            # release exactly what the admission gate charged (§9: the
+            # charge was reduced by the aliased prefix at admission time)
+            self._committed_blocks -= req.committed_blocks
+        self._prefix_release(req)
+        self._indexed_rids.discard(req.rid)      # rid never returns
         self.sched.retire(slot)
         if self.pager is not None:
             self.pager.trim(int(self._slot_sid[slot]), close=True)
@@ -609,18 +807,31 @@ class KVRMEngine:
         total_dev = self.num_blocks - 1
         capacity = (int(total_dev * self.e.admit_watermark)
                     + self.host_pool_blocks)
-        if self._committed_blocks + self._footprint_blocks(req) > capacity:
+        # §9: blocks served from the prefix cache are SHARED — they are
+        # already resident and charged (once) to the cache, so the gate
+        # peeks the radix index and discounts them from both the committed
+        # footprint and the immediate device headroom the prompt needs
+        shared_tokens = 0
+        if self.prefix_cache is not None:
+            m = self.prefix_cache.match(req.prompt)
+            shared_tokens = (min(m.tokens, max(0, len(req.prompt) - 1))
+                             // self.bt) * self.bt
+        footprint = max(1, self._footprint_blocks(req)
+                        - shared_tokens // self.bt)
+        if self._committed_blocks + footprint > capacity:
             return False
-        # device headroom NOW: room for the prompt (capped at one window)
-        # plus growth slack, so a fresh admission doesn't immediately
-        # preempt what it just queued behind
-        need = min(-(-(len(req.prompt) + 1) // self.bt), self.NB)
+        # device headroom NOW: room for the (un-shared part of the) prompt
+        # (capped at one window) plus growth slack, so a fresh admission
+        # doesn't immediately preempt what it just queued behind
+        need = min(-(-(len(req.prompt) + 1 - shared_tokens) // self.bt),
+                   self.NB)
         if self.pager.free_blocks() < need + margin:
             return False
         # commit on accept (the scheduler admits immediately after a True):
         # later candidates in the SAME admit() call must see this request's
         # footprint or a burst could collectively overshoot the watermark
-        self._committed_blocks += self._footprint_blocks(req)
+        self._committed_blocks += footprint
+        req.committed_blocks = footprint
         return True
 
     def _cold_swap(self, target_free: int) -> None:
@@ -694,6 +905,14 @@ class KVRMEngine:
         req.swap_sid = sid
         req.resume_len = int(self._slot_len[slot])
         req.resume_last_token = int(self._last_token[slot])
+        # drop the prompt from the prefix index bookkeeping so the resume
+        # path re-indexes what comes back device-resident (§9), and
+        # re-stamp the admission charge at FULL footprint: swap-out gave
+        # the session exclusive ownership of every block (prefix included,
+        # now in host slots), so the shared-prefix discount no longer holds
+        self._prefix_release(req)
+        self._indexed_rids.discard(req.rid)      # resume re-indexes
+        self._reconcile_commit(req, 0)
         self.sched.preempt(slot)
         self.preemptions += 1
         self._slot_sid[slot] = -1
@@ -735,8 +954,22 @@ class KVRMEngine:
             self._cold_swap(need)
             if self.pager.free_blocks() >= need:
                 return
+            # §9 pressure ladder: before preempting live work, reclaim
+            # prefix-cache blocks — unpinned unshared cold leaves free
+            # device blocks outright
+            if self.prefix_cache is not None:
+                self.prefix_cache.evict(need - self.pager.free_blocks())
+                if self.pager.free_blocks() >= need:
+                    return
             victim = self._swap_victim()
             if victim is None:
+                # no swap-eligible victim: cached shares may be what holds
+                # every session's refcounts above 1 — flush the index
+                # (sessions keep their own refs; only reuse is lost) and
+                # retry the whole ladder once more
+                if self.prefix_cache is not None \
+                        and self.prefix_cache.flush_for_pressure():
+                    continue
                 return                         # backstop: _reserve raises
             self._preempt_slot(victim)         # loop: recompute without it
 
@@ -746,16 +979,23 @@ class KVRMEngine:
         victims until the reservation fits (MemoryError only when neither
         can free enough — e.g. host pool exhausted too). The step-start
         capacity pass makes this a rare backstop."""
-        if not self._host_tier:
+        if not self._host_tier and self.prefix_cache is None:
             return self.pager.reserve(sid, n_tokens)
         try:
             return self.pager.reserve(sid, n_tokens)
         except MemoryError:
             need = self.pager.blocks_needed(sid, n_tokens)
-            self._cold_swap(need)
+            if self._host_tier:
+                self._cold_swap(need)
+            if self.prefix_cache is not None \
+                    and self.pager.free_blocks() < need:
+                self.prefix_cache.evict(need - self.pager.free_blocks())
             while self.pager.free_blocks() < need:
-                victim = self._swap_victim()
+                victim = self._swap_victim() if self._host_tier else None
                 if victim is None or victim == slot:
+                    if self.prefix_cache is not None \
+                            and self.prefix_cache.flush_for_pressure():
+                        continue             # un-shared: retry victims/free
                     raise
                 self._preempt_slot(victim)   # may raise: host pool full
             return self.pager.reserve(sid, n_tokens)
@@ -855,7 +1095,11 @@ class KVRMEngine:
                 continue                 # still mid-chunk: no decode this step
             parts.append(slot)
             self._step_touched.add(slot)
+            was_prefilling = self.sched.is_prefilling(slot)
             tokens[slot] = self.sched.next_token(slot, int(self._last_token[slot]))
+            if self.prefix_cache is not None and was_prefilling \
+                    and req.prompt_pos >= len(req.prompt):
+                self._prefix_index(slot, req)    # prompt committed: index
             t = int(self._slot_len[slot])
             descr.seq_lens[slot] = t
             descr.slot_active[slot] = 1
@@ -996,6 +1240,8 @@ class KVRMEngine:
             parts.append(slot)
             if req.prompt_pos >= len(req.prompt):
                 emits.append((slot, req))
+                if self.prefix_cache is not None and was_prefilling:
+                    self._prefix_index(slot, req)    # prompt committed
 
             t = int(self._slot_len[slot])
             if self.e.mode == "arena":
@@ -1201,6 +1447,23 @@ class KVRMEngine:
             "admit_blocked_no_slot": self.sched.admit_blocked["no_slot"],
             "admit_blocked_kv_watermark":
                 self.sched.admit_blocked["kv_watermark"],
+            # --- radix prefix cache (DESIGN.md §9): shared-prefix reuse.
+            # COW tail copies are their own transport group kind so prefix
+            # traffic is auditable apart from window trains and swaps.
+            "prefix_cache": self._prefix_on,
+            "prefix_hits": (self.prefix_cache.stats["hits"]
+                            if self.prefix_cache else 0),
+            "prefix_misses": (self.prefix_cache.stats["misses"]
+                              if self.prefix_cache else 0),
+            "prefix_tokens_reused": (self.prefix_cache.stats["tokens_reused"]
+                                     if self.prefix_cache else 0),
+            "prefix_cached_blocks": (self.prefix_cache.blocks_cached
+                                     if self.prefix_cache else 0),
+            "prefix_evicted_blocks": (self.prefix_cache.stats["evicted_blocks"]
+                                      if self.prefix_cache else 0),
+            "cow_copies": self.transport.stats.cow_blocks,
+            "cow_groups": self.transport.stats.cow_groups,
+            "cow_bytes": self.transport.stats.cow_bytes,
             "mesh": (None if self.mesh is None
                      else "x".join(str(self.mesh.shape[a])
                                    for a in self.mesh.axis_names)),

@@ -12,6 +12,12 @@ Verbs:
     placement keeps a session's blocks physically contiguous -> long trains).
   * alias(src, dst, n_tok)  — copy-on-write prefix sharing (refcounts; the
     partial tail block is marked for a device-side COW copy).
+  * alias_blocks(dst, blocks, n_tok) — alias() from an explicit committed
+    block chain (the §9 prefix cache's hit path); both raise the typed
+    SwapRefused over a host-resident prefix.
+  * retain_block / release_block — external (non-session) references: the
+    prefix cache (DESIGN.md §9) keeps committed prompt blocks alive past
+    their session's EOS; external refs refuse swap like COW shares.
   * trim(sid, ...)          — reclaim EOS / cold blocks to the free pool.
   * frame()                 — seal all edits for step t into ONE atomic
     descriptor commit (shadow -> active double buffer, epoch counter;
@@ -79,6 +85,13 @@ class SwapError(RuntimeError):
     """Swap refused (COW-shared blocks, wrong residency state)."""
 
 
+class SwapRefused(SwapError):
+    """An operation needed device-resident blocks but found host-resident
+    ones (e.g. alias() over a cold-swapped prefix). Callers either pick a
+    different source or swap the prefix in first — this is a policy
+    decision, not a crash, hence a typed error instead of an assert."""
+
+
 class BlockPager:
     def __init__(self, num_blocks: int, block_tokens: int,
                  bytes_per_block: int = 0, size_classes=(32, 8, 2, 1),
@@ -106,6 +119,11 @@ class BlockPager:
         self._insert_run(1, num_blocks - 1)           # block 0 = scratch
         self.refcount = np.zeros(num_blocks, np.int32)
         self.sessions: Dict[int, Session] = {}
+        # external (non-session) references: the prefix cache retains
+        # committed immutable blocks so they survive their session's EOS.
+        # refcount counts session owners + external retains; invariants
+        # check both (DESIGN.md §9)
+        self.external_refs: Dict[int, int] = {}
         # frame double buffer
         self.epoch = 0
         self._edit_log: List[Tuple] = []              # edits staged this frame
@@ -266,28 +284,74 @@ class BlockPager:
         return newb
 
     def alias(self, src_sid: int, dst_sid: int, n_tokens: int) -> None:
-        """Share the first n_tokens of src with dst (COW)."""
+        """Share the first n_tokens of src with dst (COW). Raises
+        ``SwapRefused`` when the source prefix (including the partial-tail
+        copy source) is host-resident — the caller must either swap the
+        source in first or forfeit the share and prefill."""
         src = self.sessions[src_sid]
+        nb = -(-n_tokens // self.block_tokens)
+        self.alias_blocks(dst_sid, src.blocks[:nb], n_tokens)
+
+    def alias_blocks(self, dst_sid: int, blocks: List[int],
+                     n_tokens: int) -> None:
+        """Share the first n_tokens stored in an explicit committed block
+        chain with a fresh session (COW). This is alias() decoupled from a
+        source SESSION: the prefix cache (DESIGN.md §9) holds block chains
+        of retired sessions via ``retain_block``, and new admissions alias
+        straight from the index. ``blocks`` must cover n_tokens (the block
+        holding the partial tail included, when n_tokens is unaligned)."""
         dst = self.sessions[dst_sid]
         assert dst.length == 0 and not dst.blocks, "alias onto fresh session"
         nb_full = n_tokens // self.block_tokens
         rem = n_tokens % self.block_tokens
-        shared = src.blocks[:nb_full]
-        assert all(b > 0 for b in shared), \
-            "cannot alias a host-resident prefix (swap it in first)"
+        need = nb_full + (1 if rem else 0)
+        assert len(blocks) >= need, \
+            f"alias chain too short: {len(blocks)} blocks for {n_tokens} tokens"
+        if not all(b > 0 for b in blocks[:need]):
+            raise SwapRefused(
+                f"cannot alias a host-resident prefix (dst={dst_sid}, "
+                f"n_tokens={n_tokens}): swap it in first")
+        shared = blocks[:nb_full]
+        own = None
+        if rem:
+            # partial tail: dst gets its own block; device must copy its
+            # contents (COW). Allocate BEFORE touching dst so an exhausted
+            # pool leaves the fresh session untouched (atomic failure —
+            # callers fall back to a plain prefill).
+            own = self._alloc_blocks(1, hint=shared[-1] if shared else None)
         self.refcount[shared] += 1
         dst.blocks = list(shared)
         dst.shared_prefix_blocks = nb_full
         dst.length = nb_full * self.block_tokens
         if rem:
-            # partial tail: dst gets its own block; device must copy contents
-            tail_src = src.blocks[nb_full]
-            own = self._alloc_blocks(1, hint=dst.blocks[-1] if dst.blocks else None)
             dst.blocks.append(own[0])
-            dst.cow_pending = (tail_src, own[0])
+            dst.cow_pending = (blocks[nb_full], own[0])
             dst.length = n_tokens
-        self._edit_log.append(("alias", src_sid, dst_sid, n_tokens))
+        self._edit_log.append(("alias", dst_sid, tuple(blocks[:need]), n_tokens))
         self.stats["alias_ops"] += 1
+
+    # ------------------------------------------------------------------
+    # external block references (prefix cache, DESIGN.md §9)
+    # ------------------------------------------------------------------
+    def retain_block(self, b: int) -> None:
+        """Take an external (non-session) reference on a committed block so
+        it survives its owning session's trim/close. External refs make a
+        block ineligible for swap exactly like a COW share (refcount > 1)."""
+        assert 0 < b < self.num_blocks and self.refcount[b] > 0, \
+            f"retain of dead block {b}"
+        self.refcount[b] += 1
+        self.external_refs[b] = self.external_refs.get(b, 0) + 1
+
+    def release_block(self, b: int) -> None:
+        """Drop one external reference; frees the block when it was the
+        last owner (session- or cache-side)."""
+        n = self.external_refs.get(b, 0)
+        assert n > 0, f"release of unretained block {b}"
+        if n == 1:
+            del self.external_refs[b]
+        else:
+            self.external_refs[b] = n - 1
+        self._free_block(b)
 
     def trim(self, sid: int, *, close: bool = False,
              prefix_blocks: int = 0) -> List[int]:
@@ -522,9 +586,14 @@ class BlockPager:
             if s.swap_state == RES_HOST:
                 assert not s.device_blocks(), \
                     f"host-resident sid={sid} still owns device blocks"
+        for b, ext in self.external_refs.items():
+            assert ext > 0 and 0 < b < self.num_blocks
+            owned.setdefault(b, [])
         for b, owners in owned.items():
-            assert self.refcount[b] == len(owners), \
-                f"block {b}: refcount {self.refcount[b]} != owners {owners}"
+            want = len(owners) + self.external_refs.get(b, 0)
+            assert self.refcount[b] == want, \
+                f"block {b}: refcount {self.refcount[b]} != owners {owners} " \
+                f"+ ext {self.external_refs.get(b, 0)}"
             assert b not in self._run_of, f"block {b} owned AND free"
         total_free = self.free_blocks()
         ref_live = int((self.refcount[1:] > 0).sum())

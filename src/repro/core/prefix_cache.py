@@ -1,0 +1,240 @@
+"""Radix prefix cache — automatic shared-prefix KV reuse (DESIGN.md §9).
+
+Index over COMMITTED, IMMUTABLE KV blocks: the key space is the token-id
+content of full blocks (``block_tokens`` tokens per edge), arranged as a
+radix tree so prompts sharing a prefix share index nodes exactly as they
+share physical blocks. One node = one block; a root-to-node path spells
+the token prefix whose KV the node's block holds.
+
+Interaction with the pager:
+  * The cache takes an EXTERNAL reference (``BlockPager.retain_block``) on
+    every indexed block, so a cached prefix survives its originating
+    session's EOS. External refs behave like COW shares everywhere else:
+    refcount > 1 makes a block ineligible for host-tier swap, so cached
+    (and therefore aliased) blocks are never swap candidates.
+  * On a match the engine aliases the matched chain into the fresh session
+    via ``BlockPager.alias_blocks`` (COW): full blocks are shared, an
+    unaligned tail gets a device-side copy-on-write block copy, accounted
+    by the transport as its own group kind (``account_cow``).
+  * Blocks held only by the cache (refcount 1) are DEVICE-resident by
+    construction — the swap verbs only walk sessions — so a hit can never
+    trip ``SwapRefused``.
+
+Eviction is refcount-aware LRU over LEAVES (interior nodes anchor longer
+cached prefixes and are only exposed once their subtree drains):
+  * ``pins`` — pin-on-match: every node on a matched path is pinned for
+    the lifetime of the matching request; pinned nodes are skipped unless
+    the engine explicitly flushes for memory pressure (a flush only loses
+    reuse — sessions hold their own block references).
+  * Unshared leaves first (refcount 1: only the cache holds the block, so
+    dropping it returns a device block NOW), then coldest ``last_use``.
+    Shared leaves free nothing immediately but un-share their block,
+    re-enabling host-tier swap of the owning session.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.pager import BlockPager
+
+
+class _Node:
+    __slots__ = ("key", "block", "parent", "children", "pins", "last_use")
+
+    def __init__(self, key: Tuple[int, ...], block: int,
+                 parent: Optional["_Node"]):
+        self.key = key                      # block_tokens token ids (edge)
+        self.block = block                  # retained device block id
+        self.parent = parent
+        self.children: Dict[Tuple[int, ...], "_Node"] = {}
+        self.pins = 0
+        self.last_use = 0
+
+
+class PrefixMatch:
+    """Result of a (pure) longest-prefix lookup: the matched node path,
+    their physical blocks, and the covered token count (block-aligned)."""
+    __slots__ = ("nodes", "blocks", "tokens")
+
+    def __init__(self, nodes: List[_Node], block_tokens: int):
+        self.nodes = nodes
+        self.blocks = [n.block for n in nodes]
+        self.tokens = len(nodes) * block_tokens
+
+
+class PrefixCache:
+    def __init__(self, pager: BlockPager, block_tokens: int, max_blocks: int):
+        assert max_blocks >= 1
+        self.pager = pager
+        self.bt = block_tokens
+        self.max_blocks = max_blocks
+        self._root = _Node((), 0, None)
+        self._clock = 0
+        self.blocks_cached = 0
+        self.stats = {"hits": 0, "misses": 0, "tokens_reused": 0,
+                      "insertions": 0, "inserted_blocks": 0,
+                      "evicted_blocks": 0, "pressure_flushes": 0}
+
+    # ------------------------------------------------------------------
+    def _chunks(self, tokens: Sequence[int], n_blocks: int
+                ) -> List[Tuple[int, ...]]:
+        t = np.asarray(tokens)
+        return [tuple(int(x) for x in t[i * self.bt:(i + 1) * self.bt])
+                for i in range(n_blocks)]
+
+    def _touch(self, node: _Node) -> None:
+        self._clock += 1
+        node.last_use = self._clock
+
+    # ------------------------------------------------------------------
+    # lookup / pin
+    # ------------------------------------------------------------------
+    def match(self, prompt: Sequence[int]) -> PrefixMatch:
+        """Longest indexed prefix of ``prompt`` in full blocks. Pure: no
+        stats, no pins, no LRU touch — safe for the admission watermark
+        gate to peek before the request is actually placed. Chunks are
+        keyed lazily so a root miss on a long queued prompt (re-gated
+        every step while blocked) costs one chunk, not the whole prompt."""
+        nodes: List[_Node] = []
+        node = self._root
+        t = np.asarray(prompt)
+        for i in range(len(t) // self.bt):
+            key = tuple(int(x) for x in t[i * self.bt:(i + 1) * self.bt])
+            child = node.children.get(key)
+            if child is None:
+                break
+            nodes.append(child)
+            node = child
+        return PrefixMatch(nodes, self.bt)
+
+    def hit(self, nodes: List[_Node], tokens_reused: int) -> None:
+        """Account a served match and pin its path for the lifetime of the
+        matching request (release with ``unpin_path`` at retire/preempt)."""
+        self.stats["hits"] += 1
+        self.stats["tokens_reused"] += tokens_reused
+        self.pin_path(nodes)
+
+    def miss(self) -> None:
+        self.stats["misses"] += 1
+
+    def pin_path(self, nodes: List[_Node]) -> None:
+        for n in nodes:
+            n.pins += 1
+            self._touch(n)
+
+    def unpin_path(self, nodes: List[_Node]) -> None:
+        for n in nodes:                     # resilient to flushed nodes
+            n.pins = max(0, n.pins - 1)
+
+    # ------------------------------------------------------------------
+    # insert
+    # ------------------------------------------------------------------
+    def insert(self, tokens: Sequence[int], blocks: Sequence[int]) -> int:
+        """Index a committed full-block prefix: ``blocks[i]`` holds the KV
+        of ``tokens[i*bt:(i+1)*bt]``. Shared (already-indexed) chunks are
+        deduplicated — the EXISTING block stays canonical and the new
+        duplicate is not retained. Returns the number of newly retained
+        blocks (may stop early when the cap cannot be freed)."""
+        n_blocks = min(len(blocks), len(tokens) // self.bt)
+        if n_blocks < 1:
+            return 0
+        path: List[_Node] = []
+        node = self._root
+        added = 0
+        try:
+            for key, b in zip(self._chunks(tokens, n_blocks),
+                              blocks[:n_blocks]):
+                child = node.children.get(key)
+                if child is None:
+                    if self.blocks_cached >= self.max_blocks and \
+                            self.evict(self.blocks_cached
+                                       - self.max_blocks + 1) == 0:
+                        break               # cap reached, nothing evictable
+                    self.pager.retain_block(b)
+                    child = _Node(key, b, node)
+                    node.children[key] = child
+                    self.blocks_cached += 1
+                    added += 1
+                self._touch(child)
+                path.append(child)
+                child.pins += 1             # shield the in-progress path
+                node = child
+        finally:
+            for n in path:
+                n.pins -= 1
+        if added:
+            self.stats["insertions"] += 1
+            self.stats["inserted_blocks"] += added
+        return added
+
+    # ------------------------------------------------------------------
+    # eviction (refcount-aware LRU over leaves)
+    # ------------------------------------------------------------------
+    def _leaves(self, include_pinned: bool) -> List[_Node]:
+        out: List[_Node] = []
+        stack = list(self._root.children.values())
+        while stack:
+            n = stack.pop()
+            if n.children:
+                stack.extend(n.children.values())
+            elif include_pinned or n.pins == 0:
+                out.append(n)
+        return out
+
+    def _drop(self, node: _Node) -> None:
+        node.parent.children.pop(node.key)
+        node.parent = None                  # detached (unpin stays safe)
+        self.pager.release_block(node.block)
+        self.blocks_cached -= 1
+        self.stats["evicted_blocks"] += 1
+
+    def evict(self, max_drop: int, *, include_pinned: bool = False) -> int:
+        """Drop up to ``max_drop`` leaf blocks, unshared-coldest-first.
+        Dropping an unshared (refcount-1) leaf frees a device block
+        immediately; dropping a shared leaf un-shares it (host-tier swap
+        eligibility) and releases cache budget. Returns blocks dropped."""
+        dropped = 0
+        while dropped < max_drop:
+            # batch per tree level: drop the whole sorted leaf set before
+            # re-collecting (re-collection only exposes parents), keeping
+            # a full flush O(nodes * depth) instead of O(nodes^2 log n)
+            leaves = self._leaves(include_pinned)
+            if not leaves:
+                break
+            leaves.sort(key=lambda n: (bool(self.pager.refcount[n.block] > 1),
+                                       n.last_use))
+            for n in leaves[:max_drop - dropped]:
+                self._drop(n)
+                dropped += 1
+        return dropped
+
+    def flush_for_pressure(self) -> int:
+        """Memory-pressure backstop: drop EVERYTHING, pinned paths included
+        (live sessions keep their own block references — only future reuse
+        is lost). Un-shares every cached block so the engine's preemption
+        victim search can run unobstructed. Returns blocks dropped."""
+        dropped = self.evict(1 << 30, include_pinned=True)
+        if dropped:
+            self.stats["pressure_flushes"] += 1
+        return dropped
+
+    # ------------------------------------------------------------------
+    def check_invariants(self) -> None:
+        """Property-test hook: tree block accounting matches the pager's
+        external-ref table; every cached block is device-resident & live."""
+        seen: List[int] = []
+        stack = list(self._root.children.values())
+        while stack:
+            n = stack.pop()
+            seen.append(n.block)
+            assert n.pins >= 0
+            assert 0 < n.block < self.pager.num_blocks
+            assert self.pager.refcount[n.block] >= 1, \
+                f"cached block {n.block} is dead"
+            assert self.pager.external_refs.get(n.block, 0) >= 1, \
+                f"cached block {n.block} lost its external ref"
+            stack.extend(n.children.values())
+        assert len(seen) == len(set(seen)), "block double-indexed"
+        assert self.blocks_cached == len(seen)

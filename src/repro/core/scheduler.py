@@ -36,6 +36,13 @@ class Request:
     resume_len: int = 0              # tokens in cache at preemption
     resume_last_token: int = 0       # host token mirror for the resume step
     preempt_count: int = 0
+    # worst-case device blocks the admission watermark charged for this
+    # request (DESIGN.md §8/§9). Stamped by the engine's kv_ok gate so
+    # retirement releases EXACTLY what admission committed — with prefix
+    # aliasing (§9) the charge is reduced by the shared blocks, which a
+    # recompute at retire time could no longer reproduce (the cache may
+    # have changed since).
+    committed_blocks: int = 0
 
 
 @dataclass

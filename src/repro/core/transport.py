@@ -37,6 +37,13 @@ class TransportStats:
     swap_unmerged: int = 0        # blocks moved (group count w/o merging)
     swap_out_bytes: int = 0       # device -> host
     swap_in_bytes: int = 0        # host -> device
+    # --- COW tail copies (prefix aliasing, DESIGN.md §9): device-side
+    # block copies materializing the partial tail of an aliased prefix —
+    # their own group kind so prefix-reuse traffic is auditable apart
+    # from window trains and swaps ---
+    cow_groups: int = 0           # merged copy groups executed
+    cow_blocks: int = 0           # blocks copied (1 per unaligned alias)
+    cow_bytes: int = 0
 
     @property
     def groups_per_step(self) -> float:
@@ -138,6 +145,18 @@ class MergeStagedTransport:
         else:
             self.stats.swap_in_bytes += nbytes
         return groups
+
+    # -- COW tail copies (prefix cache, DESIGN.md §9) --------------------
+    def account_cow(self, pairs: Sequence[Tuple[int, int]]) -> None:
+        """Fold one admit round's COW tail copies ((src_block, dst_block),
+        device -> device) into the audit as their own group kind. The
+        engine executes the pairs as ONE batched padded copy per pool key;
+        ``cow_groups`` additionally records how many contiguous-in-both-
+        coordinates runs the pairs form (same layout-quality audit basis
+        as ``swap_groups``), not a separately executed schedule."""
+        self.stats.cow_groups += len(merge_swap_pairs(list(pairs)))
+        self.stats.cow_blocks += len(pairs)
+        self.stats.cow_bytes += len(pairs) * self.block_bytes
 
     # -- Reduce ----------------------------------------------------------
     def reduce(self, window_blocks: Sequence[int], *,

@@ -29,6 +29,8 @@ class TraceConfig:
     seed: int = 0
     shared_prefix_frac: float = 0.0
     shared_prefix_len: int = 16
+    n_prefixes: int = 4            # distinct system prompts (shared_prefix_*)
+    gen_mean: int = 32             # shared-prefix family: mean decode length
 
 
 def _heavy_tail_lengths(rng, n, scale):
@@ -90,6 +92,33 @@ def azure_like_replay(cfg: TraceConfig) -> List[Request]:
         prompt = rng.integers(0, cfg.vocab, size=int(plen[i])).astype(np.int32)
         reqs.append(Request(rid=i, prompt=prompt, gen_len=int(gen[i]),
                             arrival=float(arrivals[i])))
+    return reqs
+
+
+def shared_prefix_workload(cfg: TraceConfig) -> List[Request]:
+    """Multi-turn / shared-system-prompt traffic (DESIGN.md §9): requests
+    draw one of ``n_prefixes`` distinct system prompts of
+    ``shared_prefix_len`` tokens and append a short unique user suffix
+    (Poisson around ``prompt_mean``); generation lengths are modest
+    (chat turns, Poisson around ``gen_mean``). No ``prefix_of`` hints are
+    set — the sharing is implicit in the token streams, exactly what the
+    engine's radix prefix cache discovers on its own. Arrivals are spread
+    uniformly over ``window_s`` so later requests can hit prefixes
+    committed by earlier ones (a t=0 burst would all miss a cold cache)."""
+    rng = np.random.default_rng(cfg.seed)
+    prefixes = [rng.integers(0, cfg.vocab, size=cfg.shared_prefix_len)
+                .astype(np.int32) for _ in range(max(1, cfg.n_prefixes))]
+    arrivals = np.sort(rng.uniform(0, cfg.window_s, size=cfg.n_requests))
+    reqs = []
+    for i in range(cfg.n_requests):
+        pfx = prefixes[int(rng.integers(len(prefixes)))]
+        suffix = rng.integers(
+            0, cfg.vocab,
+            size=max(1, int(rng.poisson(cfg.prompt_mean * cfg.token_scale)))
+        ).astype(np.int32)
+        gen = max(2, int(rng.poisson(cfg.gen_mean * cfg.token_scale)))
+        reqs.append(Request(rid=i, prompt=np.concatenate([pfx, suffix]),
+                            gen_len=gen, arrival=float(arrivals[i])))
     return reqs
 
 

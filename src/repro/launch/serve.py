@@ -22,6 +22,16 @@ gating the queue.
     PYTHONPATH=src python -m repro.launch.serve --workload replay \
         --requests 48 --kv-oversubscribe 1.5
 
+Shared-prefix reuse (DESIGN.md §9): ``--prefix-cache`` indexes committed
+prompt blocks in a radix tree and COW-aliases matches at admission —
+repeated system prompts skip their prefill entirely, bitwise-identically.
+``--workload shared_prefix`` generates the matching multi-tenant trace;
+``audit()`` reports ``prefix_hits`` / ``prefix_tokens_reused`` /
+``cow_copies``.
+
+    PYTHONPATH=src python -m repro.launch.serve --workload shared_prefix \
+        --requests 32 --prefix-cache
+
     XLA_FLAGS=--xla_force_host_platform_device_count=4 \
         PYTHONPATH=src python -m repro.launch.serve --mesh 2x2
     (when launched as __main__ the flag is set automatically for CPU runs)
@@ -151,7 +161,8 @@ def main(argv=None):
     ap.add_argument("--mode", default="paged_merge",
                     choices=["arena", "paged", "paged_merge", "full"])
     ap.add_argument("--workload", default="mixed",
-                    choices=["mixed", "predictable", "replay"])
+                    choices=["mixed", "predictable", "replay",
+                             "shared_prefix"])
     ap.add_argument("--requests", type=int, default=32)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--max-seq", type=int, default=256)
@@ -168,6 +179,13 @@ def main(argv=None):
     ap.add_argument("--host-pool-blocks", type=int, default=0,
                     help="explicit host KV tier size in blocks "
                          "(overrides --kv-oversubscribe's derivation)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="automatic shared-prefix KV reuse: index committed "
+                         "prompt blocks in a radix tree and COW-alias "
+                         "matches at admission (DESIGN.md §9)")
+    ap.add_argument("--prefix-cache-blocks", type=int, default=0,
+                    help="prefix-cache pin budget in blocks "
+                         "(0 = half the device pool)")
     ap.add_argument("--json", action="store_true")
     args = ap.parse_args(argv)
 
@@ -175,16 +193,22 @@ def main(argv=None):
             and args.mesh not in ("1x1", "1X1"):
         ap.error("the host KV tier is single-device for now: "
                  "use --mesh 1x1 with --kv-oversubscribe/--host-pool-blocks")
+    if args.prefix_cache and args.mesh not in ("1x1", "1X1"):
+        ap.error("the prefix cache is single-device for now: "
+                 "use --mesh 1x1 with --prefix-cache")
     engines = build_lanes(args.arch, args.mode, args.batch, args.max_seq,
                           args.mesh, pool_budget_frac=args.pool_budget,
                           kv_oversubscribe=args.kv_oversubscribe,
-                          host_pool_blocks=args.host_pool_blocks)
+                          host_pool_blocks=args.host_pool_blocks,
+                          prefix_cache=args.prefix_cache,
+                          prefix_cache_blocks=args.prefix_cache_blocks)
     tcfg = traces.TraceConfig(n_requests=args.requests,
                               vocab=engines[0].cfg.vocab_size,
                               token_scale=args.token_scale)
     gen = {"mixed": traces.mixed_length_workload,
            "predictable": traces.predictable_workload,
-           "replay": traces.azure_like_replay}[args.workload]
+           "replay": traces.azure_like_replay,
+           "shared_prefix": traces.shared_prefix_workload}[args.workload]
     reqs = gen(tcfg)
     print("workload:", traces.trace_summary(reqs))
 

@@ -1,0 +1,82 @@
+"""benchmarks/diff_json verdict split (CI gate): correctness fields
+(token_divergence / alloc_failures) hard-fail with a nonzero exit, perf
+metrics stay warn-only."""
+import json
+
+from benchmarks.diff_json import correctness_failures, diff, main
+
+
+def _artifact(**rows):
+    return {"benches": {"oversubscribe": rows}, "audits": {}, "failed": []}
+
+
+def _write(tmp_path, name, payload):
+    p = tmp_path / name
+    p.write_text(json.dumps(payload))
+    return str(p)
+
+
+CLEAN = {"tok_s": 100.0, "token_divergence": 0, "alloc_failures": 0}
+
+
+def test_injected_token_divergence_exits_nonzero(tmp_path):
+    new = _write(tmp_path, "new.json",
+                 _artifact(row={**CLEAN, "token_divergence": 2}))
+    assert main(["--new", new]) != 0
+
+
+def test_injected_alloc_failure_exits_nonzero(tmp_path):
+    old = _write(tmp_path, "old.json", _artifact(row=CLEAN))
+    new = _write(tmp_path, "new.json",
+                 _artifact(row={**CLEAN, "alloc_failures": 1}))
+    assert main(["--old", old, "--new", new]) != 0
+
+
+def test_clean_artifact_exits_zero(tmp_path):
+    old = _write(tmp_path, "old.json", _artifact(row=CLEAN))
+    new = _write(tmp_path, "new.json", _artifact(row=CLEAN))
+    assert main(["--old", old, "--new", new]) == 0
+    assert main(["--new", new]) == 0          # gate runs without --old too
+
+
+def test_perf_regression_stays_warn_only(tmp_path):
+    """A 50% tok_s drop is a WARNING, never a failure (CPU CI noise)."""
+    old = _artifact(row={**CLEAN, "tok_s": 200.0})
+    new = _artifact(row=CLEAN)
+    warnings = diff(old, new)
+    assert any("tok_s" in w for w in warnings)
+    po = _write(tmp_path, "old.json", old)
+    pn = _write(tmp_path, "new.json", new)
+    assert main(["--old", po, "--new", pn]) == 0
+
+
+def test_failed_module_fails_gate(tmp_path):
+    payload = _artifact(row=CLEAN)
+    payload["failed"] = ["prefix_reuse"]
+    new = _write(tmp_path, "new.json", payload)
+    assert main(["--new", new]) != 0
+
+
+def test_correctness_scan_reports_each_row():
+    art = {"benches": {
+        "oversubscribe": {"a": {**CLEAN, "token_divergence": 1},
+                          "b": CLEAN},
+        "prefix_reuse": {"c": {**CLEAN, "alloc_failures": 3}},
+    }}
+    errs = correctness_failures(art)
+    assert len(errs) == 2
+    assert any("oversubscribe/a.token_divergence" in e for e in errs)
+    assert any("prefix_reuse/c.alloc_failures" in e for e in errs)
+
+
+def test_unreadable_new_artifact_fails_closed(tmp_path):
+    assert main(["--new", str(tmp_path / "missing.json")]) != 0
+    bad = tmp_path / "truncated.json"
+    bad.write_text('{"benches": {"oversubscribe"')
+    assert main(["--new", str(bad)]) != 0
+
+
+def test_missing_old_artifact_still_gates(tmp_path):
+    new = _write(tmp_path, "new.json",
+                 _artifact(row={**CLEAN, "token_divergence": 1}))
+    assert main(["--old", str(tmp_path / "nope.json"), "--new", new]) != 0

@@ -1,0 +1,507 @@
+"""Radix prefix cache (DESIGN.md §9): pager external refs + alias_blocks
++ typed SwapRefused, radix index match/insert/evict semantics, and the
+engine-level guarantees — bitwise-identical tokens with the cache on
+(both pipeline depths, chunked prefill, COW tails), watermark accounting
+of shared blocks, and the host-tier interplay (aliased blocks are never
+swap candidates, eviction prefers unshared cold leaves, resume
+re-indexes)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.core.engine import EngineConfig, KVRMEngine
+from repro.core.pager import BlockPager, SwapError, SwapRefused
+from repro.core.prefix_cache import PrefixCache
+from repro.core.scheduler import Request
+from repro.data import traces
+from repro.models import registry
+
+
+# ---------------------------------------------------------------------------
+# pager: alias_blocks / external refs / SwapRefused
+# ---------------------------------------------------------------------------
+
+def _paged(host=16, blocks=64, bt=16):
+    return BlockPager(blocks, bt, bytes_per_block=1024, span_blocks=1,
+                      host_pool_blocks=host)
+
+
+def _fill(p, sid, n_tokens):
+    p.open_session(sid)
+    p.reserve(sid, n_tokens)
+    for _ in range(n_tokens):
+        p.append_token(sid)
+    return p.sessions[sid]
+
+
+def test_alias_host_resident_prefix_raises_typed_swap_refused():
+    """Regression: alias() over a cold-swapped source prefix used to die
+    on a bare AssertionError; it must raise the typed SwapRefused (a
+    SwapError) so the engine can catch it as a policy decision."""
+    p = _paged()
+    _fill(p, 0, 64)
+    p.swap_out_cold(0, keep_from_local=2)        # blocks 0,1 -> host tier
+    p.open_session(1)
+    with pytest.raises(SwapRefused):
+        p.alias(0, 1, 32)
+    assert issubclass(SwapRefused, SwapError)
+    # the refused alias must leave the fresh session untouched
+    assert p.sessions[1].blocks == [] and p.sessions[1].length == 0
+    p.check_invariants()
+
+
+def test_retain_release_survives_session_close():
+    p = _paged()
+    s = _fill(p, 0, 48)
+    blocks = list(s.blocks)
+    for b in blocks:
+        p.retain_block(b)
+    p.check_invariants()
+    p.trim(0, close=True)                        # EOS: session refs drop
+    p.check_invariants()
+    assert all(p.refcount[b] == 1 for b in blocks)   # cache keeps them live
+    assert p.reserved_blocks() == len(blocks)
+    # a fresh session can alias the retained chain with a COW tail
+    p.open_session(1)
+    p.alias_blocks(1, blocks, 40)                # 2 full blocks + 8-tok tail
+    s1 = p.sessions[1]
+    assert s1.shared_prefix_blocks == 2 and s1.length == 40
+    assert s1.cow_pending == (blocks[2], s1.blocks[2])
+    p.check_invariants()
+    p.trim(1, close=True)
+    for b in blocks:
+        p.release_block(b)
+    p.check_invariants()
+    assert p.reserved_blocks() == 0
+
+
+def test_alias_blocks_failed_tail_alloc_is_atomic():
+    p = BlockPager(5, 16, span_blocks=1)         # 4 usable blocks
+    s = _fill(p, 0, 48)                          # takes 3 of 4 blocks
+    _fill(p, 2, 16)                              # last block: pool now full
+    p.open_session(1)
+    with pytest.raises(MemoryError):
+        p.alias_blocks(1, s.blocks, 40)          # tail needs a 5th block
+    assert p.sessions[1].blocks == [] and p.sessions[1].length == 0
+    p.check_invariants()
+
+
+def test_external_refs_block_swap_eligibility():
+    """Aliased/cached blocks are never swap candidates: an external ref
+    raises refcount above 1, which refuses both swap verbs."""
+    p = _paged()
+    _fill(p, 0, 64)
+    p.retain_block(p.sessions[0].blocks[0])
+    assert not p.swap_eligible(0)
+    assert p.swap_out_session(0) is None
+    pairs = p.swap_out_cold(0, keep_from_local=3)
+    assert p.sessions[0].blocks[0] > 0           # retained block stayed put
+    assert all(src != p.sessions[0].blocks[0] for src, _ in pairs)
+    p.release_block(p.sessions[0].blocks[0])
+    p.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# radix index: match / insert / dedup / eviction
+# ---------------------------------------------------------------------------
+
+def _cache(p, max_blocks=32):
+    return PrefixCache(p, p.block_tokens, max_blocks)
+
+
+def test_radix_match_insert_dedup():
+    p = _paged(bt=4)
+    pc = _cache(p)
+    toks_a = np.arange(16, dtype=np.int32)       # 4 blocks
+    sa = _fill(p, 0, 16)
+    assert pc.insert(toks_a, sa.blocks) == 4
+    # second prompt shares 2 blocks then diverges
+    toks_b = np.concatenate([toks_a[:8], 100 + np.arange(8)]).astype(np.int32)
+    sb = _fill(p, 1, 16)
+    assert pc.insert(toks_b, sb.blocks) == 2     # shared chunks deduplicated
+    assert pc.blocks_cached == 6
+    pc.check_invariants()
+    m = pc.match(toks_a)
+    assert m.tokens == 16 and m.blocks == sa.blocks[:4]
+    m = pc.match(toks_b)
+    assert m.tokens == 16
+    assert m.blocks[:2] == sa.blocks[:2]         # canonical shared chain
+    assert m.blocks[2:] == sb.blocks[2:4]
+    assert pc.match(np.asarray([7, 7, 7, 7])).tokens == 0
+    # partial-block prompts never match below one block
+    assert pc.match(toks_a[:3]).tokens == 0
+
+
+def test_eviction_prefers_unshared_cold_leaves():
+    """Two leaves: a COLD one whose block a live session still shares
+    (refcount 2) and a HOT cache-only one (refcount 1). Eviction must
+    take the unshared leaf first — it returns a device block NOW — even
+    though LRU alone would pick the shared (colder) one."""
+    p = _paged(bt=4)
+    pc = _cache(p)
+    sa = _fill(p, 0, 8)                          # stays live (shared)
+    sb = _fill(p, 1, 4)
+    pc.insert(np.arange(8, dtype=np.int32), sa.blocks)       # cold path
+    pc.insert(50 + np.arange(4, dtype=np.int32), sb.blocks)  # hot path
+    p.trim(1, close=True)                        # sb block: cache-only now
+    free_before = p.free_blocks()
+    assert pc.evict(1) == 1
+    assert p.free_blocks() == free_before + 1    # unshared leaf freed a block
+    pc.check_invariants()
+    assert pc.match(np.arange(8, dtype=np.int32)).tokens == 8   # untouched
+    # next eviction is forced onto the shared leaf: budget drops, no block
+    free_before = p.free_blocks()
+    assert pc.evict(1) == 1
+    assert p.free_blocks() == free_before        # session still owns it
+    p.check_invariants()
+
+
+def test_pins_shield_matched_paths_until_flush():
+    p = _paged(bt=4)
+    pc = _cache(p, max_blocks=4)
+    s = _fill(p, 0, 16)
+    pc.insert(np.arange(16, dtype=np.int32), s.blocks)
+    m = pc.match(np.arange(16, dtype=np.int32))
+    pc.hit(m.nodes, m.tokens)                    # pin-on-match
+    assert pc.evict(4) == 0                      # everything pinned
+    assert pc.blocks_cached == 4
+    dropped = pc.flush_for_pressure()            # pressure overrides pins
+    assert dropped == 4 and pc.blocks_cached == 0
+    pc.unpin_path(m.nodes)                       # resilient after flush
+    pc.check_invariants()
+    p.check_invariants()
+
+
+def test_insert_cap_evicts_lru():
+    p = _paged(bt=4, blocks=64)
+    pc = _cache(p, max_blocks=2)
+    sa = _fill(p, 0, 8)
+    sb = _fill(p, 1, 8)
+    pc.insert(np.arange(8, dtype=np.int32), sa.blocks)
+    assert pc.blocks_cached == 2
+    pc.insert(90 + np.arange(8, dtype=np.int32), sb.blocks)
+    assert pc.blocks_cached == 2                 # cap held: LRU evicted
+    assert pc.match(90 + np.arange(8, dtype=np.int32)).tokens == 8
+    assert pc.stats["evicted_blocks"] == 2
+    pc.check_invariants()
+    p.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# engine: bitwise-identical reuse, COW tails, watermarks, host tier
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def dense_setup():
+    cfg = get_reduced("qwen2.5-32b")
+    params = registry.init_params(jax.random.PRNGKey(7), cfg)
+    return cfg, params
+
+
+def _shared_reqs(vocab, n=6, prefix_len=64, seed=0):
+    rng = np.random.default_rng(seed)
+    pfx = rng.integers(0, vocab, size=prefix_len).astype(np.int32)
+    out = []
+    for i in range(n):
+        sfx = rng.integers(0, vocab, size=5 + (i % 3)).astype(np.int32)
+        out.append(Request(rid=i, prompt=np.concatenate([pfx, sfx]),
+                           gen_len=8))
+    return out
+
+
+def _run(cfg, params, reqs, **ekw):
+    eng = KVRMEngine(cfg, params, EngineConfig(
+        mode="paged_merge", batch=4, max_seq=128, block_tokens=8,
+        near_window=64, **ekw))
+    for r in reqs:
+        eng.submit(r)
+    eng.run(max_steps=3000)
+    return eng, {r.rid: list(r.generated) for r in eng.sched.finished}
+
+
+@pytest.mark.parametrize("depth,chunk", [(0, 0), (1, 0), (1, 16)])
+def test_prefix_cache_tokens_bitwise_identical(dense_setup, depth, chunk):
+    """The headline §9 guarantee: enabling the cache changes NOTHING about
+    any request's token stream, at either pipeline depth, chunked or not."""
+    cfg, params = dense_setup
+    kw = dict(pipeline_depth=depth, prefill_chunk=chunk)
+    _, t_cold = _run(cfg, params, _shared_reqs(cfg.vocab_size), **kw)
+    warm, t_warm = _run(cfg, params, _shared_reqs(cfg.vocab_size),
+                        prefix_cache=True, **kw)
+    assert len(t_warm) == 6
+    assert t_warm == t_cold
+    a = warm.audit()
+    assert a["prefix_hits"] >= 1
+    assert a["prefix_tokens_reused"] >= 64
+    assert a["single_commit_per_step"]
+    assert a["compilations"] in (-1, 1)
+    warm.pager.check_invariants()
+    warm.prefix_cache.check_invariants()
+    assert warm.pager.host_used == 0
+
+
+@pytest.mark.parametrize("depth", [0, 1])
+def test_cow_tail_copy_bitwise_identical(dense_setup, depth):
+    """An identical-prompt rematch aliases len(prompt)-1 tokens — NOT
+    block-aligned — so the partial tail must be materialized by a real
+    device-side COW copy (accounted as its own transport group kind)."""
+    cfg, params = dense_setup
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(0, cfg.vocab_size, size=64).astype(np.int32)
+
+    def go(pc):
+        eng = KVRMEngine(cfg, params, EngineConfig(
+            mode="paged_merge", batch=2, max_seq=128, block_tokens=8,
+            near_window=64, pipeline_depth=depth, prefix_cache=pc))
+        eng.submit(Request(rid=0, prompt=prompt.copy(), gen_len=10))
+        eng.run(max_steps=500)                   # rid 0 finishes, indexed
+        eng.submit(Request(rid=1, prompt=prompt.copy(), gen_len=10))
+        eng.run(max_steps=500)
+        return eng, {r.rid: list(r.generated) for r in eng.sched.finished}
+
+    _, t_cold = go(False)
+    warm, t_warm = go(True)
+    assert t_warm == t_cold
+    a = warm.audit()
+    assert a["prefix_hits"] == 1
+    assert a["prefix_tokens_reused"] == 63
+    assert a["cow_copies"] == 1 and a["cow_groups"] == 1
+    assert a["cow_bytes"] == warm.block_bytes
+
+
+def test_chained_same_round_cow_aliases_bitwise_identical(dense_setup):
+    """Regression: C aliases B which aliased A in the SAME admit round —
+    C's COW source block is B's dst, which the round's single batched
+    scatter has not materialized yet. The engine must resolve the chain
+    to the origin block or C reads uninitialized KV."""
+    cfg, params = dense_setup
+    rng = np.random.default_rng(21)
+    prompt = rng.integers(0, cfg.vocab_size, size=25).astype(np.int32)
+
+    def reqs(hints):
+        a = Request(rid=0, prompt=prompt.copy(), gen_len=12)
+        b = Request(rid=1, prompt=np.concatenate([prompt[:23], prompt[:4]]),
+                    gen_len=8)
+        c = Request(rid=2, prompt=np.concatenate([prompt[:23], prompt[5:9]]),
+                    gen_len=8)
+        if hints:
+            b.prefix_of, b.prefix_len = 0, 23    # unaligned: COW tail
+            c.prefix_of, c.prefix_len = 1, 23    # chained onto B's alias
+        return a, b, c
+
+    outs = {}
+    for hints in (False, True):
+        eng = KVRMEngine(cfg, params, EngineConfig(
+            mode="paged_merge", batch=4, max_seq=64, block_tokens=8,
+            near_window=32, span_blocks=1))
+        a, b, c = reqs(hints)
+        eng.submit(a)
+        for _ in range(30):                      # A commits its prompt
+            eng.step()
+        eng.submit(b)
+        eng.submit(c)                            # B, C: same admit round
+        eng.run(max_steps=500)
+        assert len(eng.sched.finished) == 3
+        outs[hints] = {r.rid: list(r.generated) for r in eng.sched.finished}
+    assert outs[True][2] == outs[False][2]       # C survived the chain
+    assert outs[True] == outs[False]
+
+
+def test_watermark_discounts_shared_blocks(dense_setup):
+    """The §8 admission gate charges an aliased request only its OWN
+    blocks: with a cached prefix the committed footprint shrinks by the
+    shared blocks, and retirement releases exactly what was charged."""
+    cfg, params = dense_setup
+    eng = KVRMEngine(cfg, params, EngineConfig(
+        mode="paged_merge", batch=4, max_seq=128, block_tokens=8,
+        near_window=64, prefix_cache=True, host_pool_blocks=24))
+    reqs = _shared_reqs(cfg.vocab_size, n=2, prefix_len=64)
+    eng.submit(reqs[0])
+    eng.run(max_steps=400)                       # indexed, pool warm
+    assert eng._committed_blocks == 0
+    m = eng.prefix_cache.match(reqs[1].prompt)
+    assert m.tokens >= 64
+    assert eng._admission_ok(reqs[1], False)
+    full = eng._footprint_blocks(reqs[1])
+    assert reqs[1].committed_blocks == full - 64 // eng.bt
+    eng._committed_blocks -= reqs[1].committed_blocks    # undo the peek
+    eng.submit(reqs[1])
+    eng.run(max_steps=400)
+    assert eng._committed_blocks == 0            # retire released the charge
+    assert len(eng.sched.finished) == 2
+
+
+def test_gate_charge_reconciled_when_alias_shrinks(dense_setup):
+    """Regression: the kv_ok gate discounts its cache peek, but if the
+    share fails (or shrinks) at admit time the charge must be re-stamped
+    — an under-charged request would let later bursts overshoot the
+    watermark the host pool was sized by."""
+    cfg, params = dense_setup
+    eng = KVRMEngine(cfg, params, EngineConfig(
+        mode="paged_merge", batch=4, max_seq=128, block_tokens=8,
+        near_window=64, prefix_cache=True, host_pool_blocks=24))
+    reqs = _shared_reqs(cfg.vocab_size, n=2, prefix_len=64)
+    eng.submit(reqs[0])
+    eng.run(max_steps=400)                       # prompt indexed
+    assert eng._admission_ok(reqs[1], False)     # gate: discounted charge
+    full = eng._footprint_blocks(reqs[1])
+    assert reqs[1].committed_blocks == full - 64 // eng.bt
+    # the cache empties between the gate and the alias (pressure flush):
+    # the admit-time match finds nothing and the charge snaps back to full
+    eng.prefix_cache.flush_for_pressure()
+    sid = 999
+    eng.pager.open_session(sid)
+    assert not eng._prefix_admit(0, reqs[1], sid)
+    assert reqs[1].committed_blocks == full
+    assert eng._committed_blocks == full
+    eng.pager.trim(sid, close=True)
+    eng._committed_blocks = 0                    # undo the manual peek
+
+
+def test_preempt_restamps_full_footprint(dense_setup):
+    """Regression: preemption swaps out EVERY block of the victim —
+    prefix included — so a cache-hit request's discounted admission
+    charge must snap back to the full footprint, or the watermark
+    under-counts host demand while the request sits preempted."""
+    cfg, params = dense_setup
+    eng = KVRMEngine(cfg, params, EngineConfig(
+        mode="paged_merge", batch=4, max_seq=128, block_tokens=8,
+        near_window=64, prefix_cache=True, host_pool_blocks=64))
+    reqs = _shared_reqs(cfg.vocab_size, n=2, prefix_len=64)
+    eng.submit(reqs[0])
+    eng.run(max_steps=400)                       # indexed, then retired
+    eng.submit(reqs[1])
+    eng.step()                                   # admitted via cache hit
+    eng.step()                                   # first frame clears the COW
+    full = eng._footprint_blocks(reqs[1])
+    assert reqs[1].committed_blocks == full - 64 // eng.bt
+    eng.prefix_cache.flush_for_pressure()        # hit blocks: refcount 1
+    slot = next(s for s in eng.sched.active_slots()
+                if eng.sched.request_at(s).rid == 1)
+    eng._preempt_slot(slot)
+    assert reqs[1].committed_blocks == full      # charge snapped back
+    assert eng._committed_blocks == full
+    eng.run(max_steps=800)                       # resume + finish cleanly
+    assert len(eng.sched.finished) == 2
+    assert eng._committed_blocks == 0
+
+
+def test_cache_eviction_relieves_pool_pressure(dense_setup):
+    """Without a host tier, a full pool must be relieved by evicting
+    unpinned cache leaves (not by MemoryError): retired prompts pin cache
+    budget, new prompts need blocks."""
+    cfg, params = dense_setup
+    rng = np.random.default_rng(11)
+    eng = KVRMEngine(cfg, params, EngineConfig(
+        mode="paged_merge", batch=2, max_seq=64, block_tokens=8,
+        near_window=32, span_blocks=1, pool_budget_frac=0.35,
+        prefix_cache=True, prefix_cache_blocks=64))
+    for i in range(6):                           # distinct prompts: all miss
+        eng.submit(Request(
+            rid=i, prompt=rng.integers(0, cfg.vocab_size, size=24)
+            .astype(np.int32), gen_len=10))
+    eng.run(max_steps=1500)                      # no MemoryError
+    assert len(eng.sched.finished) == 6
+    assert eng.audit()["prefix_evicted_blocks"] >= 1
+    eng.pager.check_invariants()
+    eng.prefix_cache.check_invariants()
+
+
+def test_indexed_prompts_are_never_swap_candidates(dense_setup):
+    """Host-tier interplay: a session whose prompt is indexed shares its
+    blocks with the cache (refcount 2) — cold swap must skip them and the
+    session must be preempt-ineligible until the cache lets go."""
+    cfg, params = dense_setup
+    rng = np.random.default_rng(5)
+    eng = KVRMEngine(cfg, params, EngineConfig(
+        mode="paged_merge", batch=2, max_seq=64, block_tokens=8,
+        near_window=16, span_blocks=1, prefix_cache=True,
+        host_pool_blocks=16))
+    eng.submit(Request(rid=0, prompt=rng.integers(0, cfg.vocab_size, size=24)
+                       .astype(np.int32), gen_len=30))
+    for _ in range(46):                          # window slides past prompt
+        eng.step()
+    sid = int(eng._slot_sid[0])
+    s = eng.pager.sessions[sid]
+    assert eng.prefix_cache.blocks_cached == 3   # 24-token prompt indexed
+    assert not eng.pager.swap_eligible(sid)
+    fl = eng._first_window_local(s, int(eng._slot_len[0]))
+    assert fl >= 3                               # prompt is below the window
+    pairs = eng.pager.swap_out_cold(sid, fl)
+    cached = set(eng.prefix_cache.match(
+        eng.sched.requests[0].prompt[:24]).blocks)
+    assert all(src not in cached for src, _ in pairs)
+    assert all(b > 0 for b in s.blocks[:3])      # indexed blocks stayed put
+    # once the cache flushes, the session becomes a victim again
+    eng.prefix_cache.flush_for_pressure()
+    assert eng.pager.swap_eligible(sid)
+    eng.run(max_steps=500)
+    eng.pager.check_invariants()
+
+
+def test_resume_reindexes_prompt(dense_setup):
+    """Preempt -> resume must RE-INDEX the resumed prompt: the preempt
+    dropped it from the cache (swap eligibility required refcount 1), and
+    after swap-in its device-resident blocks are committed KV again."""
+    cfg, params = dense_setup
+    rng = np.random.default_rng(9)
+    prompt = rng.integers(0, cfg.vocab_size, size=24).astype(np.int32)
+    eng = KVRMEngine(cfg, params, EngineConfig(
+        mode="paged_merge", batch=2, max_seq=64, block_tokens=8,
+        near_window=32, span_blocks=1, prefix_cache=True,
+        host_pool_blocks=24))
+    eng.submit(Request(rid=0, prompt=prompt.copy(), gen_len=24))
+    for _ in range(28):                          # prompt committed + indexed
+        eng.step()
+    eng.flush()
+    assert eng.prefix_cache.blocks_cached == 3
+    # force a §8 eviction: flush the cache (making rid 0 eligible), preempt
+    eng.prefix_cache.flush_for_pressure()
+    assert eng.prefix_cache.match(prompt).tokens == 0
+    eng._preempt_slot(0)
+    assert 0 in [r.rid for r in eng.sched.preempted]
+    eng.run(max_steps=800)                       # resume + finish
+    assert len(eng.sched.finished) == 1
+    # the resume re-indexed the (window-covered) prompt blocks
+    assert eng.prefix_cache.match(prompt).tokens == 24
+    # and a rematch serves a later identical prompt bitwise-identically
+    eng.submit(Request(rid=1, prompt=prompt.copy(), gen_len=24))
+    eng.run(max_steps=800)
+    toks = {r.rid: list(r.generated) for r in eng.sched.finished}
+    assert toks[1] == toks[0]
+    assert eng.audit()["prefix_hits"] >= 1
+    eng.pager.check_invariants()
+    eng.prefix_cache.check_invariants()
+
+
+def test_prefix_cache_rejects_unsupported_configs(dense_setup):
+    cfg, params = dense_setup
+    with pytest.raises(ValueError):
+        KVRMEngine(cfg, params, EngineConfig(
+            mode="full", batch=2, max_seq=128, near_window=32,
+            block_tokens=8, prefix_cache=True))
+    with pytest.raises(ValueError):               # no silent disable
+        KVRMEngine(cfg, params, EngineConfig(
+            mode="arena", batch=2, max_seq=128, near_window=32,
+            block_tokens=8, prefix_cache=True))
+    hyb = get_reduced("zamba2-7b")
+    hparams = registry.init_params(jax.random.PRNGKey(0), hyb)
+    with pytest.raises(ValueError):
+        KVRMEngine(hyb, hparams, EngineConfig(
+            mode="paged_merge", batch=2, max_seq=64, block_tokens=8,
+            prefix_cache=True))
+
+
+def test_shared_prefix_trace_family():
+    tcfg = traces.TraceConfig(n_requests=40, vocab=128, seed=2,
+                              shared_prefix_len=32, n_prefixes=3,
+                              prompt_mean=6, gen_mean=12, window_s=10.0)
+    reqs = traces.shared_prefix_workload(tcfg)
+    assert len(reqs) == 40
+    heads = {tuple(r.prompt[:32]) for r in reqs}
+    assert len(heads) <= 3                       # at most n_prefixes tenants
+    assert all(len(r.prompt) > 32 for r in reqs)
+    assert all(r.prefix_of is None for r in reqs)    # sharing is implicit
+    arr = [r.arrival for r in reqs]
+    assert arr == sorted(arr) and arr[-1] <= 10.0
