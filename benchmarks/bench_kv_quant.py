@@ -1,0 +1,176 @@
+"""Quantized KV-block storage tier (DESIGN.md §10).
+
+Gates the memory tentpole: ``kv_dtype="fp8_e4m3" | "int8"`` stores K/V
+blocks narrow with per-block per-head scales under the SAME fixed
+descriptor interface. Three workload families, each vs a bf16 baseline:
+
+* **mixed** — heavy-tailed mixed-length decode: reserved-KV reduction
+  (must be >= 1.8x for fp8), tokens/s, greedy-token divergence vs bf16
+  (reported as ``quant_token_divergence`` — quantization noise is
+  EXPECTED to flip some argmaxes on this tiny random-init model, so it is
+  not a correctness gate; the bf16 rows' ``token_divergence`` IS).
+* **shared_prefix** — radix prefix cache on: a cache hit aliases data +
+  scale chains atomically, so the quantized warm run must be bitwise
+  identical to the quantized cold run (``token_divergence`` gated at 0).
+* **burst** — bursty replay at ~1.5x device-KV oversubscription with the
+  host tier: swap moves narrow blocks + scales in lockstep, must finish
+  with ZERO ``alloc_failures`` and ZERO divergence vs the ample-pool
+  quantized baseline (both CI-gated).
+
+The bf16 identity row replays the mixed trace at pipeline depths 0 and 1
+with ``kv_dtype="bf16"`` and gates ``token_divergence`` at 0 — the
+default path must stay bitwise identical to seed.
+"""
+from benchmarks.common import engine, print_rows, record_audit, row, \
+    run_workload, smoke_scale
+from repro.data import traces
+
+FP8_MIN_RATIO = 1.8       # acceptance: reserved-KV reduction vs bf16
+
+
+def _tokens(eng):
+    return {r.rid: list(r.generated) for r in eng.sched.finished}
+
+
+def _diverged(a, b):
+    """Requests whose token streams differ between two runs. A request
+    missing from EITHER side counts as diverged — a dropped/unfinished
+    request must not slip past the CI-gated token_divergence=0 check."""
+    return sum(1 for rid in set(a) | set(b) if a.get(rid) != b.get(rid))
+
+
+def _mixed_reqs(n):
+    tcfg = traces.TraceConfig(n_requests=n, token_scale=0.25, vocab=256,
+                              seed=5)
+    return traces.mixed_length_workload(tcfg)
+
+
+def _prefix_reqs(n, bt=8):
+    # block-aligned shared prefixes: a hit aliases FULL blocks only, so the
+    # quantized warm run reuses byte-identical (data, scale) chains
+    tcfg = traces.TraceConfig(n_requests=n, token_scale=0.5, vocab=256,
+                              seed=9, shared_prefix_len=4 * bt, n_prefixes=2,
+                              prompt_mean=10, gen_mean=24, window_s=1.0)
+    return traces.shared_prefix_workload(tcfg)
+
+
+def _burst_reqs(n):
+    tcfg = traces.TraceConfig(n_requests=n, token_scale=1.0, vocab=256,
+                              seed=17, burstiness=2.0, prompt_mean=24)
+    reqs = traces.azure_like_replay(tcfg)
+    for r in reqs:
+        r.gen_len = min(144 + (r.rid % 3) * 8, 224 - len(r.prompt))
+    return reqs
+
+
+def run():
+    rows = []
+    n = max(8, int(24 * smoke_scale()))
+    kw = dict(batch=4, max_seq=256, near_window=128, block_tokens=8)
+
+    # --- bf16 identity: depth A/B with the quant config knob present ---
+    b0 = engine("paged_merge", pipeline_depth=0, kv_dtype="bf16", **kw)
+    run_workload(b0, _mixed_reqs(n))
+    b1 = engine("paged_merge", pipeline_depth=1, kv_dtype="bf16", **kw)
+    run_workload(b1, _mixed_reqs(n))
+    div = _diverged(_tokens(b0), _tokens(b1))
+    lat = b1.latency_stats()
+    rows.append(row("kv_quant/bf16_identity", lat["mean_ms"] * 1e3,
+                    tok_s=b1.throughput(), step_p99_ms=lat["p99_ms"],
+                    peak_reserved_kv=b1.peak_reserved_kv,
+                    token_divergence=div, alloc_failures=0,
+                    finished=len(b1.sched.finished)))
+    record_audit("kv_quant/bf16_identity", b1.audit())
+    assert div == 0, f"bf16 depth A/B diverged: {div}"
+    t_bf16 = _tokens(b1)
+
+    # --- narrow dtypes on the same mixed trace ------------------------
+    for kvd in ("fp8_e4m3", "int8"):
+        q = engine("paged_merge", kv_dtype=kvd, **kw)
+        run_workload(q, _mixed_reqs(n))
+        tq = _tokens(q)
+        total = sum(len(v) for v in t_bf16.values())
+        flipped = sum(sum(1 for a, b in zip(t_bf16[rid], toks) if a != b)
+                      for rid, toks in tq.items() if rid in t_bf16)
+        a = q.audit()
+        lat = q.latency_stats()
+        ratio = b1.peak_reserved_kv / max(1, q.peak_reserved_kv)
+        rows.append(row(
+            f"kv_quant/{kvd}_mixed", lat["mean_ms"] * 1e3,
+            tok_s=q.throughput(), step_p99_ms=lat["p99_ms"],
+            peak_reserved_kv=q.peak_reserved_kv,
+            reserved_kv_ratio=ratio,
+            quant_bytes_saved=a["quant_bytes_saved"],
+            quant_scale_bytes=a["quant_scale_bytes"],
+            quant_token_divergence=_diverged(t_bf16, tq),
+            quant_token_flip_rate=flipped / max(1, total),
+            alloc_failures=0, finished=len(q.sched.finished)))
+        record_audit(f"kv_quant/{kvd}_mixed", a)
+        if kvd == "fp8_e4m3":
+            assert ratio >= FP8_MIN_RATIO, \
+                f"fp8 reserved-KV reduction {ratio:.2f}x < {FP8_MIN_RATIO}x"
+
+    # --- quantized shared-prefix reuse: warm bitwise == cold ----------
+    cold = engine("paged_merge", kv_dtype="fp8_e4m3", **kw)
+    run_workload(cold, _prefix_reqs(n), replay_scale=0.01)
+    warm = engine("paged_merge", kv_dtype="fp8_e4m3", prefix_cache=True, **kw)
+    run_workload(warm, _prefix_reqs(n), replay_scale=0.01)
+    a = warm.audit()
+    div = _diverged(_tokens(cold), _tokens(warm))
+    lat = warm.latency_stats()
+    rows.append(row("kv_quant/fp8_shared_prefix", lat["mean_ms"] * 1e3,
+                    tok_s=warm.throughput(),
+                    prefix_hits=a["prefix_hits"],
+                    prefix_tokens_reused=a["prefix_tokens_reused"],
+                    cow_copies=a["cow_copies"],
+                    quant_bytes_saved=a["quant_bytes_saved"],
+                    token_divergence=div, alloc_failures=0,
+                    finished=len(warm.sched.finished)))
+    record_audit("kv_quant/fp8_shared_prefix", a)
+    assert div == 0, f"quant prefix warm/cold diverged: {div}"
+    assert a["prefix_hits"] > 0, "shared-prefix trace produced no cache hits"
+
+    # --- quantized burst at ~1.5x oversubscription --------------------
+    burst_bf16 = engine("paged_merge", kv_dtype="bf16", pool_budget=1.0, **kw)
+    run_workload(burst_bf16, _burst_reqs(n), replay_scale=0.01)
+    base = engine("paged_merge", kv_dtype="fp8_e4m3", pool_budget=1.0, **kw)
+    run_workload(base, _burst_reqs(n), replay_scale=0.01)
+    n_layers = base.pool_bytes_total // ((base.num_blocks - 1)
+                                         * base.block_bytes)
+    peak_blocks = -(-base.peak_reserved_kv // (base.block_bytes * n_layers))
+    worst = kw["batch"] * (-(-kw["max_seq"] // kw["block_tokens"]) + 1)
+    dev_blocks = max(12, int(peak_blocks / 1.5))
+    over = engine("paged_merge", kv_dtype="fp8_e4m3",
+                  pool_budget=dev_blocks / worst,
+                  host_pool_blocks=peak_blocks - dev_blocks + 8, **kw)
+    alloc_failures = 0
+    try:
+        run_workload(over, _burst_reqs(n), replay_scale=0.01)
+    except MemoryError:
+        alloc_failures = 1
+        raise
+    finally:
+        div = _diverged(_tokens(base), _tokens(over))
+        a = over.audit()
+        lat = over.latency_stats()
+        burst_ratio = (burst_bf16.peak_reserved_kv
+                       / max(1, base.peak_reserved_kv))
+        rows.append(row(
+            "kv_quant/fp8_burst_oversubscribed", lat["mean_ms"] * 1e3,
+            tok_s=over.throughput(), step_p99_ms=lat["p99_ms"],
+            peak_reserved_kv=over.peak_reserved_kv,
+            reserved_kv_ratio=burst_ratio,
+            preemptions=a["preemptions"], swap_bytes=a["swap_bytes"],
+            quant_bytes_saved=a["quant_bytes_saved"],
+            host_blocks_peak=a["host_blocks_peak"],
+            alloc_failures=alloc_failures, token_divergence=div,
+            finished=len(over.sched.finished)))
+        record_audit("kv_quant/fp8_burst_oversubscribed", a)
+    assert div == 0, f"quant burst oversubscription diverged: {div}"
+    assert burst_ratio >= FP8_MIN_RATIO, \
+        f"fp8 burst reserved-KV reduction {burst_ratio:.2f}x < {FP8_MIN_RATIO}x"
+    return rows
+
+
+if __name__ == "__main__":
+    print_rows(run())

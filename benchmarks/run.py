@@ -25,6 +25,7 @@ MODULES = [
     ("trace_replay", "benchmarks.bench_trace_replay"),
     ("oversubscribe", "benchmarks.bench_oversubscribe"),
     ("prefix_reuse", "benchmarks.bench_prefix_reuse"),
+    ("kv_quant", "benchmarks.bench_kv_quant"),
     ("predictable", "benchmarks.bench_predictable"),
     ("transport_audit", "benchmarks.bench_transport_audit"),
     ("farview_quality", "benchmarks.bench_farview_quality"),

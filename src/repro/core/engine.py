@@ -99,6 +99,11 @@ class EngineConfig:
     #                                  COW-alias matches at admission
     prefix_cache_blocks: int = 0     # cache pin budget (blocks);
     #                                  0 = auto (half the device pool)
+    # --- quantized KV-block storage tier (DESIGN.md §10) ---
+    kv_dtype: str = "bf16"           # "bf16" | "fp8_e4m3" | "int8": narrow
+    #                                  K/V storage + per-block per-head f32
+    #                                  scale pools managed by the pager in
+    #                                  lockstep with their data blocks
 
 
 @dataclass
@@ -143,9 +148,30 @@ class KVRMEngine:
             self.num_blocks = max(floor,
                                   int(worst * ecfg.pool_budget_frac)) + 1
 
+        # --- quantized KV-block tier (DESIGN.md §10) --------------------
+        # Narrow storage halves (or better) every per-block byte figure the
+        # transport accounts — window trains, swaps, COW copies — plus the
+        # reserved-KV audit; the per-block f32 scale pools are a sibling
+        # physical resource whose overhead is accounted per block here.
+        self._quant = ecfg.kv_dtype != "bf16"
+        if self._quant:
+            err = registry.quant_decode_error(cfg, ecfg.kv_dtype)
+            if err is not None:
+                raise ValueError(err)
+            if ecfg.mode == "full":
+                raise ValueError("kv_dtype != 'bf16' requires mode != 'full' "
+                                 "(far-view summaries are stored full-width)")
+
         # per-layer payload bytes (transport accounting uses the real model)
-        self.bytes_per_token = registry.paged_payload_bytes_per_token(cfg)
-        self.block_bytes = bt * self.bytes_per_token
+        self.bytes_per_token = registry.paged_payload_bytes_per_token(
+            cfg, ecfg.kv_dtype)
+        # per-(layer, block) scale overhead: one f32 per kv head for each of
+        # the k and v scale pools (0 when unquantized)
+        self.scale_bytes_per_block = (2 * cfg.n_kv_heads * 4
+                                      if self._quant else 0)
+        self.block_bytes = bt * self.bytes_per_token + self.scale_bytes_per_block
+        # what the same block costs at full bf16 width (quant savings basis)
+        self._dense_block_bytes = bt * registry.paged_payload_bytes_per_token(cfg)
         n_layers_paged = max(1, registry.n_paged_layers(cfg))
         self.pool_bytes_total = (self.num_blocks - 1) * self.block_bytes * n_layers_paged
 
@@ -159,7 +185,8 @@ class KVRMEngine:
         self.pools = registry.init_decode_pools(
             cfg, batch=ecfg.batch, num_blocks=self.num_blocks, block_tokens=bt,
             max_chunks=self.max_chunks,
-            enc_len=ecfg.max_seq if cfg.family == "encdec" else 0)
+            enc_len=ecfg.max_seq if cfg.family == "encdec" else 0,
+            kv_dtype=ecfg.kv_dtype)
         if cfg.family == "encdec":
             self.pools["enc_len"] = jnp.zeros((ecfg.batch,), jnp.int32)
 
@@ -206,7 +233,8 @@ class KVRMEngine:
         self.transport = MergeStagedTransport(
             block_bytes=self.block_bytes,
             merge_threshold_bytes=cfg.serving.merge_threshold_bytes,
-            max_hold_steps=cfg.serving.max_hold_steps, max_trains=self.MT)
+            max_hold_steps=cfg.serving.max_hold_steps, max_trains=self.MT,
+            dense_block_bytes=self._dense_block_bytes)
         self.fv = (FarViewPolicy(ecfg.batch, self.max_chunks, self.cap,
                                  ecfg.sv_chunk, bt) if self.farview else None)
 
@@ -1464,6 +1492,14 @@ class KVRMEngine:
             "cow_copies": self.transport.stats.cow_blocks,
             "cow_groups": self.transport.stats.cow_groups,
             "cow_bytes": self.transport.stats.cow_bytes,
+            # --- quantized KV-block tier (DESIGN.md §10): narrow storage
+            # width, scale-pool overhead inside the reserved figures, and
+            # the bytes every accounted transfer saved vs bf16 width ---
+            "kv_dtype": self.e.kv_dtype,
+            "quant_bytes_saved": self.transport.stats.quant_bytes_saved,
+            "quant_scale_bytes": ((self.num_blocks - 1)
+                                  * self.scale_bytes_per_block
+                                  * max(1, registry.n_paged_layers(self.cfg))),
             "mesh": (None if self.mesh is None
                      else "x".join(str(self.mesh.shape[a])
                                    for a in self.mesh.axis_names)),

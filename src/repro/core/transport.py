@@ -44,6 +44,10 @@ class TransportStats:
     cow_groups: int = 0           # merged copy groups executed
     cow_blocks: int = 0           # blocks copied (1 per unaligned alias)
     cow_bytes: int = 0
+    # --- quantized KV tier (DESIGN.md §10): bytes every accounted block
+    # movement (window trains, swaps, COW copies) saved vs full bf16
+    # width; 0 when the pools store bf16 ---
+    quant_bytes_saved: int = 0
 
     @property
     def groups_per_step(self) -> float:
@@ -113,13 +117,22 @@ def merge_runs(blocks: Sequence[int]) -> List[Tuple[int, int, int]]:
 
 class MergeStagedTransport:
     def __init__(self, *, block_bytes: int, merge_threshold_bytes: int,
-                 max_hold_steps: int, max_trains: int):
+                 max_hold_steps: int, max_trains: int,
+                 dense_block_bytes: int = 0):
         self.block_bytes = block_bytes
+        # bf16-width cost of the same block (quantized tier, DESIGN.md §10):
+        # every accounted block movement adds the difference to
+        # ``quant_bytes_saved``; defaults to block_bytes (no savings)
+        self.dense_block_bytes = max(dense_block_bytes, block_bytes)
         self.tau = merge_threshold_bytes
         self.delta = max_hold_steps
         self.max_trains = max_trains
         self.stats = TransportStats()
         self._staged: List[StagedDescriptor] = []
+
+    def _account_quant_saving(self, n_blocks: int) -> None:
+        self.stats.quant_bytes_saved += (
+            n_blocks * (self.dense_block_bytes - self.block_bytes))
 
     # -- Stage -----------------------------------------------------------
     def stage(self, descriptors: List[StagedDescriptor]) -> None:
@@ -144,6 +157,7 @@ class MergeStagedTransport:
             self.stats.swap_out_bytes += nbytes
         else:
             self.stats.swap_in_bytes += nbytes
+        self._account_quant_saving(len(pairs))
         return groups
 
     # -- COW tail copies (prefix cache, DESIGN.md §9) --------------------
@@ -157,6 +171,7 @@ class MergeStagedTransport:
         self.stats.cow_groups += len(merge_swap_pairs(list(pairs)))
         self.stats.cow_blocks += len(pairs)
         self.stats.cow_bytes += len(pairs) * self.block_bytes
+        self._account_quant_saving(len(pairs))
 
     # -- Reduce ----------------------------------------------------------
     def reduce(self, window_blocks: Sequence[int], *,
@@ -191,6 +206,7 @@ class MergeStagedTransport:
         self.stats.total_bytes += (len(blocks) * self.block_bytes
                                    + far_blocks * self.block_bytes)
         self.stats.unmerged_groups += len(blocks) + far_blocks
+        self._account_quant_saving(len(blocks) + far_blocks)
         return trains, groups
 
     def merge_slot(self, blocks: Sequence[int], *, merging: bool = True
@@ -238,6 +254,7 @@ class MergeStagedTransport:
         self.stats.max_groups = max(self.stats.max_groups, int(groups.max()))
         self.stats.total_bytes += int((n_blocks + far_flags).sum()) * self.block_bytes
         self.stats.unmerged_groups += int((n_blocks + far_flags).sum())
+        self._account_quant_saving(int((n_blocks + far_flags).sum()))
 
     def fill_train_arrays(self, trains: List[Tuple[int, int, int]],
                           train_start: np.ndarray, train_len: np.ndarray,

@@ -143,6 +143,9 @@ def engine_pool_specs(cfg: ModelConfig, pools_shapes):
             return P(None, None, MODEL, *([None] * (nd - 3)))
         if name in ("k", "v"):          # (L, P, BT, KV, hd)
             return P(None, None, None, MODEL, None)
+        if name in ("k_scale", "v_scale"):   # (L, P, KV) — quant tier §10:
+            # scales shard with their kv heads, lockstep with the data pool
+            return P(None, None, MODEL)
         if name.startswith("far_") and name != "far_lat":
             return P(*([None] * (nd - 2)), MODEL, None)   # (L,B,MAXC,KV,hd)
         if name.startswith("cross_"):   # (L, B, Se, KV, hd)

@@ -48,10 +48,26 @@ def pool_write_chunk(pool, vals, write_block, write_offset, n_valid):
                                     n_valid)
 
 
+def quant_pool_write_stacked(pool, scale, vals, write_block, write_offset,
+                             active):
+    """Quantize-at-commit write for the decode executor (DESIGN.md §10):
+    narrow pool + per-block per-head scale pool updated together."""
+    return ref.quant_pool_write_stacked_ref(pool, scale, vals, write_block,
+                                            write_offset, active)
+
+
+def quant_pool_write_chunk(pool, scale, vals, write_block, write_offset,
+                           n_valid):
+    """Quantize-at-commit write for the chunked prefill executor (§10)."""
+    return ref.quant_pool_write_chunk_ref(pool, scale, vals, write_block,
+                                          write_offset, n_valid)
+
+
 def paged_decode_attention(q, pool_k, pool_v, block_table, window_base,
                            seq_lens, slot_active, *, near_window,
                            far_k=None, far_v=None, far_table=None,
                            far_valid=None, cur_k=None, cur_v=None,
+                           k_scale=None, v_scale=None,
                            impl: str | None = None):
     impl = impl or _DEFAULT_IMPL
     from repro.distributed.act_sharding import constrain_model_dim
@@ -61,16 +77,19 @@ def paged_decode_attention(q, pool_k, pool_v, block_table, window_base,
         return paged_attention.paged_decode_attention_pallas(
             q, pool_k, pool_v, block_table, window_base, seq_lens, slot_active,
             near_window=near_window, far_k=far_k, far_v=far_v,
-            far_table=far_table, far_valid=far_valid)
+            far_table=far_table, far_valid=far_valid,
+            k_scale=k_scale, v_scale=v_scale)
     return ref.paged_decode_attention_ref(
         q, pool_k, pool_v, block_table, window_base, seq_lens, slot_active,
         near_window=near_window, far_k=far_k, far_v=far_v,
-        far_table=far_table, far_valid=far_valid, cur_k=cur_k, cur_v=cur_v)
+        far_table=far_table, far_valid=far_valid, cur_k=cur_k, cur_v=cur_v,
+        k_scale=k_scale, v_scale=v_scale)
 
 
 def chunked_prefill_attention(q, pool_k, pool_v, cur_k, cur_v, block_table,
                               window_base, start_pos, n_valid, *,
-                              near_window, impl: str | None = None):
+                              near_window, k_scale=None, v_scale=None,
+                              impl: str | None = None):
     """One slot's prompt-chunk attention: paged pre-chunk context + in-chunk
     causal (the chunked prefill executor's core; DESIGN.md §3)."""
     impl = impl or _DEFAULT_IMPL
@@ -78,10 +97,12 @@ def chunked_prefill_attention(q, pool_k, pool_v, cur_k, cur_v, block_table,
         from repro.kernels import prefill_attention as pfa
         return pfa.chunked_prefill_attention_pallas(
             q, pool_k, pool_v, cur_k, cur_v, block_table, window_base,
-            start_pos, n_valid, near_window=near_window)
+            start_pos, n_valid, near_window=near_window,
+            k_scale=k_scale, v_scale=v_scale)
     return ref.chunked_prefill_attention_ref(
         q, pool_k, pool_v, cur_k, cur_v, block_table, window_base,
-        start_pos, n_valid, near_window=near_window)
+        start_pos, n_valid, near_window=near_window,
+        k_scale=k_scale, v_scale=v_scale)
 
 
 def mla_decode_attention(q_nope, q_rope, pool_lat, w_k_b, w_v_b, block_table,

@@ -38,12 +38,17 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _decode_kernel(block_tbl_ref, meta_ref,      # scalar prefetch
-                   q_ref, k_ref, v_ref,          # inputs
-                   o_ref,                        # output
-                   acc_ref, m_ref, l_ref,        # VMEM scratch
-                   *, bt: int, kv: int, n_rep: int, hd: int,
-                   near_window: int, scale: float):
+def _decode_kernel(*refs, bt: int, kv: int, n_rep: int, hd: int,
+                   near_window: int, scale: float, quant: bool):
+    if quant:
+        # quantized tier (DESIGN.md §10): per-block per-head dequant scales
+        # arrive as extra scalar-prefetch operands (SMEM) and the HBM->VMEM
+        # block copy grows a fused dequantize-on-load epilogue below
+        (block_tbl_ref, meta_ref, ks_ref, vs_ref,
+         q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref) = refs
+    else:
+        (block_tbl_ref, meta_ref,
+         q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref) = refs
     b = pl.program_id(0)
     i = pl.program_id(1)
     nb = pl.num_programs(1)
@@ -61,6 +66,10 @@ def _decode_kernel(block_tbl_ref, meta_ref,      # scalar prefetch
     q = q_ref[0].astype(jnp.float32)             # (H, hd)
     kb = k_ref[0].astype(jnp.float32)            # (BT, KV, hd)
     vb = v_ref[0].astype(jnp.float32)
+    if quant:
+        blk = block_tbl_ref[b, i]
+        kb = kb * ks_ref[blk][None, :, None]     # (KV,) scales from SMEM
+        vb = vb * vs_ref[blk][None, :, None]
 
     # scores: group q heads per kv head
     qg = q.reshape(kv, n_rep, hd)
@@ -93,11 +102,16 @@ def _decode_kernel(block_tbl_ref, meta_ref,      # scalar prefetch
 def paged_decode_attention_pallas(q, pool_k, pool_v, block_table, window_base,
                                   seq_lens, slot_active, *, near_window,
                                   far_k=None, far_v=None, far_table=None,
-                                  far_valid=None, interpret=True):
+                                  far_valid=None, k_scale=None, v_scale=None,
+                                  interpret=True):
     """Near-window paged attention; optional far-view handled by a jnp side
     path merged via flash-combine (far view is the paper's optional policy).
 
     q: (B,H,hd); pool_k/pool_v: (P,BT,KV,hd); block_table: (B,NB).
+    k_scale/v_scale: optional (P,KV) f32 per-block per-head dequant scales
+    for narrow (int8 / float8_e4m3) pools — they ride as scalar-prefetch
+    operands (SMEM) and each grid step's block copy dequantizes on load, so
+    the descriptor contract and grid are unchanged (DESIGN.md §10).
     Returns (out (B,H,hd), far_util (B,CAP))."""
     B, H, hd = q.shape
     P, BT, KV, _ = pool_k.shape
@@ -105,6 +119,7 @@ def paged_decode_attention_pallas(q, pool_k, pool_v, block_table, window_base,
     assert H % KV == 0, (H, KV)          # holds globally AND per TP shard
     n_rep = H // KV
     scale = 1.0 / math.sqrt(hd)
+    quant = k_scale is not None
 
     meta = jnp.stack([window_base, seq_lens, slot_active.astype(jnp.int32)],
                      axis=1).astype(jnp.int32)           # (B, 3)
@@ -112,33 +127,42 @@ def paged_decode_attention_pallas(q, pool_k, pool_v, block_table, window_base,
     grid = (B, NB)
     kernel = functools.partial(
         _decode_kernel, bt=BT, kv=KV, n_rep=n_rep, hd=hd,
-        near_window=near_window, scale=scale)
+        near_window=near_window, scale=scale, quant=quant)
 
+    nsp = 4 if quant else 2
+    def _ix(f):
+        # index maps take one trailing arg per scalar-prefetch operand
+        return (lambda b, i, tbl, meta, ks, vs: f(b, i, tbl)) if quant \
+            else (lambda b, i, tbl, meta: f(b, i, tbl))
     gs = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=nsp,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, H, hd), lambda b, i, tbl, meta: (b, 0, 0)),
+            pl.BlockSpec((1, H, hd), _ix(lambda b, i, tbl: (b, 0, 0))),
             pl.BlockSpec((1, BT, KV, hd),
-                         lambda b, i, tbl, meta: (tbl[b, i], 0, 0, 0)),
+                         _ix(lambda b, i, tbl: (tbl[b, i], 0, 0, 0))),
             pl.BlockSpec((1, BT, KV, hd),
-                         lambda b, i, tbl, meta: (tbl[b, i], 0, 0, 0)),
+                         _ix(lambda b, i, tbl: (tbl[b, i], 0, 0, 0))),
         ],
-        out_specs=pl.BlockSpec((1, H, hd), lambda b, i, tbl, meta: (b, 0, 0)),
+        out_specs=pl.BlockSpec((1, H, hd), _ix(lambda b, i, tbl: (b, 0, 0))),
         scratch_shapes=[
             pltpu.VMEM((KV, n_rep, hd), jnp.float32),
             pltpu.VMEM((KV, n_rep), jnp.float32),
             pltpu.VMEM((KV, n_rep), jnp.float32),
         ],
     )
+    sp_args = (block_table.astype(jnp.int32), meta)
+    if quant:
+        sp_args += (k_scale.astype(jnp.float32), v_scale.astype(jnp.float32))
     near_out = pl.pallas_call(
         kernel, grid_spec=gs,
         out_shape=jax.ShapeDtypeStruct((B, H, hd), q.dtype),
         interpret=interpret,
-    )(block_table.astype(jnp.int32), meta, q, pool_k, pool_v)
+    )(*sp_args, q, pool_k, pool_v)
 
     if far_k is None or far_table is None:
         return near_out, jnp.zeros((B, 1), jnp.float32)
+    assert not quant, "far view and the quantized KV tier are exclusive (§10)"
 
     # --- far view (optional policy): jnp path + flash-combine --------------
     from repro.kernels import ref as _ref

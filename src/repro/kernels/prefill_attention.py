@@ -68,12 +68,19 @@ def _prefill_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
                        ).astype(o_ref.dtype)
 
 
-def _chunk_kernel(block_tbl_ref, meta_ref,        # scalar prefetch
-                  q_ref, k_ref, v_ref, ck_ref, cv_ref,
-                  o_ref,
-                  acc_ref, m_ref, l_ref,
-                  *, bt: int, chunk: int, n_rep: int, hd: int,
-                  near_window: int, scale: float):
+def _chunk_kernel(*refs, bt: int, chunk: int, n_rep: int, hd: int,
+                  near_window: int, scale: float, quant: bool):
+    if quant:
+        # quantized tier (DESIGN.md §10): per-block per-head dequant scales
+        # as extra scalar-prefetch operands (SMEM); pool-block loads grow a
+        # fused dequantize epilogue (the chunk's own K/V stays full width)
+        (block_tbl_ref, meta_ref, ks_ref, vs_ref,
+         q_ref, k_ref, v_ref, ck_ref, cv_ref, o_ref,
+         acc_ref, m_ref, l_ref) = refs
+    else:
+        (block_tbl_ref, meta_ref, q_ref, k_ref, v_ref, ck_ref, cv_ref,
+         o_ref, acc_ref, m_ref, l_ref) = refs
+    g = pl.program_id(0)
     i = pl.program_id(1)
     nb = pl.num_programs(1) - 1                   # pool steps; last = chunk
 
@@ -104,6 +111,10 @@ def _chunk_kernel(block_tbl_ref, meta_ref,        # scalar prefetch
     def _pool_block():
         kb = k_ref[0, :, 0].astype(jnp.float32)   # (BT, hd)
         vb = v_ref[0, :, 0].astype(jnp.float32)
+        if quant:
+            blk = block_tbl_ref[jnp.minimum(i, block_tbl_ref.shape[0] - 1)]
+            kb = kb * ks_ref[blk, g]              # scalar scale from SMEM
+            vb = vb * vs_ref[blk, g]
         s = jax.lax.dot_general(q, kb, (((2,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * scale
         pos = wb + i * bt + jax.lax.broadcasted_iota(
@@ -137,51 +148,65 @@ def _chunk_kernel(block_tbl_ref, meta_ref,        # scalar prefetch
 @functools.partial(jax.jit, static_argnames=("near_window", "interpret"))
 def chunked_prefill_attention_pallas(q, pool_k, pool_v, cur_k, cur_v,
                                      block_table, window_base, start_pos,
-                                     n_valid, *, near_window, interpret=True):
+                                     n_valid, *, near_window,
+                                     k_scale=None, v_scale=None,
+                                     interpret=True):
     """One slot's C-token prompt chunk over the paged near window.
 
     q: (C,H,hd); pool_k/v: (P,BT,KV,hd); cur_k/v: (C,KV,hd);
-    block_table: (NB,). Returns (C,H,hd) with rows >= n_valid zeroed.
+    block_table: (NB,). k_scale/v_scale: optional (P,KV) f32 per-block
+    dequant scales for narrow pools (scalar-prefetch/SMEM; DESIGN.md §10).
+    Returns (C,H,hd) with rows >= n_valid zeroed.
     Validated against kernels/ref.py chunked_prefill_attention_ref."""
     C, H, hd = q.shape
     P, BT, KV, _ = pool_k.shape
     NB = block_table.shape[0]
     n_rep = H // KV
     scale = 1.0 / math.sqrt(hd)
+    quant = k_scale is not None
 
     meta = jnp.stack([window_base, start_pos, n_valid]).astype(jnp.int32)
     qg = q.reshape(C, KV, n_rep, hd)
 
     grid = (KV, NB + 1)
     kernel = functools.partial(_chunk_kernel, bt=BT, chunk=C, n_rep=n_rep,
-                               hd=hd, near_window=near_window, scale=scale)
+                               hd=hd, near_window=near_window, scale=scale,
+                               quant=quant)
+
+    def _ix(f):
+        # index maps take one trailing arg per scalar-prefetch operand
+        return (lambda g, i, tbl, meta, ks, vs: f(g, i, tbl)) if quant \
+            else (lambda g, i, tbl, meta: f(g, i, tbl))
     gs = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=4 if quant else 2,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((C, 1, n_rep, hd), lambda g, i, tbl, meta: (0, g, 0, 0)),
+            pl.BlockSpec((C, 1, n_rep, hd), _ix(lambda g, i, tbl: (0, g, 0, 0))),
             pl.BlockSpec((1, BT, 1, hd),
-                         lambda g, i, tbl, meta:
-                         (tbl[jnp.minimum(i, tbl.shape[0] - 1)], 0, g, 0)),
+                         _ix(lambda g, i, tbl:
+                             (tbl[jnp.minimum(i, tbl.shape[0] - 1)], 0, g, 0))),
             pl.BlockSpec((1, BT, 1, hd),
-                         lambda g, i, tbl, meta:
-                         (tbl[jnp.minimum(i, tbl.shape[0] - 1)], 0, g, 0)),
-            pl.BlockSpec((C, 1, hd), lambda g, i, tbl, meta: (0, g, 0)),
-            pl.BlockSpec((C, 1, hd), lambda g, i, tbl, meta: (0, g, 0)),
+                         _ix(lambda g, i, tbl:
+                             (tbl[jnp.minimum(i, tbl.shape[0] - 1)], 0, g, 0))),
+            pl.BlockSpec((C, 1, hd), _ix(lambda g, i, tbl: (0, g, 0))),
+            pl.BlockSpec((C, 1, hd), _ix(lambda g, i, tbl: (0, g, 0))),
         ],
         out_specs=pl.BlockSpec((C, 1, n_rep, hd),
-                               lambda g, i, tbl, meta: (0, g, 0, 0)),
+                               _ix(lambda g, i, tbl: (0, g, 0, 0))),
         scratch_shapes=[
             pltpu.VMEM((C, n_rep, hd), jnp.float32),
             pltpu.VMEM((C, n_rep), jnp.float32),
             pltpu.VMEM((C, n_rep), jnp.float32),
         ],
     )
+    sp_args = (block_table.astype(jnp.int32), meta)
+    if quant:
+        sp_args += (k_scale.astype(jnp.float32), v_scale.astype(jnp.float32))
     out = pl.pallas_call(
         kernel, grid_spec=gs,
         out_shape=jax.ShapeDtypeStruct((C, KV, n_rep, hd), q.dtype),
         interpret=interpret,
-    )(block_table.astype(jnp.int32), meta, qg, pool_k, pool_v, cur_k, cur_v)
+    )(*sp_args, qg, pool_k, pool_v, cur_k, cur_v)
     return out.reshape(C, H, hd)
 
 

@@ -15,6 +15,149 @@ import jax.numpy as jnp
 
 
 # ---------------------------------------------------------------------------
+# quantized KV-block tier (DESIGN.md §10)
+#
+# Pools may store K/V in a narrow dtype (int8 / float8_e4m3) with a sibling
+# per-(layer, block, kv-head) f32 scale pool. The scale pool is indexed by
+# the SAME physical block id as the data pool, so every pager verb that
+# renames or copies blocks (alias/COW/swap) moves data and scale in lockstep
+# with no extra bookkeeping. Quantization is symmetric absmax:
+#     stored = clip(x / scale, ±QMAX)   scale = running_amax / QMAX
+# The scale of a block only GROWS while the block is being appended to; when
+# a new token raises it, the block's existing rows are requantized in place
+# (ratio <= 1, so the rescale never saturates). A write at offset 0 treats
+# the block as fresh (scale resets — physical blocks are recycled).
+# ---------------------------------------------------------------------------
+
+def quant_range(dtype) -> float:
+    """Symmetric representable range of a narrow KV storage dtype."""
+    d = jnp.dtype(dtype)
+    if d == jnp.dtype(jnp.int8):
+        return 127.0
+    if d == jnp.dtype(jnp.float8_e4m3fn):
+        return 448.0
+    raise ValueError(f"not a quantized KV dtype: {dtype}")
+
+
+def _quant_cast(x, dtype):
+    """f32 -> narrow storage cast (round-to-nearest for ints, saturating:
+    float8_e4m3fn overflows to nan, so the clip is load-bearing)."""
+    qmax = quant_range(dtype)
+    x = jnp.clip(x, -qmax, qmax)
+    if jnp.dtype(dtype) == jnp.dtype(jnp.int8):
+        x = jnp.round(x)
+    return x.astype(dtype)
+
+
+def dequant_gathered(win, scale):
+    """Dequantize a gathered window: win (..., BT, KV, hd) narrow storage,
+    scale (..., KV) f32 -> f32. Operates on the GATHERED window only — never
+    convert the whole pool (see the hoisting note in
+    paged_decode_attention_ref)."""
+    return win.astype(jnp.float32) * scale[..., None, :, None]
+
+
+def quant_pool_write_stacked_ref(pool, scale, vals, write_block, write_offset,
+                                 active):
+    """Quantizing variant of pool_write_stacked_ref (one token per slot,
+    all layers): fold the token's per-head absmax into the block scale,
+    requantize the block's existing rows if the scale grew, then store the
+    token at the new scale.
+
+    pool: (L, P, BT, KV, hd) narrow; scale: (L, P, KV) f32;
+    vals: (L, B, KV, hd) full precision; write_block/offset/active: (B,).
+    Returns (pool, scale). Inactive slots redirect to scratch block 0 and
+    write back current values (same discipline as the bf16 op)."""
+    L = pool.shape[0]
+    qmax = quant_range(pool.dtype)
+    blk = jnp.where(active > 0, write_block, 0)
+    off = jnp.where(active > 0, write_offset, 0)
+    l_idx = jnp.arange(L)[:, None]
+    mask = active > 0                                      # (B,)
+    v32 = vals.astype(jnp.float32)
+    amax = jnp.abs(v32).max(axis=-1)                       # (L, B, KV)
+    prev_raw = scale[l_idx, blk[None, :]]                  # (L, B, KV)
+    prev = jnp.where((off == 0)[None, :, None], 0.0, prev_raw)
+    new_scale = jnp.maximum(prev, amax / qmax)
+    # requantize the written blocks' existing rows to the grown scale
+    # (ratio 1 is a lossless roundtrip; ratio 0 zeroes a recycled block)
+    ratio = prev / jnp.maximum(new_scale, 1e-12)           # (L, B, KV)
+    rows_cur = pool[l_idx, blk[None, :]]                   # (L, B, BT, KV, hd)
+    rows_q = _quant_cast(rows_cur.astype(jnp.float32)
+                         * ratio[:, :, None, :, None], pool.dtype)
+    pool = pool.at[l_idx, blk[None, :]].set(
+        jnp.where(mask[None, :, None, None, None], rows_q, rows_cur),
+        mode="drop")
+    qtok = _quant_cast(v32 / jnp.maximum(new_scale, 1e-12)[..., None],
+                       pool.dtype)                         # (L, B, KV, hd)
+    cur_tok = pool[l_idx, blk[None, :], off[None, :]]
+    pool = pool.at[l_idx, blk[None, :], off[None, :]].set(
+        jnp.where(mask[None, :, None, None], qtok, cur_tok), mode="drop")
+    scale = scale.at[l_idx, blk[None, :]].set(
+        jnp.where(mask[None, :, None], new_scale, prev_raw), mode="drop")
+    return pool, scale
+
+
+def quant_pool_write_chunk_ref(pool, scale, vals, write_block, write_offset,
+                               n_valid):
+    """Quantizing variant of pool_write_chunk_ref (batched prefill chunk,
+    all layers). Three phases per written block: (1) reset scales of blocks
+    that START inside this chunk (a token at offset 0) and fold every chunk
+    token's absmax into its block scale via scatter-max; (2) requantize the
+    pre-chunk rows of partially-filled blocks the chunk appends to (exactly
+    one 'first token in block' per block per chunk — a consecutive offset
+    run); (3) store each token at its block's final scale.
+
+    pool: (L, P, BT, KV, hd) narrow; scale: (L, P, KV) f32;
+    vals: (L, B, C, KV, hd); write_block/write_offset: (B, C);
+    n_valid: (B,). Returns (pool, scale)."""
+    L, P, BT, KV, hd = pool.shape
+    B, C = write_block.shape
+    N = B * C
+    qmax = quant_range(pool.dtype)
+    valid = (jnp.arange(C)[None, :] < n_valid[:, None]).reshape(N)
+    blk = jnp.where(valid, write_block.reshape(N), 0)
+    off = jnp.where(valid, write_offset.reshape(N), 0)
+    l_idx = jnp.arange(L)[:, None]
+    v32 = vals.reshape(L, N, KV, hd).astype(jnp.float32)
+    amax = jnp.abs(v32).max(axis=-1)                       # (L, N, KV)
+    prev_raw = scale[l_idx, blk[None, :]]                  # (L, N, KV)
+    fresh = valid & (off == 0)
+    # a block's first chunk token: offset 0 (fresh block) or the slot's
+    # first chunk token (chunks append a consecutive offset run, so every
+    # other token's predecessor is in the same block)
+    first = valid & ((off == 0) | (jnp.arange(N) % C == 0))
+    prev = jnp.where(fresh[None, :, None], 0.0, prev_raw)  # (L, N, KV)
+    # phase 1: reset fresh blocks (min against 0; scales are >= 0 so this
+    # is an exact set, and duplicate indices commute), then fold absmax
+    scale = scale.at[l_idx, blk[None, :]].min(
+        jnp.where(fresh[None, :, None], 0.0, jnp.inf), mode="drop")
+    scale = scale.at[l_idx, blk[None, :]].max(
+        jnp.where(valid[None, :, None], amax / qmax, 0.0), mode="drop")
+    new_scale = scale[l_idx, blk[None, :]]                 # (L, N, KV) final
+    # phase 2: requantize pre-chunk rows (first-token rows only; a fresh
+    # block's ratio is 0, zeroing recycled contents). Non-first tokens are
+    # redirected to scratch block 0 so the duplicate-index scatter stays
+    # conflict-free: every block is written by at most ONE first token,
+    # and all scratch writes carry the same (current) block-0 rows.
+    ratio = prev / jnp.maximum(new_scale, 1e-12)
+    blk_first = jnp.where(first, blk, 0)
+    rows_cur = pool[l_idx, blk_first[None, :]]             # (L, N, BT, KV, hd)
+    rows_q = _quant_cast(rows_cur.astype(jnp.float32)
+                         * ratio[:, :, None, :, None], pool.dtype)
+    pool = pool.at[l_idx, blk_first[None, :]].set(
+        jnp.where(first[None, :, None, None, None], rows_q, rows_cur),
+        mode="drop")
+    # phase 3: store the chunk tokens at the final block scales
+    qtok = _quant_cast(v32 / jnp.maximum(new_scale, 1e-12)[..., None],
+                       pool.dtype)
+    cur_tok = pool[l_idx, blk[None, :], off[None, :]]
+    pool = pool.at[l_idx, blk[None, :], off[None, :]].set(
+        jnp.where(valid[None, :, None, None], qtok, cur_tok), mode="drop")
+    return pool, scale
+
+
+# ---------------------------------------------------------------------------
 # pool write (this step's K/V -> reserved block slot)
 # ---------------------------------------------------------------------------
 
@@ -88,6 +231,8 @@ def paged_decode_attention_ref(
     far_table=None, far_valid=None,  # (B, CAP)
     cur_k=None, cur_v=None,  # (B, KV, hd) CURRENT token (pool is read-only
                              # inside the layer scan; see §Perf iteration 8)
+    k_scale=None, v_scale=None,  # (P, KV) per-block per-head dequant scales
+                                 # (quantized KV tier, DESIGN.md §10)
     sm_scale: Optional[float] = None,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Returns (attn_out (B,H,hd), far_utility (B,CAP)).
@@ -112,9 +257,19 @@ def paged_decode_attention_ref(
     n_rep = H // KV
     scale = sm_scale if sm_scale is not None else 1.0 / math.sqrt(hd)
 
-    # gather near window: (B, NB, BT, KV, hd) -> (B, W, KV, hd)
-    win_k = pool_k[block_table].reshape(B, W, KV, hd)
-    win_v = pool_v[block_table].reshape(B, W, KV, hd)
+    # gather near window: (B, NB, BT, KV, hd) -> (B, W, KV, hd). Quantized
+    # pools (DESIGN.md §10) dequantize the GATHERED blocks only — the
+    # per-block scale gather rides the same block_table dereference, so the
+    # multiply cannot hoist above the gather (contrast the .astype warning
+    # below).
+    if k_scale is not None:
+        win_k = dequant_gathered(pool_k[block_table],
+                                 k_scale[block_table]).reshape(B, W, KV, hd)
+        win_v = dequant_gathered(pool_v[block_table],
+                                 v_scale[block_table]).reshape(B, W, KV, hd)
+    else:
+        win_k = pool_k[block_table].reshape(B, W, KV, hd)
+        win_v = pool_v[block_table].reshape(B, W, KV, hd)
 
     pos = window_base[:, None] + jnp.arange(W)[None, :]           # (B, W)
     t = seq_lens[:, None]
@@ -197,6 +352,7 @@ def chunked_prefill_attention_ref(
     n_valid,                # ()    valid tokens in the chunk
     *,
     near_window: int,
+    k_scale=None, v_scale=None,  # (P, KV) per-block dequant scales (§10)
     sm_scale: Optional[float] = None,
 ):
     """One slot's prompt chunk: query i (abs pos p_i = start_pos + i) attends
@@ -215,8 +371,14 @@ def chunked_prefill_attention_ref(
     n_rep = H // KV
     scale = sm_scale if sm_scale is not None else 1.0 / math.sqrt(hd)
 
-    win_k = pool_k[block_table].reshape(Wn, KV, hd)
-    win_v = pool_v[block_table].reshape(Wn, KV, hd)
+    if k_scale is not None:       # quantized tier: dequantize the gather (§10)
+        win_k = dequant_gathered(pool_k[block_table],
+                                 k_scale[block_table]).reshape(Wn, KV, hd)
+        win_v = dequant_gathered(pool_v[block_table],
+                                 v_scale[block_table]).reshape(Wn, KV, hd)
+    else:
+        win_k = pool_k[block_table].reshape(Wn, KV, hd)
+        win_v = pool_v[block_table].reshape(Wn, KV, hd)
 
     qpos = start_pos + jnp.arange(C)                              # (C,)
     pos_w = window_base + jnp.arange(Wn)                          # (Wn,)

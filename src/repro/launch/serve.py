@@ -32,6 +32,17 @@ repeated system prompts skip their prefill entirely, bitwise-identically.
     PYTHONPATH=src python -m repro.launch.serve --workload shared_prefix \
         --requests 32 --prefix-cache
 
+Quantized KV tier (DESIGN.md §10): ``--kv-dtype fp8_e4m3 | int8`` stores
+KV blocks narrow with per-block per-head scales — ~2x less reserved KV
+and half the swap/COW bytes (``quant_bytes_saved``), composable with all
+of the above. ``--kv-dtype bf16`` (default) is bitwise-identical to seed.
+
+    PYTHONPATH=src python -m repro.launch.serve --workload mixed \
+        --requests 32 --kv-dtype fp8_e4m3
+
+Every flag and every ``audit()`` counter is tabulated with the invariant
+it witnesses in docs/OPERATIONS.md.
+
     XLA_FLAGS=--xla_force_host_platform_device_count=4 \
         PYTHONPATH=src python -m repro.launch.serve --mesh 2x2
     (when launched as __main__ the flag is set automatically for CPU runs)
@@ -155,7 +166,10 @@ def run_lanes(engines: list, reqs, *, max_steps: int = 100_000,
     return out
 
 
-def main(argv=None):
+def build_arg_parser() -> argparse.ArgumentParser:
+    """The serve CLI surface. Kept in a named builder so the operator-doc
+    regression test (tests/test_docs.py) can diff every flag against
+    docs/OPERATIONS.md."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2.5-32b")
     ap.add_argument("--mode", default="paged_merge",
@@ -186,7 +200,18 @@ def main(argv=None):
     ap.add_argument("--prefix-cache-blocks", type=int, default=0,
                     help="prefix-cache pin budget in blocks "
                          "(0 = half the device pool)")
+    ap.add_argument("--kv-dtype", default="bf16",
+                    choices=["bf16", "fp8_e4m3", "int8"],
+                    help="KV-block storage width (DESIGN.md §10): narrow "
+                         "dtypes store K/V quantized with per-block "
+                         "per-head scales, halving reserved/swap/COW KV "
+                         "bytes under the same descriptor interface")
     ap.add_argument("--json", action="store_true")
+    return ap
+
+
+def main(argv=None):
+    ap = build_arg_parser()
     args = ap.parse_args(argv)
 
     if (args.kv_oversubscribe > 1.0 or args.host_pool_blocks > 0) \
@@ -201,7 +226,8 @@ def main(argv=None):
                           kv_oversubscribe=args.kv_oversubscribe,
                           host_pool_blocks=args.host_pool_blocks,
                           prefix_cache=args.prefix_cache,
-                          prefix_cache_blocks=args.prefix_cache_blocks)
+                          prefix_cache_blocks=args.prefix_cache_blocks,
+                          kv_dtype=args.kv_dtype)
     tcfg = traces.TraceConfig(n_requests=args.requests,
                               vocab=engines[0].cfg.vocab_size,
                               token_scale=args.token_scale)

@@ -57,20 +57,60 @@ def prefill_chunk(params, cfg: ModelConfig, pools, descr, **kw):
 # decode pool geometry
 # ---------------------------------------------------------------------------
 
+# quantized KV-block storage tier (DESIGN.md §10): kv_dtype -> storage dtype.
+# Narrow dtypes add sibling per-(layer, block, kv-head) f32 scale pools that
+# the pager moves in lockstep with their data blocks (same block index).
+KV_DTYPES = {"bf16": cm.DTYPE,
+             "fp8_e4m3": jnp.float8_e4m3fn,
+             "int8": jnp.int8}
+
+
+def kv_storage_dtype(kv_dtype: str):
+    if kv_dtype not in KV_DTYPES:
+        raise ValueError(f"unknown kv_dtype {kv_dtype!r}; "
+                         f"one of {sorted(KV_DTYPES)}")
+    return KV_DTYPES[kv_dtype]
+
+
+def quant_decode_error(cfg: ModelConfig, kv_dtype: str) -> str | None:
+    """Why this config can NOT store KV quantized (None = compatible).
+    Only the GQA-paged dense/vlm families have the quantizing write path
+    and the dequantizing attention epilogue (DESIGN.md §10)."""
+    if kv_dtype == "bf16":
+        return None
+    if kv_dtype not in KV_DTYPES:
+        return f"unknown kv_dtype {kv_dtype!r}; one of {sorted(KV_DTYPES)}"
+    if cfg.family not in ("dense", "vlm"):
+        return (f"kv_dtype={kv_dtype!r} requires a GQA-paged family "
+                f"(dense/vlm), not {cfg.family!r}")
+    return None
+
+
 def decode_pool_shapes(cfg: ModelConfig, *, batch: int, num_blocks: int,
                        block_tokens: int, max_chunks: int = 0,
-                       enc_len: int = 0, dtype=cm.DTYPE) -> Dict[str, jax.ShapeDtypeStruct]:
+                       enc_len: int = 0, dtype=cm.DTYPE,
+                       kv_dtype: str = "bf16") -> Dict[str, jax.ShapeDtypeStruct]:
     """ShapeDtypeStructs for every decode-state buffer (dry-run + engine).
 
     num_blocks = physical blocks in the (per-shard) pool; block 0 is scratch.
-    max_chunks > 0 enables far-view buffers.
+    max_chunks > 0 enables far-view buffers. kv_dtype != 'bf16' stores k/v
+    in a narrow dtype plus per-block per-head f32 scale pools (§10).
     """
     L, KV, HD = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
     s = jax.ShapeDtypeStruct
     fam = cfg.family
+    err = quant_decode_error(cfg, kv_dtype)
+    if err is not None:
+        raise ValueError(err)
     if fam in ("dense", "vlm"):
-        pools = {"k": s((L, num_blocks, block_tokens, KV, HD), dtype),
-                 "v": s((L, num_blocks, block_tokens, KV, HD), dtype)}
+        kv_store = dtype if kv_dtype == "bf16" else kv_storage_dtype(kv_dtype)
+        pools = {"k": s((L, num_blocks, block_tokens, KV, HD), kv_store),
+                 "v": s((L, num_blocks, block_tokens, KV, HD), kv_store)}
+        if kv_dtype != "bf16":
+            # sibling physical resource: indexed by the same block id, so
+            # alias/COW/swap move data + scale chains atomically (§10)
+            pools["k_scale"] = s((L, num_blocks, KV), jnp.float32)
+            pools["v_scale"] = s((L, num_blocks, KV), jnp.float32)
         if max_chunks:
             pools["far_k"] = s((L, batch, max_chunks, KV, HD), dtype)
             pools["far_v"] = s((L, batch, max_chunks, KV, HD), dtype)
@@ -166,9 +206,12 @@ def tp_decode_error(cfg: ModelConfig, tp: int) -> str | None:
     return None
 
 
-def paged_payload_bytes_per_token(cfg: ModelConfig) -> int:
-    """Bytes/token/layer moved through the paged pool (bf16)."""
-    return cfg.kv_width * 2
+def paged_payload_bytes_per_token(cfg: ModelConfig,
+                                  kv_dtype: str = "bf16") -> int:
+    """Bytes/token/layer moved through the paged pool (storage width of
+    ``kv_dtype``; per-block scale overhead is accounted separately —
+    ``KVRMEngine.scale_bytes_per_block``, DESIGN.md §10)."""
+    return cfg.kv_width * jnp.dtype(kv_storage_dtype(kv_dtype)).itemsize
 
 
 def n_paged_layers(cfg: ModelConfig) -> int:

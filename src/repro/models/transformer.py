@@ -96,27 +96,45 @@ def prefill_chunk(params, cfg: ModelConfig, pools, descr):
     B, C = descr.tokens.shape
     x = params["embed"][descr.tokens]                 # (B, C, d)
     positions = descr.start_pos[:, None] + jnp.arange(C)[None]  # (B, C)
+    quant = "k_scale" in pools                        # narrow KV tier (§10)
 
     attend = jax.vmap(
-        lambda q, pk, pv, k, v, tbl, wb, sp, nv: ops.chunked_prefill_attention(
-            q, pk, pv, k, v, tbl, wb, sp, nv, near_window=sv.near_window),
-        in_axes=(0, None, None, 0, 0, 0, 0, 0, 0))
+        lambda q, pk, pv, k, v, tbl, wb, sp, nv, ks, vs:
+        ops.chunked_prefill_attention(
+            q, pk, pv, k, v, tbl, wb, sp, nv, near_window=sv.near_window,
+            k_scale=ks, v_scale=vs),
+        in_axes=(0, None, None, 0, 0, 0, 0, 0, 0, None, None))
 
     # Same read-only pool discipline as decode_step: each layer's chunk K/V
     # attends explicitly and is emitted as a delta, scattered once post-scan.
     def block(x, layer_xs):
-        layer, pk, pv = layer_xs
+        if quant:
+            layer, pk, pv, psk, psv = layer_xs
+        else:
+            layer, pk, pv = layer_xs
+            psk = psv = None
         h = cm.rmsnorm(layer["ln1"], x, cfg.norm_eps)
         q, k, v = cm.gqa_qkv(layer["attn"], cfg, h, positions)
         o = attend(q, pk, pv, k, v, descr.block_table, descr.window_base,
-                   descr.start_pos, descr.n_valid)   # (B, C, H, hd)
+                   descr.start_pos, descr.n_valid, psk, psv)  # (B, C, H, hd)
         x = x + cm.dense(layer["attn"]["wo"], o.reshape(B, C, -1))
         h = cm.rmsnorm(layer["ln2"], x, cfg.norm_eps)
         x = x + cm.mlp_apply(layer["mlp"], h, cfg.mlp_act)
         return x, (k, v)
 
-    _, ys = jax.lax.scan(block, x, (params["layers"], pools["k"], pools["v"]))
+    xs = ((params["layers"], pools["k"], pools["v"], pools["k_scale"],
+           pools["v_scale"]) if quant
+          else (params["layers"], pools["k"], pools["v"]))
+    _, ys = jax.lax.scan(block, x, xs)
     new_pools = dict(pools)
+    if quant:
+        new_pools["k"], new_pools["k_scale"] = ops.quant_pool_write_chunk(
+            pools["k"], pools["k_scale"], ys[0], descr.write_block,
+            descr.write_offset, descr.n_valid)
+        new_pools["v"], new_pools["v_scale"] = ops.quant_pool_write_chunk(
+            pools["v"], pools["v_scale"], ys[1], descr.write_block,
+            descr.write_offset, descr.n_valid)
+        return new_pools
     new_pools["k"] = ops.pool_write_chunk(pools["k"], ys[0], descr.write_block,
                                           descr.write_offset, descr.n_valid)
     new_pools["v"] = ops.pool_write_chunk(pools["v"], ys[1], descr.write_block,
@@ -141,6 +159,9 @@ def decode_step(params, cfg: ModelConfig, tokens, pools, descr):
     pos = descr.seq_lens.astype(jnp.float32)[:, None]  # rope position = t
 
     farview = "far_k" in pools
+    quant = "k_scale" in pools                       # narrow KV tier (§10)
+    assert not (farview and quant), \
+        "far view and the quantized KV tier are exclusive (DESIGN.md §10)"
 
     # The KV pools are READ-ONLY inside the layer scan; each layer's new K/V
     # attends explicitly (cur_k/cur_v) and is emitted as a per-layer delta,
@@ -149,8 +170,12 @@ def decode_step(params, cfg: ModelConfig, tokens, pools, descr):
     # pool every layer (§Perf iteration 8: 850ms -> ~30ms memory term).
     def block(carry, layer_xs):
         x, fu = carry
+        psk = psv = None
         if farview:
             layer, pk, pv, fk, fv = layer_xs
+        elif quant:
+            layer, pk, pv, psk, psv = layer_xs
+            fk = fv = None
         else:
             layer, pk, pv = layer_xs
             fk = fv = None
@@ -178,7 +203,7 @@ def decode_step(params, cfg: ModelConfig, tokens, pools, descr):
             far_k=fk, far_v=fv,
             far_table=descr.far_table if farview else None,
             far_valid=descr.far_valid if farview else None,
-            cur_k=k, cur_v=v)
+            cur_k=k, cur_v=v, k_scale=psk, v_scale=psv)
         x = x + cm.dense(layer["attn"]["wo"], o.reshape(B, -1))
         h = cm.rmsnorm(layer["ln2"], x, cfg.norm_eps)
         x = x + cm.mlp_apply(layer["mlp"], h, cfg.mlp_act)
@@ -186,15 +211,32 @@ def decode_step(params, cfg: ModelConfig, tokens, pools, descr):
         return (x, fu + futil), ys
 
     fu0 = jnp.zeros((B, descr.far_table.shape[1]), jnp.float32)
-    xs = ((params["layers"], pools["k"], pools["v"], pools["far_k"], pools["far_v"])
-          if farview else (params["layers"], pools["k"], pools["v"]))
+    if farview:
+        xs = (params["layers"], pools["k"], pools["v"], pools["far_k"],
+              pools["far_v"])
+    elif quant:
+        xs = (params["layers"], pools["k"], pools["v"], pools["k_scale"],
+              pools["v_scale"])
+    else:
+        xs = (params["layers"], pools["k"], pools["v"])
     (x, fu), ys = jax.lax.scan(block, (x, fu0), xs)
-    new_pools = {
-        "k": ops.pool_write_stacked(pools["k"], ys[0], descr.write_block,
-                                    descr.write_offset, descr.slot_active),
-        "v": ops.pool_write_stacked(pools["v"], ys[1], descr.write_block,
-                                    descr.write_offset, descr.slot_active),
-    }
+    if quant:
+        # quantize-at-commit (§10): data + scale pools updated together
+        new_k, new_ks = ops.quant_pool_write_stacked(
+            pools["k"], pools["k_scale"], ys[0], descr.write_block,
+            descr.write_offset, descr.slot_active)
+        new_v, new_vs = ops.quant_pool_write_stacked(
+            pools["v"], pools["v_scale"], ys[1], descr.write_block,
+            descr.write_offset, descr.slot_active)
+        new_pools = {"k": new_k, "v": new_v,
+                     "k_scale": new_ks, "v_scale": new_vs}
+    else:
+        new_pools = {
+            "k": ops.pool_write_stacked(pools["k"], ys[0], descr.write_block,
+                                        descr.write_offset, descr.slot_active),
+            "v": ops.pool_write_stacked(pools["v"], ys[1], descr.write_block,
+                                        descr.write_offset, descr.slot_active),
+        }
     if farview:
         new_pools["far_k"], new_pools["far_v"] = ys[2], ys[3]
     x = cm.rmsnorm(params["ln_f"], x, cfg.norm_eps)

@@ -1,0 +1,360 @@
+"""Quantized KV-block storage tier (DESIGN.md §10).
+
+Unit layer: symmetric absmax quantize/requantize ops and the dequantizing
+attention epilogues (jnp ref + Pallas interpret mode). Engine layer: bf16
+stays bitwise-identical to the default path, narrow dtypes cut reserved KV
+~2x, and the tier composes with every subsystem — pipeline depths, chunked
+prefill, the radix prefix cache (a hit aliases data+scale chains
+atomically), the host tier (swap moves scales in lockstep), and TP.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.core.engine import EngineConfig, KVRMEngine
+from repro.core.scheduler import Request
+from repro.kernels import ref
+from repro.models import registry
+
+ARCH = "qwen2.5-32b"
+
+
+@pytest.fixture(scope="module")
+def dense_setup():
+    cfg = get_reduced(ARCH)
+    params = registry.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _mk_engine(cfg, params, **kw):
+    e = dict(mode="paged_merge", batch=4, max_seq=96, block_tokens=8)
+    e.update(kw)
+    return KVRMEngine(cfg, params, EngineConfig(**e))
+
+
+def _reqs(seed=3, n=6, plen=12, gen=24, vocab=256):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, vocab, size=plen).astype(np.int32),
+                    gen_len=gen) for i in range(n)]
+
+
+def _run(eng, reqs):
+    for r in reqs:
+        eng.submit(r)
+    eng.run(max_steps=5000)
+    return {r.rid: list(r.generated) for r in eng.sched.finished}
+
+
+# ---------------------------------------------------------------------------
+# unit: quantize-at-commit ops (ref.py)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype,rtol", [(jnp.int8, 0.02),
+                                        (jnp.float8_e4m3fn, 0.08)])
+def test_stacked_write_roundtrip(dtype, rtol):
+    """Tokens written one at a time into a block dequantize back to the
+    original values within the dtype's quantization error, including after
+    the running scale grew (requantization of earlier tokens)."""
+    L, P, BT, KV, hd, B = 2, 6, 8, 2, 16, 4
+    pool = jnp.zeros((L, P, BT, KV, hd), dtype)
+    scale = jnp.zeros((L, P, KV), jnp.float32)
+    rng = np.random.default_rng(0)
+    # magnitudes GROW with the offset so every append raises the scale —
+    # the hardest case for in-place requantization
+    vals = [jnp.asarray(rng.normal(size=(L, B, KV, hd)) * (1 + 3 * off),
+                        jnp.float32) for off in range(BT)]
+    blk = jnp.arange(1, B + 1, dtype=jnp.int32)          # one block per slot
+    act = jnp.ones(B, jnp.int32)
+    for off in range(BT):
+        pool, scale = ref.quant_pool_write_stacked_ref(
+            pool, scale, vals[off], blk, jnp.full(B, off, jnp.int32), act)
+    got = np.asarray(pool[:, blk], np.float32) \
+        * np.asarray(scale[:, blk])[:, :, None, :, None]   # (L,B,BT,KV,hd)
+    want = np.stack([np.asarray(v) for v in vals], axis=2)
+    denom = np.abs(want).max()
+    assert np.abs(got - want).max() / denom < rtol
+
+
+@pytest.mark.parametrize("dtype", [jnp.int8, jnp.float8_e4m3fn])
+def test_chunk_write_matches_stacked(dtype):
+    """A chunk write and the equivalent token-at-a-time writes agree to
+    quantization error (same final scale; chunk quantizes once, stacked
+    requantizes incrementally)."""
+    L, P, BT, KV, hd, B, C = 1, 8, 8, 2, 16, 2, 12
+    rng = np.random.default_rng(1)
+    vals = jnp.asarray(rng.normal(size=(L, B, C, KV, hd)), jnp.float32)
+    # slots write C=12 consecutive tokens starting mid-block (offset 4)
+    blocks = np.array([[1, 2], [3, 4]])                    # (B, 2)
+    idx = 4 + np.arange(C)
+    wb = jnp.asarray(blocks[np.arange(B)[:, None], idx[None, :] // BT],
+                     jnp.int32)                            # (B, C)
+    wo = jnp.asarray(np.tile(idx % BT, (B, 1)), jnp.int32)
+    nv = jnp.full(B, C, jnp.int32)
+    pool_c = jnp.zeros((L, P, BT, KV, hd), dtype)
+    scale_c = jnp.zeros((L, P, KV), jnp.float32)
+    pool_c, scale_c = ref.quant_pool_write_chunk_ref(
+        pool_c, scale_c, vals, wb, wo, nv)
+    pool_s = jnp.zeros((L, P, BT, KV, hd), dtype)
+    scale_s = jnp.zeros((L, P, KV), jnp.float32)
+    act = jnp.ones(B, jnp.int32)
+    for c in range(C):
+        pool_s, scale_s = ref.quant_pool_write_stacked_ref(
+            pool_s, scale_s, vals[:, :, c], wb[:, c], wo[:, c], act)
+    # final scales are identical (running max == batch max)
+    np.testing.assert_allclose(np.asarray(scale_c), np.asarray(scale_s),
+                               rtol=1e-6)
+    dq_c = np.asarray(pool_c, np.float32) * \
+        np.asarray(scale_c)[:, :, None, :, None]
+    dq_s = np.asarray(pool_s, np.float32) * \
+        np.asarray(scale_s)[:, :, None, :, None]
+    tol = 0.02 if dtype == jnp.int8 else 0.1
+    assert np.abs(dq_c - dq_s).max() <= tol * max(1e-6, np.abs(dq_s).max())
+
+
+def test_fresh_block_resets_scale():
+    """A write at offset 0 treats the block as recycled: stale contents and
+    the stale scale must not leak into the new occupant."""
+    L, P, BT, KV, hd = 1, 4, 8, 2, 16
+    pool = jnp.full((L, P, BT, KV, hd), 100, jnp.int8)     # stale garbage
+    scale = jnp.full((L, P, KV), 99.0, jnp.float32)        # stale scale
+    vals = jnp.full((L, 1, KV, hd), 0.5, jnp.float32)
+    pool, scale = ref.quant_pool_write_stacked_ref(
+        pool, scale, vals, jnp.asarray([2], jnp.int32),
+        jnp.asarray([0], jnp.int32), jnp.asarray([1], jnp.int32))
+    s = np.asarray(scale[0, 2])
+    np.testing.assert_allclose(s, 0.5 / 127.0, rtol=1e-6)
+    dq = np.asarray(pool[0, 2, 0], np.float32) * s[:, None]
+    np.testing.assert_allclose(dq, 0.5, rtol=0.02)
+    # rows beyond the written token were zeroed (ratio 0), not left stale
+    assert (np.asarray(pool[0, 2, 1:]) == 0).all()
+
+
+def test_inactive_slots_leave_pool_untouched():
+    L, P, BT, KV, hd = 1, 4, 8, 2, 16
+    rng = np.random.default_rng(2)
+    pool = jnp.asarray(rng.integers(-50, 50, size=(L, P, BT, KV, hd)),
+                       jnp.int8)
+    scale = jnp.asarray(rng.uniform(0.01, 1, size=(L, P, KV)), jnp.float32)
+    vals = jnp.asarray(rng.normal(size=(L, 2, KV, hd)), jnp.float32)
+    p2, s2 = ref.quant_pool_write_stacked_ref(
+        pool, scale, vals, jnp.asarray([1, 2], jnp.int32),
+        jnp.asarray([3, 3], jnp.int32), jnp.asarray([0, 0], jnp.int32))
+    assert (np.asarray(p2) == np.asarray(pool)).all()
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(scale))
+
+
+# ---------------------------------------------------------------------------
+# unit: dequantizing attention epilogues (ref + Pallas interpret)
+# ---------------------------------------------------------------------------
+
+def _quant_pool_case(seed=0, B=2, H=4, KV=2, hd=32, BT=8, NB=4):
+    P = NB * B + 4
+    ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+    q = jax.random.normal(ks[0], (B, H, hd), jnp.float32)
+    kq = (jax.random.normal(ks[1], (P, BT, KV, hd)) * 60).astype(jnp.int8)
+    vq = (jax.random.normal(ks[2], (P, BT, KV, hd)) * 60).astype(jnp.int8)
+    ksc = jax.random.uniform(ks[3], (P, KV), minval=0.005, maxval=0.02)
+    vsc = jax.random.uniform(ks[4], (P, KV), minval=0.005, maxval=0.02)
+    tbl = np.stack([np.random.default_rng(i).permutation(
+        np.arange(1, P))[:NB] for i in range(B)]).astype(np.int32)
+    seq = np.random.default_rng(9).integers(1, NB * BT, size=B).astype(np.int32)
+    return (q, kq, vq, ksc, vsc, jnp.asarray(tbl), jnp.zeros(B, jnp.int32),
+            jnp.asarray(seq), jnp.ones(B, jnp.int32))
+
+
+def test_ref_dequant_equals_explicit():
+    """The scale path equals dequantizing the pool up front and running the
+    plain bf16 ref — the epilogue is a pure layout optimization."""
+    q, kq, vq, ksc, vsc, tbl, wb, seq, act = _quant_pool_case()
+    W = tbl.shape[1] * kq.shape[1]
+    out_q, _ = ref.paged_decode_attention_ref(
+        q, kq, vq, tbl, wb, seq, act, near_window=W,
+        k_scale=ksc, v_scale=vsc)
+    k_f = kq.astype(jnp.float32) * ksc[:, None, :, None]
+    v_f = vq.astype(jnp.float32) * vsc[:, None, :, None]
+    out_f, _ = ref.paged_decode_attention_ref(
+        q, k_f, v_f, tbl, wb, seq, act, near_window=W)
+    np.testing.assert_allclose(np.asarray(out_q), np.asarray(out_f),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_pallas_quant_decode_matches_ref():
+    q, kq, vq, ksc, vsc, tbl, wb, seq, act = _quant_pool_case()
+    W = tbl.shape[1] * kq.shape[1]
+    from repro.kernels.paged_attention import paged_decode_attention_pallas
+    out_p, _ = paged_decode_attention_pallas(
+        q, kq, vq, tbl, wb, seq, act, near_window=W,
+        k_scale=ksc, v_scale=vsc)
+    out_r, _ = ref.paged_decode_attention_ref(
+        q, kq, vq, tbl, wb, seq, act, near_window=W,
+        k_scale=ksc, v_scale=vsc)
+    np.testing.assert_allclose(np.asarray(out_p), np.asarray(out_r),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_pallas_quant_chunked_prefill_matches_ref():
+    _, kq, vq, ksc, vsc, tbl, _, _, _ = _quant_pool_case()
+    C, H, KV, hd = 8, 4, 2, 32
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    qc = jax.random.normal(ks[0], (C, H, hd), jnp.float32)
+    ck = jax.random.normal(ks[1], (C, KV, hd), jnp.float32)
+    cv = jax.random.normal(ks[2], (C, KV, hd), jnp.float32)
+    W = tbl.shape[1] * kq.shape[1]
+    from repro.kernels.prefill_attention import \
+        chunked_prefill_attention_pallas
+    args = (qc, kq, vq, ck, cv, tbl[0], jnp.int32(0), jnp.int32(17),
+            jnp.int32(6))
+    out_p = chunked_prefill_attention_pallas(
+        *args, near_window=W, k_scale=ksc, v_scale=vsc)
+    out_r = ref.chunked_prefill_attention_ref(
+        *args, near_window=W, k_scale=ksc, v_scale=vsc)
+    np.testing.assert_allclose(np.asarray(out_p), np.asarray(out_r),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# engine: bf16 identity, memory reduction, audit surface
+# ---------------------------------------------------------------------------
+
+def test_bf16_kv_dtype_is_the_default_path(dense_setup):
+    """kv_dtype='bf16' allocates NO scale pools and keeps the storage dtype
+    — the executor traces the exact seed computation (bitwise identity with
+    the default config follows: same pools, same code path)."""
+    cfg, params = dense_setup
+    eng = _mk_engine(cfg, params, kv_dtype="bf16")
+    dflt = _mk_engine(cfg, params)
+    assert "k_scale" not in eng.pools and "v_scale" not in eng.pools
+    assert eng.pools["k"].dtype == dflt.pools["k"].dtype
+    assert eng.block_bytes == dflt.block_bytes
+    assert eng.scale_bytes_per_block == 0
+
+
+@pytest.mark.parametrize("kvd", ["fp8_e4m3", "int8"])
+def test_quant_engine_runs_and_halves_reserved_kv(dense_setup, kvd):
+    cfg, params = dense_setup
+    base = _mk_engine(cfg, params)
+    _run(base, _reqs())
+    q = _mk_engine(cfg, params, kv_dtype=kvd)
+    tq = _run(q, _reqs())
+    assert len(tq) == 6 and all(len(v) == 24 for v in tq.values())
+    ratio = base.peak_reserved_kv / q.peak_reserved_kv
+    assert ratio >= 1.8, f"{kvd} reserved-KV ratio {ratio:.2f} < 1.8"
+    a = q.audit()
+    assert a["kv_dtype"] == kvd
+    assert a["quant_bytes_saved"] > 0
+    assert a["quant_scale_bytes"] > 0
+    assert a["compilations"] == 1 and a["single_commit_per_step"]
+
+
+def test_quant_pipeline_depths_identical(dense_setup):
+    cfg, params = dense_setup
+    t0 = _run(_mk_engine(cfg, params, kv_dtype="fp8_e4m3",
+                         pipeline_depth=0), _reqs())
+    t1 = _run(_mk_engine(cfg, params, kv_dtype="fp8_e4m3",
+                         pipeline_depth=1), _reqs())
+    assert t0 == t1
+
+
+def test_quant_chunked_prefill_runs(dense_setup):
+    cfg, params = dense_setup
+    eng = _mk_engine(cfg, params, kv_dtype="int8", prefill_chunk=8)
+    tq = _run(eng, _reqs(plen=24))
+    assert eng.audit()["prefill_chunks_run"] > 0
+    assert len(tq) == 6
+
+
+def test_scale_pools_are_block_indexed(dense_setup):
+    """The lockstep invariant's mechanical root: scale pools share the data
+    pools' physical block axis, so the COW-copy and swap gather/scatter
+    loops (engine._block_pool_keys) move them automatically."""
+    cfg, params = dense_setup
+    eng = _mk_engine(cfg, params, kv_dtype="fp8_e4m3")
+    assert set(eng._block_pool_keys) == {"k", "v", "k_scale", "v_scale"}
+    assert eng.pools["k_scale"].shape[1] == eng.num_blocks
+
+
+# ---------------------------------------------------------------------------
+# engine: composition with §8 host tier, §9 prefix cache, §4 TP
+# ---------------------------------------------------------------------------
+
+def test_quant_prefix_hit_bitwise_identical(dense_setup):
+    """A prefix-cache hit aliases the cached (data, scale) chains
+    atomically: the warm run reuses byte-identical quantized KV, so its
+    token streams match the cold quantized run exactly."""
+    cfg, params = dense_setup
+    pfx = np.random.default_rng(7).integers(0, 256, size=16).astype(np.int32)
+
+    def preqs():
+        rng = np.random.default_rng(11)
+        return [Request(rid=i, prompt=np.concatenate(
+            [pfx, rng.integers(0, 256, size=5).astype(np.int32)]),
+            gen_len=16) for i in range(6)]
+
+    cold = _mk_engine(cfg, params, kv_dtype="fp8_e4m3")
+    t_cold = _run(cold, preqs())
+    warm = _mk_engine(cfg, params, kv_dtype="fp8_e4m3", prefix_cache=True)
+    t_warm = _run(warm, preqs())
+    a = warm.audit()
+    assert a["prefix_hits"] > 0
+    assert t_cold == t_warm
+
+
+def test_quant_preempt_resume_bitwise_identical(dense_setup):
+    """Swap round-trips move narrow blocks AND their scales in lockstep;
+    a preempted-and-resumed quantized request matches the unpreempted
+    quantized run token for token."""
+    cfg, params = dense_setup
+
+    def lreqs():
+        rng = np.random.default_rng(1)
+        return [Request(rid=i,
+                        prompt=rng.integers(0, 256, size=8).astype(np.int32),
+                        gen_len=48) for i in range(6)]
+
+    kw = dict(batch=4, max_seq=64, near_window=32, block_tokens=8,
+              kv_dtype="fp8_e4m3")
+    base = _mk_engine(cfg, params, **kw)
+    t_base = _run(base, lreqs())
+    over = _mk_engine(cfg, params, pool_budget_frac=0.1,
+                      host_pool_blocks=40, **kw)
+    t_over = _run(over, lreqs())
+    a = over.audit()
+    assert a["preemptions"] >= 1, "burst failed to preempt"
+    assert a["swap_out_blocks"] > 0
+    assert t_base == t_over
+
+
+def test_quant_under_tp_matches_single_device(dense_setup):
+    """Scale pools shard their kv-head axis with the data pools (§4); the
+    dequant epilogue is per-kv-head local, so TP greedy decode stays
+    token-identical to the single-device quantized engine."""
+    cfg, params = dense_setup
+    from repro.launch import mesh as mesh_mod
+    if len(jax.devices()) < 2:
+        pytest.skip("needs >= 2 devices")
+    lane = mesh_mod.lane_meshes(mesh_mod.make_engine_mesh(1, 2))[0]
+    t_sd = _run(_mk_engine(cfg, params, kv_dtype="fp8_e4m3"), _reqs())
+    t_tp = _run(_mk_engine(cfg, params, kv_dtype="fp8_e4m3", mesh=lane),
+                _reqs())
+    assert t_sd == t_tp
+
+
+# ---------------------------------------------------------------------------
+# engine: unsupported-config guards
+# ---------------------------------------------------------------------------
+
+def test_quant_guards(dense_setup):
+    cfg, params = dense_setup
+    with pytest.raises(ValueError, match="full"):
+        _mk_engine(cfg, params, mode="full", kv_dtype="fp8_e4m3")
+    with pytest.raises(ValueError, match="kv_dtype"):
+        _mk_engine(cfg, params, kv_dtype="fp4")
+    cfg_ssm = get_reduced("xlstm-125m")
+    params_ssm = registry.init_params(jax.random.PRNGKey(0), cfg_ssm)
+    with pytest.raises(ValueError, match="family|dense"):
+        KVRMEngine(cfg_ssm, params_ssm,
+                   EngineConfig(mode="paged_merge", batch=4, max_seq=96,
+                                block_tokens=8, kv_dtype="int8"))
