@@ -110,6 +110,53 @@ def run():
         record_audit(f"oversubscribe/host_tier_{OVERSUB}x", a)
     assert diverged == 0, f"{diverged} requests diverged under oversubscription"
 
+    # --- async movement A/B (DESIGN.md §11): same 1.5x-oversubscribed
+    # burst replay with the async movement engine ON vs OFF, at both
+    # pipeline depths. The overlap may only change WHEN transfers run:
+    # every row must emit bitwise-identical tokens vs the ample-pool
+    # baseline with zero allocation failures, while the ON rows show the
+    # blocking-movement stall (swap_stall_ms) shrinking and the overlap
+    # witnesses (overlap_steps / deferred_readbacks) moving off zero.
+    for depth in (0, 1):
+        for async_on in (False, True):
+            ab = engine("paged_merge", pool_budget=dev_blocks / worst,
+                        host_pool_blocks=host_blocks, pipeline_depth=depth,
+                        async_movement=async_on, **kw)
+            ab_failures = 0
+            try:
+                run_workload(ab, _mk_reqs(n), replay_scale=0.01)
+            except MemoryError:
+                ab_failures = 1
+                raise
+            finally:
+                t_ab = _tokens(ab)
+                ab_div = sum(1 for rid, toks in t_ab.items()
+                             if t_base.get(rid) != toks)
+                a = ab.audit()
+                lat = ab.latency_stats()
+                tag = (f"oversubscribe/async_{'on' if async_on else 'off'}"
+                       f"_depth{depth}")
+                rows.append(row(
+                    tag, lat["mean_ms"] * 1e3,
+                    tok_s=ab.throughput(), step_p99_ms=lat["p99_ms"],
+                    swap_stall_ms=a["swap_stall_ms"],
+                    overlap_steps=a["overlap_steps"],
+                    deferred_readbacks=a["deferred_readbacks"],
+                    staging_reuse_bytes=a["staging_reuse_bytes"],
+                    swap_bytes=a["swap_bytes"],
+                    swap_out_blocks=a["swap_out_blocks"],
+                    swap_in_blocks=a["swap_in_blocks"],
+                    preemptions=a["preemptions"],
+                    alloc_failures=ab_failures, token_divergence=ab_div,
+                    finished=len(ab.sched.finished)))
+                record_audit(tag, a)
+            assert ab_div == 0, \
+                f"{tag}: {ab_div} requests diverged under async A/B"
+            if not async_on:
+                assert a["overlap_steps"] == a["deferred_readbacks"] \
+                    == a["staging_reuse_bytes"] == 0, \
+                    f"{tag}: overlap counters moved with async off"
+
     # --- lockstep burst: deterministic preemption/resume exercise ------
     # The replay rows above gate admission on the wall clock, so WHETHER a
     # preemption fires varies run to run (cold swap + watermarks may absorb
@@ -139,6 +186,9 @@ def run():
                     swap_bytes=a["swap_bytes"], swap_groups=a["swap_groups"],
                     swap_in_blocks=a["swap_in_blocks"],
                     host_blocks_peak=a["host_blocks_peak"],
+                    swap_stall_ms=a["swap_stall_ms"],
+                    deferred_readbacks=a["deferred_readbacks"],
+                    staging_reuse_bytes=a["staging_reuse_bytes"],
                     token_divergence=diverged,
                     finished=len(lover.sched.finished)))
     record_audit("oversubscribe/lockstep_burst", a)

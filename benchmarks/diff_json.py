@@ -13,8 +13,15 @@ Two verdict tiers (CI uses both in one invocation):
   BENCH_PR<n>.json — CPU CI timing is noisy; the warnings are a review
   signal, the committed sequence is the record.
 
+Selected perf rows can be PROMOTED to the hard tier with ``--gate
+bench:row:metric`` (repeatable; colon-separated because row names carry
+'/'): a regression beyond TOLERANCE on a gated row fails the build like
+a correctness error. CI gates the mesh-2x2 tokens/s row this way.
+
     python -m benchmarks.diff_json --old BENCH_PR3.json --new BENCH_PR4.json
     python -m benchmarks.diff_json --new bench_pr_ci.json   # gate only
+    python -m benchmarks.diff_json --old BENCH_PR5.json --new ci.json \
+        --gate scaling:scaling/2x2:tok_s
 """
 import argparse
 import json
@@ -60,8 +67,27 @@ def correctness_failures(new: dict) -> list:
     return errors
 
 
-def diff(old: dict, new: dict) -> list:
-    warnings = []
+def parse_gates(specs) -> set:
+    """--gate bench:row:metric specs (colon-separated; row names contain
+    '/'). Unknown metrics are rejected up front — a typo'd gate must not
+    silently pass."""
+    gates = set()
+    for spec in specs or ():
+        parts = spec.split(":")
+        if len(parts) != 3 or parts[2] not in KEY_METRICS:
+            raise SystemExit(f"bad --gate spec {spec!r} "
+                             f"(want bench:row:metric, metric one of "
+                             f"{sorted(KEY_METRICS)})")
+        gates.add(tuple(parts))
+    return gates
+
+
+def diff(old: dict, new: dict, gates=()) -> tuple:
+    """Returns (warnings, gate_errors): perf regressions beyond TOLERANCE,
+    split by whether the row is promoted to the hard tier via --gate."""
+    warnings, gate_errors = [], []
+    gates = set(gates)
+    seen = set()
     ob, nb = old.get("benches", old), new.get("benches", new)
     for bench, rows in nb.items():
         orows = ob.get(bench)
@@ -80,14 +106,26 @@ def diff(old: dict, new: dict) -> list:
                     continue
                 if o == 0:
                     continue
+                gated = (bench, rname, metric) in gates
+                if gated:
+                    seen.add((bench, rname, metric))
                 rel = (n - o) / abs(o)
                 worse = rel < -TOLERANCE if direction == "up" \
                     else rel > TOLERANCE
-                if worse:
+                if worse and gated:
+                    gate_errors.append(
+                        f"FAIL {bench}/{rname}.{metric}: "
+                        f"{o:.4g} -> {n:.4g} ({rel:+.1%}, gated)")
+                elif worse:
                     warnings.append(
                         f"WARN {bench}/{rname}.{metric}: "
                         f"{o:.4g} -> {n:.4g} ({rel:+.1%})")
-    return warnings
+    # fail CLOSED: a gate naming a row absent from either artifact would
+    # otherwise green-light exactly the runs that dropped the row
+    for g in sorted(gates - seen):
+        gate_errors.append(f"FAIL gated row {':'.join(g)} missing from "
+                           f"old or new artifact")
+    return warnings, gate_errors
 
 
 def main(argv=None) -> int:
@@ -96,7 +134,11 @@ def main(argv=None) -> int:
                     help="committed artifact to diff against (perf metrics, "
                          "warn-only); omit to run the correctness gate alone")
     ap.add_argument("--new", required=True)
+    ap.add_argument("--gate", action="append", default=[],
+                    help="bench:row:metric to promote from warn to hard "
+                         "fail (repeatable), e.g. scaling:scaling/2x2:tok_s")
     args = ap.parse_args(argv)
+    gates = parse_gates(args.gate)
     try:
         with open(args.new) as f:
             new = json.load(f)
@@ -112,19 +154,34 @@ def main(argv=None) -> int:
     for e in errors:
         print(e)
 
-    # perf diff: warn-only, and only when an old artifact is readable
+    # perf diff: warn-only except for --gate-promoted rows, and only when
+    # an old artifact is readable
     warnings = []
     if args.old is not None:
         try:
             with open(args.old) as f:
                 old = json.load(f)
-            warnings = diff(old, new)
+            warnings, gate_errors = diff(old, new, gates)
+            errors.extend(gate_errors)
+            for e in gate_errors:
+                print(e)
         except (OSError, json.JSONDecodeError) as e:
-            print(f"# perf diff skipped: {e}", file=sys.stderr)
+            if gates:
+                # fail CLOSED: gates were requested but cannot be evaluated
+                msg = f"FAIL cannot read --old artifact ({e}): " \
+                      f"perf gate did not run"
+                errors.append(msg)
+                print(msg)
+            else:
+                print(f"# perf diff skipped: {e}", file=sys.stderr)
+    elif gates:
+        msg = "FAIL --gate requires --old"
+        errors.append(msg)
+        print(msg)
     for w in warnings:
         print(w)
     print(f"# {len(warnings)} regression warning(s) (warn-only), "
-          f"{len(errors)} correctness failure(s) (hard gate) "
+          f"{len(errors)} hard failure(s) (correctness + gated perf) "
           f"[{args.old or '-'} -> {args.new}]")
     return 1 if errors else 0
 

@@ -3,18 +3,36 @@ Prints ``name,us_per_call,derived`` CSV per row.
 
     PYTHONPATH=src python -m benchmarks.run [--only idle_floor,mixed_length]
     PYTHONPATH=src python -m benchmarks.run --json BENCH_PR2.json
+    PYTHONPATH=src python -m benchmarks.run --xla-profile latency_hiding ...
 
 ``--json PATH`` aggregates every module's rows PLUS the engine audits
 recorded during the run into one JSON artifact — the per-PR perf
 trajectory (BENCH_PR<n>.json committed at the repo root; CI uploads the
 fresh file and diffs it against the committed previous one with
-benchmarks/diff_json.py, warn-only).
+benchmarks/diff_json.py; selected tokens/s rows gate via ``--gate``).
+Each artifact also records the provenance a perf number needs to be
+comparable: the active XLA flag profile, the jax version, and the
+per-kernel achieved-vs-peak roofline rows (BENCH_SCHEMA.md).
+
+``--xla-profile NAME`` installs a launch/xla_flags.py profile. XLA reads
+XLA_FLAGS when jax initializes, so the profile is applied from a
+pre-import bootstrap below — before any bench module (and through them
+jax) is imported.
 """
 import argparse
 import json
+import os
 import sys
 import time
 import traceback
+
+# ---- pre-import bootstrap: XLA_FLAGS must be set before jax loads.
+# Only sys/os may be imported above this point; repro.launch.xla_flags
+# deliberately imports no jax.
+if "--xla-profile" in sys.argv:
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    from repro.launch import xla_flags as _xf
+    _xf.apply_profile(sys.argv[sys.argv.index("--xla-profile") + 1])
 
 from benchmarks.common import collected_audits, print_rows, rows_to_json
 
@@ -37,12 +55,18 @@ MODULES = [
 
 
 def main() -> None:
+    from repro.launch import xla_flags
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of bench names")
     ap.add_argument("--json", default=None,
                     help="aggregate all rows + engine audits into one JSON "
                          "artifact (perf trajectory)")
+    ap.add_argument("--xla-profile", default=None,
+                    choices=xla_flags.profile_names(),
+                    help="launch/xla_flags.py profile to run under "
+                         "(applied pre-jax-import by the bootstrap above)")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -65,8 +89,13 @@ def main() -> None:
             traceback.print_exc()
 
     if args.json:
+        import jax
+        from repro.roofline import bench as roofline_bench
         payload = {"benches": agg, "audits": collected_audits(),
-                   "failed": failed}
+                   "failed": failed,
+                   "xla_profile": xla_flags.active_profile(),
+                   "jax_version": jax.__version__,
+                   "roofline": roofline_bench.report()}
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=1, sort_keys=True, default=float)
         print(f"# wrote {args.json}", file=sys.stderr)

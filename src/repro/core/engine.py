@@ -104,6 +104,10 @@ class EngineConfig:
     #                                  K/V storage + per-block per-head f32
     #                                  scale pools managed by the pager in
     #                                  lockstep with their data blocks
+    # --- async movement engine (DESIGN.md §11) ---
+    async_movement: bool = True      # double-buffered staging + deferred
+    #                                  swap-out readback fences; False =
+    #                                  per-event blocking movement (A/B)
 
 
 @dataclass
@@ -436,6 +440,13 @@ class KVRMEngine:
         # need by up to a placement span (reserve takes whole spans while the
         # pool is comfortable), so the pad must cover blocks_per_seq + span
         self._swap_pad = self.blocks_per_seq + ecfg.span_blocks
+        # async movement engine (DESIGN.md §11): double-buffered host
+        # staging for swap-in scatters (one preallocated pair per pool key,
+        # alternated across transfers) + cumulative blocking-movement time
+        # (the per-step stall the deferred path is hiding)
+        self._stage_in: Dict[str, List[np.ndarray]] = {}
+        self._stage_sel = 0
+        self.swap_stall_s = 0.0
 
         # metrics
         self.metrics: List[StepMetrics] = []
@@ -482,6 +493,7 @@ class KVRMEngine:
                 # working set back onto device in merged groups and
                 # re-attach — generation state rides the Request, so no
                 # recompute. Blocks below the window stay host-resident.
+                self._drain_out_fences()  # slots must hold real bytes
                 s = self.pager.sessions[sid]
                 assert s.swap_state == RES_HOST
                 first_local = self._first_window_local(s, req.resume_len)
@@ -768,36 +780,101 @@ class KVRMEngine:
             shp = (self.host_pool_blocks, arr.shape[0]) + tuple(arr.shape[2:])
             self._host_kv[k] = np.zeros(shp, arr.dtype)
 
-    def _swap_copy_out(self, dev_blocks, host_slots) -> None:
-        """Execute one swap-out transfer: ONE padded gather per pool key
-        (device -> host), then write the rows into the host backing pool.
-        Blocking readback — swap-out is a preemption/pressure event, not a
-        steady-state path."""
+    def _swap_copy_out(self, dev_blocks, host_slots, *, sid: int = -1) -> None:
+        """Issue one swap-out transfer: ONE padded gather per pool key
+        (device -> host). With ``async_movement`` (default) the host-side
+        readback is DEFERRED behind a per-transfer fence (DESIGN.md §11):
+        the gathers are dispatched now — XLA orders them before any later
+        donated-pool overwrite, so the captured bytes are exact — and the
+        host rows land only when something actually reads the host slots
+        (resume, audit, or the next swap-in). ``sid >= 0`` marks a
+        preemption transfer whose pager session must flip IN_FLIGHT_OUT ->
+        HOST when the fence drains. With the flag off this is the PR-5
+        blocking readback per pressure event."""
         self._ensure_host_kv()
         n = len(dev_blocks)
         idx = np.zeros(self._swap_pad, np.int32)
         idx[:n] = dev_blocks
         jidx = jnp.asarray(idx)
+        gathers = {k: self._swap_gather_fn(self.pools[k], jidx)
+                   for k in self._swap_keys}
+        if self.e.async_movement:
+            self.transport.fence_issue({"gathers": gathers, "n": n,
+                                        "host_slots": list(host_slots),
+                                        "sid": sid})
+            return
+        t0 = time.perf_counter()
+        self._land_swap_out(gathers, host_slots, n)
+        self.swap_stall_s += time.perf_counter() - t0
+
+    def _land_swap_out(self, gathers, host_slots, n: int) -> None:
+        """Synchronize one swap-out's gathers into the host backing pool."""
         for k in self._swap_keys:
-            got = np.asarray(self._swap_gather_fn(self.pools[k], jidx))
+            got = np.asarray(gathers[k])
             self._host_kv[k][host_slots] = np.moveaxis(got[:, :n], 1, 0)
+
+    def _drain_out_fences(self) -> None:
+        """Synchronize every pending deferred swap-out readback, FIFO — a
+        host slot freed and reallocated between two transfers must end up
+        holding the LATER transfer's bytes, exactly like the synchronous
+        schedule. Preemption transfers commit their session's
+        IN_FLIGHT_OUT -> HOST edge here (DESIGN.md §11)."""
+        pend = self.transport.fence_drain_all()
+        if not pend:
+            return
+        t0 = time.perf_counter()
+        for p in pend:
+            self._land_swap_out(p["gathers"], p["host_slots"], p["n"])
+            if p["sid"] >= 0:
+                self.pager.swap_out_commit(p["sid"])
+        self.swap_stall_s += time.perf_counter() - t0
+
+    def _stage_buf(self, k: str) -> np.ndarray:
+        """Preallocated, double-buffered host staging for one pool key's
+        swap-in scatter (DESIGN.md §11): two fixed padded arrays alternated
+        across transfers, so the device_put of transfer t can still be
+        reading its buffer while transfer t+1 refills the other — and no
+        per-event ``np.zeros`` allocation ever happens on the swap path."""
+        bufs = self._stage_in.get(k)
+        if bufs is None:
+            arr = self.pools[k]
+            shape = (arr.shape[0], self._swap_pad) + tuple(arr.shape[2:])
+            bufs = [np.zeros(shape, self._host_kv[k].dtype) for _ in range(2)]
+            self._stage_in[k] = bufs
+        else:
+            self.transport.account_staging_reuse(bufs[self._stage_sel].nbytes)
+        return bufs[self._stage_sel]
 
     def _swap_copy_in(self, host_slots, dev_blocks) -> None:
         """Execute one swap-in transfer: ONE padded scatter per pool key
         (host -> device). The scatter is dispatched async on the pool chain
         (like token feedback), so it overlaps whatever the device is
-        running; the next decode step consuming the pools orders after it."""
+        running; the next decode step consuming the pools orders after it.
+        Staging rides the reusable double buffers (``_stage_buf``); any
+        pending deferred swap-out drains first — these host slots may be
+        exactly where its bytes land."""
         self._ensure_host_kv()
+        self._drain_out_fences()
         n = len(dev_blocks)
         idx = np.zeros(self._swap_pad, np.int32)
         idx[:n] = dev_blocks
         jidx = jnp.asarray(idx)
+        t0 = time.perf_counter()
         for k in self._swap_keys:
             arr = self.pools[k]
-            data = np.zeros((arr.shape[0], self._swap_pad)
-                            + tuple(arr.shape[2:]), self._host_kv[k].dtype)
-            data[:, :n] = np.moveaxis(self._host_kv[k][host_slots], 0, 1)
+            if self.e.async_movement:
+                data = self._stage_buf(k)
+                data[:, :n] = np.moveaxis(self._host_kv[k][host_slots], 0, 1)
+                data[:, n:] = 0      # padding targets scratch block 0
+            else:
+                # A/B baseline: the PR-5 per-event allocation
+                data = np.zeros((arr.shape[0], self._swap_pad)
+                                + tuple(arr.shape[2:]),
+                                self._host_kv[k].dtype)
+                data[:, :n] = np.moveaxis(self._host_kv[k][host_slots], 0, 1)
             self.pools[k] = self._swap_scatter_fn(arr, jidx, jnp.asarray(data))
+        self._stage_sel ^= 1
+        self.swap_stall_s += time.perf_counter() - t0
 
     def _first_window_local(self, s, t: int) -> int:
         """Local block index where the near window starts for a session at
@@ -829,7 +906,17 @@ class KVRMEngine:
             # must see earlier ones' demand or they jointly overshoot the
             # pool and swap_in_begin raises an uncatchable MemoryError
             if self.pager.free_blocks() < self._resume_pending + need + margin:
-                return False
+                # §9 pressure ladder, resume edition: prefix-cache pins can
+                # hold the pool above the gate forever once nothing is
+                # active to trigger reserve-time eviction — reclaim unshared
+                # cached blocks before refusing, or the resume livelocks
+                if self.prefix_cache is not None:
+                    self.prefix_cache.evict(self._resume_pending + need
+                                            + margin
+                                            - self.pager.free_blocks())
+                if self.pager.free_blocks() \
+                        < self._resume_pending + need + margin:
+                    return False
             self._resume_pending += need
             return True
         total_dev = self.num_blocks - 1
@@ -924,12 +1011,14 @@ class KVRMEngine:
         self.flush()
         req = self.sched.request_at(slot)
         sid = int(self._slot_sid[slot])
-        pairs = self.pager.swap_out_session(sid)
+        deferred = bool(self.e.async_movement)
+        pairs = self.pager.swap_out_session(sid, deferred=deferred)
         assert pairs is not None, "victim was not swap-eligible"
         if pairs:
             self.transport.account_swap(pairs, direction="out")
             self._swap_copy_out([p[0] for p in pairs],
-                                [p[1] for p in pairs])
+                                [p[1] for p in pairs],
+                                sid=sid if deferred else -1)
         req.swap_sid = sid
         req.resume_len = int(self._slot_len[slot])
         req.resume_last_token = int(self._last_token[slot])
@@ -1176,6 +1265,7 @@ class KVRMEngine:
         m.host = max(0.0, time.perf_counter() - t0 - self._chunk_wait)
 
         # ---- device: one engine call, fixed shapes
+        self.transport.note_dispatch_overlap()
         nxt, self.pools, fu, lg = self._step_fn(
             self.params, jnp.asarray(tokens), self._zero_feed,
             self._prev_nxt, self.pools, jdescr)
@@ -1338,6 +1428,7 @@ class KVRMEngine:
         m.host = max(0.0, time.perf_counter() - t0 - self._chunk_wait)
 
         # ---- device: dispatch step t (async), keep host moving
+        self.transport.note_dispatch_overlap()
         nxt, self.pools, fu, lg = self._step_fn(
             self.params, jflat, self._prev_nxt, self.pools)
         self._prev_nxt = nxt
@@ -1420,6 +1511,9 @@ class KVRMEngine:
     # audits & metrics
     # ------------------------------------------------------------------
     def audit(self) -> dict:
+        # audit reads host-slot state: deferred swap-out bytes must land
+        # first (DESIGN.md §11) so the figures match the sync schedule
+        self._drain_out_fences()
         steps = [m for m in self.metrics if m.active > 0]
         walls = np.array([m.wall for m in steps]) if steps else np.zeros(1)
         hosts = np.array([m.host for m in steps]) if steps else np.zeros(1)
@@ -1472,6 +1566,15 @@ class KVRMEngine:
             "swap_out_bytes": self.transport.stats.swap_out_bytes,
             "swap_in_bytes": self.transport.stats.swap_in_bytes,
             "avg_swap_group_blocks": self.transport.stats.avg_swap_group_blocks,
+            # --- async movement engine (DESIGN.md §11): overlap witnesses.
+            # All three counters are zero with async_movement off — the A/B
+            # identity gate checks exactly that invariance of everything
+            # ABOVE this block while these move.
+            "async_movement": bool(self.e.async_movement),
+            "overlap_steps": self.transport.stats.overlap_steps,
+            "deferred_readbacks": self.transport.stats.deferred_readbacks,
+            "staging_reuse_bytes": self.transport.stats.staging_reuse_bytes,
+            "swap_stall_ms": self.swap_stall_s * 1e3,
             "admit_blocked_no_slot": self.sched.admit_blocked["no_slot"],
             "admit_blocked_kv_watermark":
                 self.sched.admit_blocked["kv_watermark"],

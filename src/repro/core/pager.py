@@ -40,14 +40,21 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-# session-level residency state machine (DESIGN.md §8):
-#   DEVICE --swap_out_session--> HOST --swap_in_begin--> IN_FLIGHT
-#     ^                                                      |
-#     +----------------------swap_in_commit------------------+
-# (swap_out_cold keeps the session DEVICE: only below-window blocks move)
+# session-level residency state machine (DESIGN.md §8, §11):
+#   DEVICE --swap_out_session--> [IN_FLIGHT_OUT --swap_out_commit-->] HOST
+#      ^                                                               |
+#      |                                                       swap_in_begin
+#      +------------------swap_in_commit-------------- IN_FLIGHT <-----+
+# (swap_out_cold keeps the session DEVICE: only below-window blocks move.
+# IN_FLIGHT_OUT is the §11 async-movement fence state: the device->host
+# gather was ISSUED but not yet synchronized — the blocks are already
+# host-entries in the block list, but the host slots hold no bytes until
+# the engine drains the transfer's fence and calls swap_out_commit.
+# swap_in_begin refuses the state, so a resume forces the drain first.)
 RES_DEVICE = "device"
 RES_HOST = "host"
 RES_IN_FLIGHT = "in_flight"
+RES_IN_FLIGHT_OUT = "in_flight_out"
 
 
 def host_slot_of(entry: int) -> int:
@@ -464,9 +471,13 @@ class BlockPager:
                                    tuple(p[0] for p in pairs)))
         return pairs
 
-    def swap_out_session(self, sid: int) -> Optional[List[Tuple[int, int]]]:
+    def swap_out_session(self, sid: int, *, deferred: bool = False
+                         ) -> Optional[List[Tuple[int, int]]]:
         """Preemption swap-out: move ALL the session's device blocks to the
-        host tier and mark it HOST-resident. Returns (device_block,
+        host tier and mark it HOST-resident — or, with ``deferred=True``
+        (async movement, DESIGN.md §11), IN_FLIGHT_OUT: the caller issued
+        the device->host gather but has not synchronized it, and must call
+        ``swap_out_commit`` once the fence drains. Returns (device_block,
         host_slot) copy pairs, or None if the session is REFUSED (COW-shared
         blocks — the caller must pick another victim)."""
         if not self.swap_eligible(sid):
@@ -481,12 +492,26 @@ class BlockPager:
             pairs.append((b, h))
             s.blocks[i] = host_entry_of(h)
             self._free_block(b)
-        s.swap_state = RES_HOST
+        # a deferred transfer with nothing to move has no fence to wait on
+        s.swap_state = RES_IN_FLIGHT_OUT if (deferred and pairs) else RES_HOST
         s.shared_prefix_blocks = 0
         self.stats["swap_out_blocks"] += len(pairs)
         self.stats["swap_out_ops"] += 1
         self._edit_log.append(("swap_out", sid, tuple(p[0] for p in pairs)))
         return pairs
+
+    def swap_out_commit(self, sid: int) -> None:
+        """Async-movement fence release (DESIGN.md §11): the deferred
+        device->host readback landed — the host slots now hold real bytes,
+        so the session becomes plain HOST-resident and swap_in_begin may
+        run. Sessions can be closed while IN_FLIGHT_OUT (their data is
+        never read); a vanished sid is therefore not an error."""
+        s = self.sessions.get(sid)
+        if s is None:
+            return
+        if s.swap_state != RES_IN_FLIGHT_OUT:
+            raise SwapError(f"sid={sid} not in-flight-out")
+        s.swap_state = RES_HOST
 
     def swap_in_begin(self, sid: int, from_local: int
                       ) -> List[Tuple[int, int]]:
@@ -583,7 +608,7 @@ class BlockPager:
                     continue
                 owned.setdefault(b, []).append(sid)
                 assert 0 < b < self.num_blocks
-            if s.swap_state == RES_HOST:
+            if s.swap_state in (RES_HOST, RES_IN_FLIGHT_OUT):
                 assert not s.device_blocks(), \
                     f"host-resident sid={sid} still owns device blocks"
         for b, ext in self.external_refs.items():

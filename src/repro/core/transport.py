@@ -48,6 +48,12 @@ class TransportStats:
     # movement (window trains, swaps, COW copies) saved vs full bf16
     # width; 0 when the pools store bf16 ---
     quant_bytes_saved: int = 0
+    # --- async movement engine (DESIGN.md §11): deferred swap-out
+    # readbacks ride a per-transfer fence table; these witness that the
+    # overlap actually happened (all zero when async_movement is off) ---
+    overlap_steps: int = 0        # steps dispatched with >= 1 fence pending
+    deferred_readbacks: int = 0   # swap-out transfers synchronized lazily
+    staging_reuse_bytes: int = 0  # bytes staged through reused host buffers
 
     @property
     def groups_per_step(self) -> float:
@@ -129,6 +135,13 @@ class MergeStagedTransport:
         self.max_trains = max_trains
         self.stats = TransportStats()
         self._staged: List[StagedDescriptor] = []
+        # per-transfer fence table (async movement, DESIGN.md §11):
+        # fence id -> opaque payload (the engine parks its un-synchronized
+        # device gathers here). Insertion-ordered: drains are FIFO so a
+        # host slot freed and reallocated between two transfers takes the
+        # LATER transfer's bytes, exactly like the synchronous schedule.
+        self._fences: dict = {}
+        self._next_fence = 0
 
     def _account_quant_saving(self, n_blocks: int) -> None:
         self.stats.quant_bytes_saved += (
@@ -139,6 +152,40 @@ class MergeStagedTransport:
         for d in descriptors:
             self._staged.append(d)
         self.stats.held_descriptors += len(descriptors)
+
+    # -- per-transfer fences (async movement engine, DESIGN.md §11) ------
+    def fence_issue(self, payload) -> int:
+        """Park one issued-but-unsynchronized transfer. The payload is
+        engine-owned (device gather handles + destination host slots);
+        the transport only tracks ordering and the audit counters."""
+        fid = self._next_fence
+        self._next_fence += 1
+        self._fences[fid] = payload
+        return fid
+
+    def fence_drain_all(self) -> List:
+        """Take every pending transfer, FIFO. Each drained fence is by
+        construction a readback that happened LATER than its issue point,
+        so the count lands in ``deferred_readbacks``."""
+        if not self._fences:
+            return []
+        payloads = list(self._fences.values())
+        self._fences.clear()
+        self.stats.deferred_readbacks += len(payloads)
+        return payloads
+
+    def fences_pending(self) -> int:
+        return len(self._fences)
+
+    def note_dispatch_overlap(self) -> None:
+        """Engine hook at device-dispatch time: a step issued while >= 1
+        swap-out fence is still pending means the transfer is genuinely
+        overlapping compute (the latency-hiding audit)."""
+        if self._fences:
+            self.stats.overlap_steps += 1
+
+    def account_staging_reuse(self, nbytes: int) -> None:
+        self.stats.staging_reuse_bytes += int(nbytes)
 
     # -- swap groups (host tier, DESIGN.md §8) ---------------------------
     def account_swap(self, pairs: Sequence[Tuple[int, int]], *,

@@ -49,19 +49,28 @@ it witnesses in docs/OPERATIONS.md.
 """
 from __future__ import annotations
 
-# --mesh bootstrap: the forced host-device count must be set BEFORE jax
-# initializes, which is before this module's own jax import when run as a
-# script. Only touches CPU runs that didn't set a device count themselves.
+# --mesh / --xla-profile bootstrap: the forced host-device count and the
+# tuned XLA flag profile must be set BEFORE jax initializes, which is
+# before this module's own jax import when run as a script. Only touches
+# CPU runs that didn't set a device count themselves.
 import os
 import sys
 
 if __name__ == "__main__":
-    _spec = None
+    _spec = _prof = None
     for _i, _a in enumerate(sys.argv):
         if _a == "--mesh" and _i + 1 < len(sys.argv):
             _spec = sys.argv[_i + 1]
         elif _a.startswith("--mesh="):
             _spec = _a.split("=", 1)[1]
+        elif _a == "--xla-profile" and _i + 1 < len(sys.argv):
+            _prof = sys.argv[_i + 1]
+        elif _a.startswith("--xla-profile="):
+            _prof = _a.split("=", 1)[1]
+    if _prof is not None:
+        from repro.launch import xla_flags as _xf
+        if _prof in _xf.PROFILES:      # unknown name -> argparse errors later
+            _xf.apply_profile(_prof)
     if _spec is not None:
         try:
             _d, _m = (int(x) for x in _spec.lower().split("x"))
@@ -85,6 +94,7 @@ from repro.configs import get_reduced
 from repro.core.engine import EngineConfig, KVRMEngine
 from repro.data import traces
 from repro.launch import mesh as mesh_mod
+from repro.launch import xla_flags
 from repro.models import registry
 
 
@@ -206,6 +216,18 @@ def build_arg_parser() -> argparse.ArgumentParser:
                          "dtypes store K/V quantized with per-block "
                          "per-head scales, halving reserved/swap/COW KV "
                          "bytes under the same descriptor interface")
+    ap.add_argument("--xla-profile", default=None,
+                    choices=xla_flags.profile_names(),
+                    help="tuned XLA flag profile (launch/xla_flags.py, "
+                         "DESIGN.md §11): applied pre-jax-import by the "
+                         "__main__ bootstrap; 'latency_hiding' enables the "
+                         "latency-hiding scheduler, pipelined collectives, "
+                         "and combine-threshold/allocator hygiene")
+    ap.add_argument("--no-async-movement", action="store_true",
+                    help="disable the async movement engine (DESIGN.md "
+                         "§11): swap readbacks block at the pressure event "
+                         "instead of deferring behind fences — the A/B "
+                         "baseline for the overlap identity gate")
     ap.add_argument("--json", action="store_true")
     return ap
 
@@ -227,7 +249,8 @@ def main(argv=None):
                           host_pool_blocks=args.host_pool_blocks,
                           prefix_cache=args.prefix_cache,
                           prefix_cache_blocks=args.prefix_cache_blocks,
-                          kv_dtype=args.kv_dtype)
+                          kv_dtype=args.kv_dtype,
+                          async_movement=not args.no_async_movement)
     tcfg = traces.TraceConfig(n_requests=args.requests,
                               vocab=engines[0].cfg.vocab_size,
                               token_scale=args.token_scale)
@@ -251,6 +274,7 @@ def main(argv=None):
         now_fn = lambda: time.perf_counter() - t0
     out = run_lanes(engines, reqs, now_fn=now_fn)
     out["throughput_tok_s"] = out["aggregate_tok_s"]
+    out["xla_profile"] = xla_flags.active_profile()
 
     if args.json:
         print(json.dumps(out, indent=1, default=float))

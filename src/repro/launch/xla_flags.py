@@ -1,0 +1,120 @@
+"""Tuned XLA flag profiles + host-allocator hygiene (DESIGN.md §11).
+
+A *profile* is a named bundle of XLA_FLAGS and process-environment
+settings that shape how XLA schedules the compiled step around data
+movement: the latency-hiding scheduler, pipelined collectives, combine
+thresholds sized so collective fusion does not serialize against the
+swap/COW DMA stream, and the tcmalloc / logging hygiene the staging
+buffers want on the host side.
+
+The flags must be in the environment BEFORE jax (and through it XLA)
+initializes, so this module deliberately imports no jax: callers apply a
+profile from a pre-import bootstrap (``serve.py --xla-profile`` when run
+as ``__main__``; ``benchmarks/run.py --xla-profile`` before it imports
+the bench modules). ``apply_profile`` appends to any user-provided
+XLA_FLAGS rather than clobbering them, and records the active profile in
+``REPRO_XLA_PROFILE`` so bench artifacts can report what they ran under
+(BENCH_SCHEMA.md).
+
+``LD_PRELOAD`` (tcmalloc) cannot take effect from inside a running
+process — ``shell_exports`` emits the full launch-script preamble for
+operators who want the allocator swap too (SNIPPETS.md provenance:
+MaxText's serving/training launch environments).
+"""
+from __future__ import annotations
+
+import os
+from typing import Dict, List
+
+_ENV_KEY = "REPRO_XLA_PROFILE"
+
+# Combine thresholds follow the MaxText serving recipe: all-gather fuses
+# aggressively (1 GiB) because gathered params are consumed immediately;
+# reduce-scatter stays fine-grained (32 MiB) so it pipelines into the
+# backward/collective stream instead of forming one monolithic barrier.
+PROFILES: Dict[str, dict] = {
+    # no-op baseline: whatever the environment already had
+    "default": {"xla_flags": [], "env": {}},
+    # latency-hiding serving profile: overlap collectives + DMA with
+    # compute, double-buffer while-loop state, keep rematerialization off
+    # the (inference) graphs, and silence host-allocator noise
+    "latency_hiding": {
+        "xla_flags": [
+            "--xla_gpu_enable_latency_hiding_scheduler=true",
+            "--xla_gpu_enable_highest_priority_async_stream=true",
+            "--xla_gpu_all_reduce_combine_threshold_bytes=134217728",
+            "--xla_gpu_all_gather_combine_threshold_bytes=1073741824",
+            "--xla_gpu_reduce_scatter_combine_threshold_bytes=33554432",
+            "--xla_gpu_enable_pipelined_all_gather=true",
+            "--xla_gpu_enable_pipelined_reduce_scatter=true",
+            "--xla_gpu_enable_pipelined_all_reduce=true",
+            "--xla_gpu_enable_while_loop_double_buffering=true",
+            "--xla_gpu_enable_all_gather_combine_by_dim=false",
+            "--xla_gpu_enable_reduce_scatter_combine_by_dim=false",
+            "--xla_disable_hlo_passes=rematerialization",
+        ],
+        "env": {
+            "TF_CPP_MIN_LOG_LEVEL": "4",
+            "TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD": "60000000000",
+        },
+    },
+}
+
+# shell-level preamble (launch scripts only): the allocator swap needs
+# LD_PRELOAD before the interpreter starts, not just before jax does
+_TCMALLOC_SO = "/usr/lib/x86_64-linux-gnu/libtcmalloc.so.4"
+
+
+def profile_names() -> List[str]:
+    return sorted(PROFILES)
+
+
+def profile_flags(name: str) -> List[str]:
+    """The XLA_FLAGS tokens a profile contributes (no env mutation)."""
+    return list(PROFILES[name]["xla_flags"])
+
+
+def apply_profile(name: str) -> dict:
+    """Install a profile into the process environment. Appends to any
+    existing XLA_FLAGS (user flags win by coming first — XLA takes the
+    last occurrence of a repeated flag, and ours are appended only when
+    not already present) and setdefault()s the hygiene env vars. Must run
+    before jax initializes to have any effect on compilation; calling it
+    later still records the profile name for artifact reporting.
+
+    Returns {"profile", "xla_flags", "env", "late"} — ``late`` is True
+    when jax was already imported, i.e. the flags may not have reached
+    XLA for this process."""
+    prof = PROFILES[name]
+    import sys
+    late = "jax" in sys.modules
+    existing = os.environ.get("XLA_FLAGS", "")
+    added = [f for f in prof["xla_flags"]
+             if f.split("=", 1)[0] not in existing]
+    if added:
+        os.environ["XLA_FLAGS"] = (existing + " " + " ".join(added)).strip()
+    for k, v in prof["env"].items():
+        os.environ.setdefault(k, v)
+    os.environ[_ENV_KEY] = name
+    return {"profile": name, "xla_flags": added,
+            "env": dict(prof["env"]), "late": late}
+
+
+def active_profile() -> str:
+    """The profile this process (or a parent launcher) applied; 'default'
+    when none was."""
+    return os.environ.get(_ENV_KEY, "default")
+
+
+def shell_exports(name: str) -> str:
+    """Launch-script preamble for a profile, tcmalloc preload included
+    (the parts ``apply_profile`` cannot do from inside the process)."""
+    prof = PROFILES[name]
+    lines = [f"export LD_PRELOAD={_TCMALLOC_SO}"]
+    for k, v in prof["env"].items():
+        lines.append(f"export {k}={v}")
+    if prof["xla_flags"]:
+        lines.append('export XLA_FLAGS="$XLA_FLAGS '
+                     + " ".join(prof["xla_flags"]) + '"')
+    lines.append(f"export {_ENV_KEY}={name}")
+    return "\n".join(lines)

@@ -1,0 +1,249 @@
+"""Async movement engine (DESIGN.md §11): deferred swap-out readback
+fences, the in-flight-out pager residency state, double-buffered staging
+reuse, and the headline A/B guarantee — overlap changes WHEN transfers
+run, never WHAT lands before a consuming dispatch, so tokens and every
+transport accounting figure are identical with the engine on or off, at
+both pipeline depths. Plus the launch/xla_flags profile module."""
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.core.engine import EngineConfig, KVRMEngine
+from repro.core.pager import (RES_DEVICE, RES_HOST, RES_IN_FLIGHT_OUT,
+                              BlockPager, SwapError)
+from repro.core.scheduler import Request
+from repro.core.transport import MergeStagedTransport
+from repro.launch import xla_flags
+from repro.models import registry
+
+
+# ---------------------------------------------------------------------------
+# transport: per-transfer fence table
+# ---------------------------------------------------------------------------
+
+def _transport():
+    return MergeStagedTransport(block_bytes=1024,
+                                merge_threshold_bytes=8192,
+                                max_hold_steps=2, max_trains=8)
+
+
+def test_fence_table_drains_fifo():
+    t = _transport()
+    fids = [t.fence_issue({"n": i}) for i in range(3)]
+    assert len(set(fids)) == 3
+    assert t.fences_pending() == 3
+    drained = t.fence_drain_all()
+    # FIFO: a host slot reused between two transfers must take the LATER
+    # transfer's bytes, so drain order reproduces the sync schedule
+    assert [p["n"] for p in drained] == [0, 1, 2]
+    assert t.fences_pending() == 0
+    assert t.stats.deferred_readbacks == 3
+    assert t.fence_drain_all() == []
+    assert t.stats.deferred_readbacks == 3
+
+
+def test_overlap_counted_only_while_fences_pend():
+    t = _transport()
+    t.note_dispatch_overlap()
+    assert t.stats.overlap_steps == 0
+    t.fence_issue({})
+    t.note_dispatch_overlap()
+    t.note_dispatch_overlap()
+    assert t.stats.overlap_steps == 2
+    t.fence_drain_all()
+    t.note_dispatch_overlap()
+    assert t.stats.overlap_steps == 2
+
+
+def test_staging_reuse_accounting():
+    t = _transport()
+    t.account_staging_reuse(4096)
+    t.account_staging_reuse(4096)
+    assert t.stats.staging_reuse_bytes == 8192
+
+
+# ---------------------------------------------------------------------------
+# pager: in-flight-out residency state
+# ---------------------------------------------------------------------------
+
+def _paged(host=16, blocks=64):
+    return BlockPager(blocks, 16, bytes_per_block=1024, span_blocks=1,
+                      host_pool_blocks=host)
+
+
+def _fill(p, sid, tokens=64):
+    p.open_session(sid)
+    p.reserve(sid, tokens)
+    for _ in range(tokens):
+        p.append_token(sid)
+
+
+def test_deferred_swap_out_commits_to_host():
+    p = _paged()
+    _fill(p, 0)
+    pairs = p.swap_out_session(0, deferred=True)
+    s = p.sessions[0]
+    assert s.swap_state == RES_IN_FLIGHT_OUT
+    assert pairs and all(b < 0 for b in s.blocks)   # host entries assigned
+    p.check_invariants()                 # in-flight-out holds no device blocks
+    # the gather has not synchronized: resuming now would read garbage
+    with pytest.raises(SwapError):
+        p.swap_in_begin(0, 0)
+    p.swap_out_commit(0)
+    assert s.swap_state == RES_HOST
+    p.swap_in_begin(0, 0)
+    p.swap_in_commit(0)
+    assert s.swap_state == RES_DEVICE
+    p.check_invariants()
+
+
+def test_commit_guards_state_and_tolerates_vanished_session():
+    p = _paged()
+    _fill(p, 0)
+    with pytest.raises(SwapError):
+        p.swap_out_commit(0)             # device-resident: nothing in flight
+    p.swap_out_commit(99)                # unknown sid: no-op (retired while
+    #                                      a cold fence was pending)
+    pairs = p.swap_out_session(0, deferred=False)
+    assert pairs and p.sessions[0].swap_state == RES_HOST
+    with pytest.raises(SwapError):
+        p.swap_out_commit(0)             # not deferred: nothing to commit
+
+
+# ---------------------------------------------------------------------------
+# engine: A/B identity + overlap witnesses
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def dense_setup():
+    cfg = get_reduced("qwen2.5-32b")
+    params = registry.init_params(jax.random.PRNGKey(7), cfg)
+    return cfg, params
+
+
+def _run_coalescing_workload(eng, vocab):
+    """Two-phase workload that coalesces all three transport group kinds:
+    rid 0 runs alone first so its 16-token prompt is committed and
+    radix-indexed; then a lockstep burst where rids 1-2 re-use that prompt
+    (an identical-prompt rematch aliases 15 tokens = one full block hit +
+    a 7-token tail materialized by a real COW copy) while uniform lengths
+    force preemption + swap under the tight pool."""
+    rng = np.random.default_rng(5)
+    shared = rng.integers(0, vocab, size=16).astype(np.int32)
+    eng.submit(Request(rid=0, prompt=shared.copy(), gen_len=10))
+    eng.run(max_steps=500)
+    for i in range(1, 6):
+        p = shared.copy() if i <= 2 else \
+            rng.integers(0, vocab, size=16).astype(np.int32)
+        eng.submit(Request(rid=i, prompt=p, gen_len=40))
+    eng.run(max_steps=3000)
+
+
+# the accounting surface that must be blind to WHEN transfers run
+_INVARIANT_KEYS = (
+    "preemptions", "swap_groups", "swap_bytes", "swap_out_bytes",
+    "swap_in_bytes", "swap_out_blocks", "swap_in_blocks",
+    "avg_swap_group_blocks", "cow_groups", "cow_bytes", "cow_copies",
+    "dma_groups_per_step", "unmerged_groups_per_step", "train_overflows",
+    "quant_bytes_saved", "quant_scale_bytes", "frames_committed",
+    "host_blocks_peak", "prefix_hits", "prefix_tokens_reused",
+)
+
+
+@pytest.mark.parametrize("depth", [0, 1])
+def test_async_ab_identical_tokens_and_accounting(dense_setup, depth):
+    """Same oversubscribed shared-prefix quantized workload, async ON vs
+    OFF: bitwise-identical tokens, identical transport/pager accounting,
+    and the overlap witnesses move only on the ON side."""
+    cfg, params = dense_setup
+    runs = {}
+    for async_on in (False, True):
+        eng = KVRMEngine(cfg, params, EngineConfig(
+            mode="paged_merge", batch=4, max_seq=64, block_tokens=8,
+            near_window=32, pipeline_depth=depth, pool_budget_frac=0.25,
+            host_pool_blocks=40, prefix_cache=True, kv_dtype="fp8_e4m3",
+            async_movement=async_on))
+        _run_coalescing_workload(eng, cfg.vocab_size)
+        toks = {r.rid: list(r.generated) for r in eng.sched.finished}
+        assert len(toks) == 6
+        eng.pager.check_invariants()
+        assert eng.pager.host_used == 0
+        runs[async_on] = (toks, eng.audit())
+    (t_off, a_off), (t_on, a_on) = runs[False], runs[True]
+    # the workload actually coalesced all three group kinds + preempted
+    assert a_on["swap_out_blocks"] >= 1 and a_on["swap_in_blocks"] >= 1
+    assert a_on["cow_copies"] >= 1 and a_on["prefix_hits"] >= 1
+    assert a_on["quant_bytes_saved"] > 0
+    assert a_on["preemptions"] >= 1
+    # headline: overlap changed nothing observable
+    assert t_on == t_off
+    for key in _INVARIANT_KEYS:
+        assert a_on[key] == a_off[key], key
+    # witnesses: deferred path actually ran, and only there
+    assert a_on["deferred_readbacks"] >= 1
+    assert a_on["overlap_steps"] >= 1
+    assert a_on["staging_reuse_bytes"] > 0      # >= 2 swap-in transfers
+    assert a_off["deferred_readbacks"] == a_off["overlap_steps"] \
+        == a_off["staging_reuse_bytes"] == 0
+    assert a_off["swap_stall_ms"] > 0
+
+
+def test_async_matches_seed_sync_tokens(dense_setup):
+    """Cross-depth cross-flag: the async pipelined engine emits the same
+    tokens as the seed-exact sync engine with async off."""
+    cfg, params = dense_setup
+    toks = []
+    for depth, async_on in ((0, False), (1, True)):
+        eng = KVRMEngine(cfg, params, EngineConfig(
+            mode="paged_merge", batch=4, max_seq=64, block_tokens=8,
+            near_window=32, pipeline_depth=depth, pool_budget_frac=0.1,
+            host_pool_blocks=40, async_movement=async_on))
+        rng = np.random.default_rng(1)
+        for i in range(6):
+            eng.submit(Request(rid=i, prompt=rng.integers(
+                0, cfg.vocab_size, size=8).astype(np.int32), gen_len=48))
+        eng.run(max_steps=3000)
+        assert eng.audit()["preemptions"] >= 1
+        toks.append({r.rid: list(r.generated) for r in eng.sched.finished})
+    assert toks[0] == toks[1]
+
+
+# ---------------------------------------------------------------------------
+# launch/xla_flags: profile module
+# ---------------------------------------------------------------------------
+
+def test_profiles_and_flag_lists():
+    assert "default" in xla_flags.profile_names()
+    assert "latency_hiding" in xla_flags.profile_names()
+    flags = xla_flags.profile_flags("latency_hiding")
+    assert any("latency_hiding_scheduler" in f for f in flags)
+    assert xla_flags.profile_flags("default") == []
+
+
+def test_apply_profile_appends_and_records(monkeypatch):
+    monkeypatch.setenv("XLA_FLAGS",
+                       "--xla_gpu_enable_latency_hiding_scheduler=false")
+    monkeypatch.delenv("REPRO_XLA_PROFILE", raising=False)
+    monkeypatch.delenv("TF_CPP_MIN_LOG_LEVEL", raising=False)
+    info = xla_flags.apply_profile("latency_hiding")
+    env = os.environ["XLA_FLAGS"]
+    # user's flag survives (appended-only, already-present names skipped)
+    assert env.startswith("--xla_gpu_enable_latency_hiding_scheduler=false")
+    assert env.count("latency_hiding_scheduler") == 1
+    assert "--xla_gpu_enable_pipelined_all_gather=true" in env
+    assert os.environ["TF_CPP_MIN_LOG_LEVEL"] == "4"
+    assert xla_flags.active_profile() == "latency_hiding"
+    assert info["late"] is True          # jax imported by this test module
+    # reapplying is idempotent on XLA_FLAGS
+    xla_flags.apply_profile("latency_hiding")
+    assert os.environ["XLA_FLAGS"] == env
+
+
+def test_shell_exports_cover_process_external_setup():
+    sh = xla_flags.shell_exports("latency_hiding")
+    assert "LD_PRELOAD" in sh and "tcmalloc" in sh
+    assert "XLA_FLAGS" in sh
+    assert "REPRO_XLA_PROFILE=latency_hiding" in sh

@@ -43,11 +43,54 @@ def test_perf_regression_stays_warn_only(tmp_path):
     """A 50% tok_s drop is a WARNING, never a failure (CPU CI noise)."""
     old = _artifact(row={**CLEAN, "tok_s": 200.0})
     new = _artifact(row=CLEAN)
-    warnings = diff(old, new)
+    warnings, gate_errors = diff(old, new)
     assert any("tok_s" in w for w in warnings)
+    assert gate_errors == []
     po = _write(tmp_path, "old.json", old)
     pn = _write(tmp_path, "new.json", new)
     assert main(["--old", po, "--new", pn]) == 0
+
+
+def test_gated_row_promotes_regression_to_failure(tmp_path):
+    """--gate bench:row:metric flips a beyond-tolerance drop on that row
+    (and only that row) from warn to hard fail."""
+    old = _artifact(row={**CLEAN, "tok_s": 200.0},
+                    other={**CLEAN, "tok_s": 300.0})
+    new = _artifact(row=CLEAN, other=CLEAN)
+    warnings, gate_errors = diff(old, new,
+                                 gates={("oversubscribe", "row", "tok_s")})
+    assert any("row.tok_s" in e for e in gate_errors)
+    assert any("other.tok_s" in w for w in warnings)
+    po = _write(tmp_path, "old.json", old)
+    pn = _write(tmp_path, "new.json", new)
+    assert main(["--old", po, "--new", pn,
+                 "--gate", "oversubscribe:row:tok_s"]) != 0
+    assert main(["--old", po, "--new", pn,
+                 "--gate", "oversubscribe:other:tok_s"]) != 0
+
+
+def test_gated_row_within_tolerance_passes(tmp_path):
+    old = _artifact(row={**CLEAN, "tok_s": 100.0})
+    new = _artifact(row={**CLEAN, "tok_s": 95.0})   # -5% < 15% tolerance
+    po = _write(tmp_path, "old.json", old)
+    pn = _write(tmp_path, "new.json", new)
+    assert main(["--old", po, "--new", pn,
+                 "--gate", "oversubscribe:row:tok_s"]) == 0
+
+
+def test_gate_fails_closed(tmp_path):
+    """A gate that cannot be evaluated (missing row, missing old artifact)
+    must fail, not silently pass."""
+    new = _write(tmp_path, "new.json", _artifact(row=CLEAN))
+    old = _write(tmp_path, "old.json", _artifact(row=CLEAN))
+    # gated row absent from both artifacts
+    assert main(["--old", old, "--new", new,
+                 "--gate", "oversubscribe:nope:tok_s"]) != 0
+    # old artifact unreadable
+    assert main(["--old", str(tmp_path / "missing.json"), "--new", new,
+                 "--gate", "oversubscribe:row:tok_s"]) != 0
+    # no --old at all
+    assert main(["--new", new, "--gate", "oversubscribe:row:tok_s"]) != 0
 
 
 def test_failed_module_fails_gate(tmp_path):

@@ -105,3 +105,26 @@ def test_roofline_finalize_bottleneck():
         model_flops=1e14, attn_flops=0.0, useful_bytes=1e11).finalize()
     assert r.bottleneck == "compute"
     assert 0 < r.roofline_fraction <= 1.01
+
+
+def test_bench_kernel_rows_smoke():
+    """The per-kernel rows run.py --json embeds: both reference kernels
+    compile against the current registry/jax and yield self-consistent
+    achieved-vs-peak terms (repro.roofline.bench)."""
+    from repro.roofline import bench
+    rows = bench.kernel_rows()
+    assert set(rows) == {"prefill_chunk", "decode_step"}
+    for r in rows.values():
+        assert r["hlo_flops"] > 0 and r["hlo_bytes"] > 0
+        assert r["bottleneck"] in ("compute", "memory", "collective")
+        assert r["bound_step_s"] >= r["compute_s"] > 0
+        assert r["bound_step_s"] >= r["memory_s"] > 0
+        assert 0 < r["roofline_fraction"] <= 1.01
+        assert r["compute_s"] == pytest.approx(
+            r["hlo_flops"] / r["peak_flops"])
+    # the prefill kernel lowers 128x the tokens of the decode step
+    assert rows["prefill_chunk"]["hlo_flops"] \
+        > rows["decode_step"]["hlo_flops"]
+    # best-effort wrapper never raises
+    rep = bench.report()
+    assert rep["ok"] and set(rep["kernels"]) == set(rows)
