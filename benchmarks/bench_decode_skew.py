@@ -1,0 +1,321 @@
+"""Work-skipping decode under length skew (DESIGN.md §12).
+
+Three sections, all riding the extent-predicated kernels:
+
+* **kernel** — microbench of the trip-count contract on one compiled
+  executable. The wall-clock rows drive a jitted ``lax.fori_loop`` twin
+  of the kernel whose per-slot trip bounds ARE the runtime extents
+  (skip on) vs pinned to the padded grid (skip off) — same executable,
+  variable work, bitwise-identical outputs; the bimodal row must clear
+  a >= 1.3x speedup. The Pallas kernel itself is A/B'd bitwise in
+  interpret mode at prefetch depths 0 and 1 (its speedup row is
+  reported but not gated: interpret emulation pays the per-grid-step
+  block-copy machinery whether or not ``@pl.when`` predicates the body
+  off, so copy elision — the compiled-backend win — is invisible here).
+* **identity** — paired engine runs (``kernel_skip_extent`` on vs off)
+  over the adversarial workloads (lockstep oversubscribed burst, warm
+  radix prefix cache, fp8 quantized KV) at pipeline depths 0 and 1.
+  Every pair must emit bitwise-identical tokens (``token_divergence``
+  hard-failed by CI's diff_json gate): predication only ever drops
+  fully-masked blocks.
+* **skew** — engine-level uniform / bimodal / trace-replay sweeps
+  reporting tokens/s plus the new audit counters as padded-block ratio
+  and blocks-skipped share; the bimodal row must audit a nonzero
+  ``kernel_blocks_skipped``. CI promotes the bimodal tokens/s row to a
+  hard diff_json gate.
+"""
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import engine, print_rows, record_audit, row, \
+    run_workload, smoke_scale
+from repro.core.descriptor import active_block_extents
+from repro.core.scheduler import Request
+from repro.data import traces
+from repro.kernels.paged_attention import paged_decode_attention_pallas
+
+MIN_KERNEL_SPEEDUP = 1.3     # acceptance: bimodal skew, skip on vs off
+
+
+def _tokens(eng):
+    return {r.rid: list(r.generated) for r in eng.sched.finished}
+
+
+def _diverged(a, b):
+    return sum(1 for rid in set(a) | set(b) if a.get(rid) != b.get(rid))
+
+
+def _time(f, *a, iters=4):
+    out = f(*a)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = f(*a)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+# ---------------------------------------------------------------------------
+# section 1: trip-count kernel A/B — one executable, extent-bounded work
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("near_window", "bt", "nb_full"))
+def _trip_count_kernel(q, pk, pv, tbl, wb, seq, act, ext_lo, ext_hi, *,
+                       near_window, bt, nb_full=None):
+    """Flash-style paged decode whose per-slot block loop runs
+    ``fori_loop(ext_lo[b], ext_hi[b], ...)`` — the extents are RUNTIME
+    operands of one compiled executable, exactly the kernel's trip-count
+    contract. ``nb_full`` pins every trip to the padded grid (the
+    always-run baseline; fully-masked steps are exact no-ops of the
+    online-softmax update, so both bounds are bitwise identical)."""
+    B, H, hd = q.shape
+    KV = pk.shape[2]
+    n_rep = H // KV
+    scale = hd ** -0.5
+    outs = []
+    for b in range(B):
+        def body(i, st, b=b):
+            acc, m, l = st
+            blk = tbl[b, i]
+            kb = pk[blk].astype(jnp.float32)
+            vb = pv[blk].astype(jnp.float32)
+            pos = wb[b] + i * bt + jnp.arange(bt)
+            valid = (pos <= seq[b]) & (pos > seq[b] - near_window) \
+                & (pos >= 0) & (act[b] > 0)
+            s = jnp.einsum("krd,tkd->krt",
+                           q[b].reshape(KV, n_rep, hd).astype(jnp.float32),
+                           kb) * scale
+            s = jnp.where(valid[None, None, :], s, -1e30)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.where(valid[None, None, :],
+                          jnp.exp(s - m_new[..., None]), 0.0)
+            corr = jnp.exp(m - m_new)
+            l = l * corr + p.sum(-1)
+            acc = acc * corr[..., None] + jnp.einsum("krt,tkd->krd", p, vb)
+            return acc, m_new, l
+        acc0 = jnp.zeros((KV, n_rep, hd), jnp.float32)
+        m0 = jnp.full((KV, n_rep), -1e30, jnp.float32)
+        l0 = jnp.zeros((KV, n_rep), jnp.float32)
+        lo = ext_lo[b] if nb_full is None else 0
+        hi = ext_hi[b] if nb_full is None else nb_full
+        acc, m, l = jax.lax.fori_loop(lo, hi, body, (acc0, m0, l0))
+        outs.append((acc / jnp.maximum(l, 1e-30)[..., None]).reshape(H, hd))
+    return jnp.stack(outs)
+
+
+def _kernel_rows(rows):
+    from repro.kernels.ref import paged_decode_attention_ref
+
+    B, H, KV, hd, BT, W = 8, 64, 4, 64, 64, 1024
+    NB = W // BT + 1                      # engine geometry: ceil(W/bt)+1
+    P = B * NB + 1
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, H, hd), jnp.bfloat16)
+    pk = jax.random.normal(ks[1], (P, BT, KV, hd), jnp.bfloat16)
+    pv = jax.random.normal(ks[2], (P, BT, KV, hd), jnp.bfloat16)
+    tbl = jnp.asarray(np.stack([1 + b * NB + np.arange(NB) for b in range(B)])
+                      .astype(np.int32))
+    wb = jnp.zeros(B, jnp.int32)
+    act = jnp.ones(B, jnp.int32)
+
+    rng = np.random.default_rng(3)
+    dists = {
+        "uniform": np.full(B, W - 1),
+        "bimodal": np.array([W - 1] + [BT + 15] * (B - 1)),
+        "trace": np.clip(rng.gamma(2.0, W / 8.0, size=B), 16, W - 1),
+    }
+    iters = 5 if smoke_scale() == 1.0 else 3
+
+    for dist, lens in dists.items():
+        seq = jnp.asarray(lens.astype(np.int32))
+        lo, hi = active_block_extents(np.zeros(B, np.int64),
+                                      lens.astype(np.int64),
+                                      np.ones(B, np.int64),
+                                      near_window=W, nb=NB, bt=BT)
+        padded, active = B * NB, int((hi - lo).sum())
+        jlo, jhi = jnp.asarray(lo), jnp.asarray(hi)
+
+        def call(skip):
+            return _trip_count_kernel(
+                q, pk, pv, tbl, wb, seq, act, jlo, jhi,
+                near_window=W, bt=BT, nb_full=None if skip else NB)
+        o_on, o_off = call(True), call(False)
+        assert jnp.array_equal(o_on, o_off), \
+            f"{dist}: extent-bounded trips diverged from always-run"
+        o_ref = paged_decode_attention_ref(q, pk, pv, tbl, wb, seq, act,
+                                           near_window=W)[0]
+        assert jnp.allclose(o_on, o_ref.astype(jnp.float32), atol=2e-2), \
+            f"{dist}: trip-count kernel diverged from the jnp oracle"
+        us_on = _time(call, True, iters=iters)
+        us_off = _time(call, False, iters=iters)
+        speedup = us_off / us_on
+        rows.append(row(
+            f"decode_skew/kernel_{dist}", us_on,
+            tok_s=B / (us_on * 1e-6), us_always_run=us_off,
+            speedup=speedup, padded_blocks=padded, active_blocks=active,
+            padded_block_ratio=padded / max(1, active),
+            blocks_skipped_share=1.0 - active / padded))
+        if dist == "bimodal":
+            assert speedup >= MIN_KERNEL_SPEEDUP, \
+                f"kernel_{dist}: skip-extent speedup {speedup:.2f}x " \
+                f"< {MIN_KERNEL_SPEEDUP}x on bimodal skew"
+
+    # Pallas kernel bitwise A/B in interpret mode, both pipeline depths:
+    # the same extents drive @pl.when predication + clamped index maps.
+    # (Wall time reported, not gated — interpret emulation still pays the
+    # per-grid-step copy machinery for predicated-off steps.)
+    Bp, Hp, BTp, Wp = 8, 32, 32, 512
+    NBp = Wp // BTp + 1
+    Pp = Bp * NBp + 1
+    qp = jax.random.normal(ks[0], (Bp, Hp, hd), jnp.bfloat16)
+    pkp = jax.random.normal(ks[1], (Pp, BTp, KV, hd), jnp.bfloat16)
+    pvp = jax.random.normal(ks[2], (Pp, BTp, KV, hd), jnp.bfloat16)
+    tblp = jnp.asarray(np.stack([1 + b * NBp + np.arange(NBp)
+                                 for b in range(Bp)]).astype(np.int32))
+    wbp = jnp.zeros(Bp, jnp.int32)
+    actp = jnp.ones(Bp, jnp.int32)
+    seqp = jnp.asarray(np.array([Wp - 1] + [79] * (Bp - 1)).astype(np.int32))
+    for depth in (0, 1):
+        def pcall(skip, _d=depth):
+            return paged_decode_attention_pallas(
+                qp, pkp, pvp, tblp, wbp, seqp, actp, near_window=Wp,
+                skip_extent=skip, prefetch_depth=_d)[0]
+        o_on, o_off = pcall(True), pcall(False)
+        assert jnp.array_equal(o_on, o_off), \
+            f"pallas depth{depth}: skip-extent A/B not bitwise identical"
+        us_on = _time(pcall, True, iters=2)
+        us_off = _time(pcall, False, iters=2)
+        rows.append(row(
+            f"decode_skew/pallas_bimodal_depth{depth}", us_on,
+            tok_s=Bp / (us_on * 1e-6), us_always_run=us_off,
+            speedup=us_off / us_on, bitwise_identical=1))
+
+
+# ---------------------------------------------------------------------------
+# section 2: engine identity A/B — skip on vs off, bitwise tokens
+# ---------------------------------------------------------------------------
+
+def _burst_reqs():
+    rng = np.random.default_rng(1)
+    return [Request(rid=i, prompt=rng.integers(0, 256, size=8)
+                    .astype(np.int32), gen_len=48) for i in range(6)]
+
+
+def _prefix_reqs(n):
+    tcfg = traces.TraceConfig(n_requests=n, vocab=256, seed=23,
+                              shared_prefix_len=160, n_prefixes=3,
+                              prompt_mean=8, gen_mean=18, window_s=0.0)
+    reqs = traces.shared_prefix_workload(tcfg)
+    for r in reqs:
+        r.arrival = 0.0
+    return reqs
+
+
+def _mixed_reqs(n):
+    tcfg = traces.TraceConfig(n_requests=n, token_scale=0.25, vocab=256,
+                              seed=5)
+    return traces.mixed_length_workload(tcfg)
+
+
+def _identity_rows(rows):
+    n = max(8, int(12 * smoke_scale()))
+    workloads = {
+        # lockstep oversubscribed burst: deterministic preempt/swap path
+        "oversub": (_burst_reqs,
+                    dict(batch=4, max_seq=64, near_window=32, block_tokens=8,
+                         pool_budget=0.1, host_pool_blocks=40)),
+        # warm radix prefix cache: COW-aliased blocks enter the window
+        "prefix": (lambda: _prefix_reqs(n),
+                   dict(batch=4, max_seq=256, near_window=128, block_tokens=8,
+                        prefill_chunk=16, prefix_cache=True,
+                        prefix_cache_blocks=96)),
+        # fp8 KV tier: extents predicate the dequantizing kernel path
+        "quant": (lambda: _mixed_reqs(n),
+                  dict(batch=4, max_seq=256, near_window=128, block_tokens=8,
+                       kv_dtype="fp8_e4m3")),
+    }
+    for depth in (0, 1):
+        for wname, (mk, kw) in workloads.items():
+            on = engine("paged_merge", pipeline_depth=depth,
+                        kernel_skip_extent=True, **kw)
+            run_workload(on, mk())
+            off = engine("paged_merge", pipeline_depth=depth,
+                         kernel_skip_extent=False, **kw)
+            run_workload(off, mk())
+            div = _diverged(_tokens(on), _tokens(off))
+            a = on.audit()
+            lat = on.latency_stats()
+            tag = f"decode_skew/identity_{wname}_depth{depth}"
+            rows.append(row(
+                tag, lat["mean_ms"] * 1e3,
+                tok_s=on.throughput(),
+                kernel_blocks_total=a["kernel_blocks_total"],
+                kernel_blocks_skipped=a["kernel_blocks_skipped"],
+                token_divergence=div, alloc_failures=0,
+                finished=len(on.sched.finished)))
+            record_audit(tag, a)
+            assert div == 0, \
+                f"{tag}: {div} requests diverged with work-skipping on"
+            assert off.audit()["kernel_blocks_skipped"] == 0, \
+                f"{tag}: always-run engine audited skipped blocks"
+
+
+# ---------------------------------------------------------------------------
+# section 3: engine length-skew sweep + audit-counter reporting
+# ---------------------------------------------------------------------------
+
+def _skew_reqs(dist, n):
+    rng = np.random.default_rng(7)
+    reqs = []
+    if dist == "replay":
+        tcfg = traces.TraceConfig(n_requests=n, token_scale=0.5, vocab=256,
+                                  seed=11)
+        reqs = traces.mixed_length_workload(tcfg)
+        for r in reqs:
+            r.arrival = 0.0
+        return reqs
+    for i in range(n):
+        gen = 112 if dist == "uniform" else (176 if i % 4 == 0 else 24)
+        reqs.append(Request(rid=i, prompt=rng.integers(0, 256, size=8)
+                            .astype(np.int32), gen_len=gen))
+    return reqs
+
+
+def _skew_rows(rows):
+    n = max(8, int(16 * smoke_scale()))
+    kw = dict(batch=8, max_seq=256, near_window=128, block_tokens=8)
+    shares = {}
+    for dist in ("uniform", "bimodal", "replay"):
+        eng = engine("paged_merge", kernel_skip_extent=True, **kw)
+        run_workload(eng, _skew_reqs(dist, n))
+        a = eng.audit()
+        lat = eng.latency_stats()
+        total = a["kernel_blocks_total"]
+        skipped = a["kernel_blocks_skipped"]
+        shares[dist] = skipped / max(1, total)
+        rows.append(row(
+            f"decode_skew/{dist}", lat["mean_ms"] * 1e3,
+            tok_s=eng.throughput(), step_p99_ms=lat["p99_ms"],
+            kernel_blocks_total=total, kernel_blocks_skipped=skipped,
+            padded_block_ratio=total / max(1, total - skipped),
+            blocks_skipped_share=shares[dist],
+            finished=len(eng.sched.finished)))
+        record_audit(f"decode_skew/{dist}", a)
+    assert shares["bimodal"] > 0, \
+        "bimodal skew audited zero kernel_blocks_skipped"
+
+
+def run():
+    rows = []
+    _kernel_rows(rows)
+    _identity_rows(rows)
+    _skew_rows(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    print_rows(run())

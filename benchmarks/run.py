@@ -49,6 +49,7 @@ MODULES = [
     ("farview_quality", "benchmarks.bench_farview_quality"),
     ("boundary_stress", "benchmarks.bench_boundary_stress"),
     ("longcontext_budget", "benchmarks.bench_longcontext_budget"),
+    ("decode_skew", "benchmarks.bench_decode_skew"),
     ("kernels", "benchmarks.bench_kernels"),
     ("scaling", "benchmarks.bench_scaling"),
 ]

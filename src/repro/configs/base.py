@@ -22,6 +22,9 @@ class ServingConfig:
     max_hold_steps: int = 2      # delta — age cutoff for staged descriptors
     lookahead_pages: int = 1     # prefetch-1
     enable_farview: bool = False # optional policy, off by default (core path)
+    skip_extent: bool = True     # work-skipping decode/prefill kernels: mask
+                                 # whole out-of-extent window blocks off
+                                 # (bitwise no-op; DESIGN.md §12)
 
 
 @dataclass(frozen=True)

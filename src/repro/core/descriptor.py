@@ -206,6 +206,33 @@ def unflatten_chunk_descriptor(flat: jnp.ndarray, batch: int, chunk: int,
         name: flat[lo:hi].reshape(shp) for name, shp, lo, hi in layout})
 
 
+def active_block_extents(window_base, seq_lens, slot_active, *,
+                         near_window: int, nb: int, bt: int):
+    """Host-side (numpy) per-slot active window-block extents [lo, hi).
+
+    The canonical descriptor-side derivation of the work-skipping kernel's
+    trip counts (DESIGN.md §12): block i of slot b holds positions
+    ``wb + i*bt .. wb + (i+1)*bt - 1``; only blocks intersecting
+    ``(t - near_window, t] ∩ [0, inf)`` carry unmasked work, and retired
+    slots (``slot_active == 0``) carry none. Must stay in lockstep with
+    ``kernels/ref.py active_block_extent`` (the jnp twin fed to the kernels
+    as scalar-prefetch meta) — tests/test_kernel_skip.py asserts agreement.
+    The engine's ``kernel_blocks_{total,skipped}`` audit counters integrate
+    ``nb - (hi - lo)`` over participating slot-steps.
+
+    Inputs are (B,) int arrays (descriptor views); returns int32 (lo, hi).
+    """
+    window_base = np.asarray(window_base, np.int64)
+    seq_lens = np.asarray(seq_lens, np.int64)
+    act = np.asarray(slot_active) > 0
+    lo_pos = np.maximum(0, seq_lens + 1 - near_window)
+    lo = (lo_pos - window_base) // bt
+    hi = (seq_lens - window_base) // bt + 1
+    lo = np.clip(np.where(act, lo, 0), 0, nb).astype(np.int32)
+    hi = np.clip(np.where(act, hi, 0), 0, nb).astype(np.int32)
+    return lo, np.maximum(hi, lo)
+
+
 def descriptor_geometry(serving, max_seq: int):
     """Static shape parameters implied by a ServingConfig."""
     page, near = serving.page_size, serving.near_window

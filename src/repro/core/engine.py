@@ -52,9 +52,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.descriptor import (FrameDescriptor, chunk_flat_size,
-                                   descriptor_flat_size, empty_descriptor,
-                                   flat_chunk_views, flat_descriptor_views,
+from repro.core.descriptor import (FrameDescriptor, active_block_extents,
+                                   chunk_flat_size, descriptor_flat_size,
+                                   empty_descriptor, flat_chunk_views,
+                                   flat_descriptor_views,
                                    unflatten_chunk_descriptor,
                                    unflatten_descriptor)
 from repro.core.farview import FarViewPolicy
@@ -108,6 +109,10 @@ class EngineConfig:
     async_movement: bool = True      # double-buffered staging + deferred
     #                                  swap-out readback fences; False =
     #                                  per-event blocking movement (A/B)
+    # --- work-skipping kernels (DESIGN.md §12) ---
+    kernel_skip_extent: bool = True  # per-slot active-extent predication in
+    #                                  the decode/prefill kernels; False =
+    #                                  always-run masked baseline (A/B)
 
 
 @dataclass
@@ -298,7 +303,8 @@ class KVRMEngine:
             farview_cap=self.cap, sv_chunk=ecfg.sv_chunk,
             merge_threshold_bytes=cfg.serving.merge_threshold_bytes,
             max_hold_steps=cfg.serving.max_hold_steps,
-            enable_farview=self.farview))
+            enable_farview=self.farview,
+            skip_extent=ecfg.kernel_skip_extent))
         self._cfg_dec = cfg_dec
 
         dbg = ecfg.debug_logits
@@ -373,6 +379,14 @@ class KVRMEngine:
                            if self._chunked else 0)
         self._chunk_steps = 0
         self._chunk_wait = 0.0
+
+        # --- work-skipping kernel audit (DESIGN.md §12): the fixed decode
+        # grid walks NB window blocks per participating slot-step; the
+        # descriptor-side extent derivation below mirrors the kernel's
+        # scalar-prefetch meta, so `skipped` is exactly the predicated-off
+        # share of `total` (0 when kernel_skip_extent is off).
+        self._kernel_blocks_total = 0
+        self._kernel_blocks_skipped = 0
 
         # --- pipelined dispatch state (DESIGN.md §3) ---
         self._inflight: Deque[dict] = deque()
@@ -1180,6 +1194,21 @@ class KVRMEngine:
         return self._step_pipelined(now)
 
     # ------------------------------------------------------------------
+    def _account_kernel_blocks(self, window_base, seq_lens, slot_active):
+        """Integrate the decode kernel's padded-vs-active block counts over
+        this step's participating slots (descriptor-side host math — the
+        same derivation the kernel receives as scalar-prefetch meta)."""
+        n = len(window_base)
+        if n == 0:
+            return
+        self._kernel_blocks_total += self.NB * n
+        if self.e.kernel_skip_extent:
+            lo, hi = active_block_extents(
+                window_base, seq_lens, slot_active,
+                near_window=self.W, nb=self.NB, bt=self.bt)
+            self._kernel_blocks_skipped += int((self.NB - (hi - lo)).sum())
+
+    # ------------------------------------------------------------------
     def _step_sync(self, now: float) -> StepMetrics:
         """Seed-exact synchronous step: per-slot descriptor assembly, one
         blocking readback per step (pipeline_depth=0 A/B baseline)."""
@@ -1248,6 +1277,11 @@ class KVRMEngine:
             self.transport.fill_train_arrays(
                 trains, descr.train_start, descr.train_len, descr.train_dst, slot)
             m.dma_groups += groups
+
+        if parts:
+            self._account_kernel_blocks(descr.window_base[parts],
+                                        descr.seq_lens[parts],
+                                        descr.slot_active[parts])
 
         # ---- Frame: single atomic commit
         tf0 = time.perf_counter()
@@ -1412,6 +1446,8 @@ class KVRMEngine:
             self.transport.account_batch(self._win_nblocks[pa],
                                          self._win_groups[pa], far_flags)
             m.dma_groups = int(self._win_groups[pa].sum() + far_flags.sum())
+            self._account_kernel_blocks(d.window_base[pa], d.seq_lens[pa],
+                                        d.slot_active[pa])
 
         # ---- Frame: single atomic commit
         tf0 = time.perf_counter()
@@ -1570,6 +1606,13 @@ class KVRMEngine:
             # All three counters are zero with async_movement off — the A/B
             # identity gate checks exactly that invariance of everything
             # ABOVE this block while these move.
+            # --- work-skipping decode kernel (DESIGN.md §12): padded grid
+            # blocks walked vs blocks predicated off by the per-slot active
+            # extent. total is the descriptor-side padded count (NB per
+            # participating slot-step); skipped is 0 with the flag off.
+            "kernel_skip_extent": bool(self.e.kernel_skip_extent),
+            "kernel_blocks_total": self._kernel_blocks_total,
+            "kernel_blocks_skipped": self._kernel_blocks_skipped,
             "async_movement": bool(self.e.async_movement),
             "overlap_steps": self.transport.stats.overlap_steps,
             "deferred_readbacks": self.transport.stats.deferred_readbacks,

@@ -14,6 +14,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.runtime import resolve_interpret
+
 
 def _sum_kernel(chunk_tbl_ref, meta_ref, pool_ref, o_ref, acc_ref,
                 *, bt: int, width: int):
@@ -40,11 +42,18 @@ def _sum_kernel(chunk_tbl_ref, meta_ref, pool_ref, o_ref, acc_ref,
         o_ref[...] = jnp.where(gate > 0, out, 0.0).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
 def farview_summarize_pallas(pool, chunk_blocks, n_tokens, do_summarize,
-                             interpret=True):
+                             interpret=None):
     """pool: (P,BT,...payload); chunk_blocks: (B,CB); n_tokens/do_summarize:
-    (B,). Returns (B, ...payload) mean summaries (zeros where gated off)."""
+    (B,). Returns (B, ...payload) mean summaries (zeros where gated off).
+    interpret=None resolves from the backend (kernels/runtime.py)."""
+    return _farview_summarize_impl(pool, chunk_blocks, n_tokens, do_summarize,
+                                   interpret=resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _farview_summarize_impl(pool, chunk_blocks, n_tokens, do_summarize,
+                            interpret=True):
     P, BT = pool.shape[:2]
     payload = pool.shape[2:]
     width = 1

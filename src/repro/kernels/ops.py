@@ -67,7 +67,7 @@ def paged_decode_attention(q, pool_k, pool_v, block_table, window_base,
                            seq_lens, slot_active, *, near_window,
                            far_k=None, far_v=None, far_table=None,
                            far_valid=None, cur_k=None, cur_v=None,
-                           k_scale=None, v_scale=None,
+                           k_scale=None, v_scale=None, skip_extent=False,
                            impl: str | None = None):
     impl = impl or _DEFAULT_IMPL
     from repro.distributed.act_sharding import constrain_model_dim
@@ -78,18 +78,18 @@ def paged_decode_attention(q, pool_k, pool_v, block_table, window_base,
             q, pool_k, pool_v, block_table, window_base, seq_lens, slot_active,
             near_window=near_window, far_k=far_k, far_v=far_v,
             far_table=far_table, far_valid=far_valid,
-            k_scale=k_scale, v_scale=v_scale)
+            k_scale=k_scale, v_scale=v_scale, skip_extent=skip_extent)
     return ref.paged_decode_attention_ref(
         q, pool_k, pool_v, block_table, window_base, seq_lens, slot_active,
         near_window=near_window, far_k=far_k, far_v=far_v,
         far_table=far_table, far_valid=far_valid, cur_k=cur_k, cur_v=cur_v,
-        k_scale=k_scale, v_scale=v_scale)
+        k_scale=k_scale, v_scale=v_scale, skip_extent=skip_extent)
 
 
 def chunked_prefill_attention(q, pool_k, pool_v, cur_k, cur_v, block_table,
                               window_base, start_pos, n_valid, *,
                               near_window, k_scale=None, v_scale=None,
-                              impl: str | None = None):
+                              skip_extent=False, impl: str | None = None):
     """One slot's prompt-chunk attention: paged pre-chunk context + in-chunk
     causal (the chunked prefill executor's core; DESIGN.md §3)."""
     impl = impl or _DEFAULT_IMPL
@@ -98,11 +98,11 @@ def chunked_prefill_attention(q, pool_k, pool_v, cur_k, cur_v, block_table,
         return pfa.chunked_prefill_attention_pallas(
             q, pool_k, pool_v, cur_k, cur_v, block_table, window_base,
             start_pos, n_valid, near_window=near_window,
-            k_scale=k_scale, v_scale=v_scale)
+            k_scale=k_scale, v_scale=v_scale, skip_extent=skip_extent)
     return ref.chunked_prefill_attention_ref(
         q, pool_k, pool_v, cur_k, cur_v, block_table, window_base,
         start_pos, n_valid, near_window=near_window,
-        k_scale=k_scale, v_scale=v_scale)
+        k_scale=k_scale, v_scale=v_scale, skip_extent=skip_extent)
 
 
 def mla_decode_attention(q_nope, q_rope, pool_lat, w_k_b, w_v_b, block_table,

@@ -10,6 +10,23 @@ RESERVE), consecutive grid steps touch physically-adjacent HBM regions and
 Mosaic coalesces them into long DMA trains — descriptor merging realized as
 a copy schedule (DESIGN.md §2).
 
+Work skipping (DESIGN.md §12): the grid is still fixed at (B, NB) — one
+compile per engine config — but the meta scalar-prefetch operand now carries
+a per-slot *active block extent* [ext_lo, ext_hi): the first/last window
+block with any position inside ``(t - near_window, t]`` (empty for retired
+slots). Every grid step outside the extent is predicated off with
+``@pl.when`` — zero dot products — and the K/V BlockSpec index map clamps
+into the extent so the revisited index elides the HBM->VMEM copy too.
+Fixed grid, variable work; skipping only ever removes fully-masked blocks,
+so outputs are bitwise identical to the always-run kernel.
+
+Device-side overlap (``prefetch_depth=1``): a double-buffered variant keeps
+the pools in ANY memory space and stages block ``i+1``'s K/V (+ scale) into
+VMEM with manual async copies while block ``i`` computes — the custom-kernel
+prefetch the ROADMAP's latency-hiding item left open. A guarded fallback
+(direct ANY-space reads, same two-buffer rotation, no semaphores) keeps the
+path runnable where interpret mode lacks DMA primitives.
+
 Layout notes (TPU):
   * last dim = head_dim (>= 128-lane friendly for standard models);
   * KV block = (BT, KV*hd) rows — BT >= 8 sublanes;
@@ -35,7 +52,29 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.runtime import interpret_dma_supported, resolve_interpret
+
 NEG_INF = -1e30
+
+
+def _online_block_update(acc_ref, m_ref, l_ref, qg, kb, vb, valid, scale):
+    """One flash-style online-softmax block step (shared by both decode
+    kernel variants so skip/prefetch A/Bs stay bitwise comparable)."""
+    s = jax.lax.dot_general(qg, kb, (((2,), (2,)), ((0,), (1,))),
+                            preferred_element_type=jnp.float32)  # (KV, n_rep, BT)
+    s = s * scale
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[...]                          # (KV, n_rep)
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.exp(s - m_new[..., None])
+    p = jnp.where(valid, p, 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=-1)
+    pv = jax.lax.dot_general(p, vb, (((2,), (0,)), ((0,), (1,))),
+                             preferred_element_type=jnp.float32)  # (KV, n_rep, hd)
+    acc_ref[...] = acc_ref[...] * corr[..., None] + pv
+    m_ref[...] = m_new
 
 
 def _decode_kernel(*refs, bt: int, kv: int, n_rep: int, hd: int,
@@ -62,34 +101,25 @@ def _decode_kernel(*refs, bt: int, kv: int, n_rep: int, hd: int,
     wb = meta_ref[b, 0]
     t = meta_ref[b, 1]
     active = meta_ref[b, 2]
+    ext_lo = meta_ref[b, 3]
+    ext_hi = meta_ref[b, 4]
 
-    q = q_ref[0].astype(jnp.float32)             # (H, hd)
-    kb = k_ref[0].astype(jnp.float32)            # (BT, KV, hd)
-    vb = v_ref[0].astype(jnp.float32)
-    if quant:
-        blk = block_tbl_ref[b, i]
-        kb = kb * ks_ref[blk][None, :, None]     # (KV,) scales from SMEM
-        vb = vb * vs_ref[blk][None, :, None]
-
-    # scores: group q heads per kv head
-    qg = q.reshape(kv, n_rep, hd)
-    s = jax.lax.dot_general(qg, kb, (((2,), (2,)), ((0,), (1,))),
-                            preferred_element_type=jnp.float32)  # (KV, n_rep, BT)
-    s = s * scale
-    pos = wb + i * bt + jax.lax.broadcasted_iota(jnp.int32, (1, 1, bt), 2)
-    valid = (pos <= t) & (pos > t - near_window) & (pos >= 0) & (active > 0)
-    s = jnp.where(valid, s, NEG_INF)
-
-    m_prev = m_ref[...]                          # (KV, n_rep)
-    m_new = jnp.maximum(m_prev, s.max(axis=-1))
-    p = jnp.exp(s - m_new[..., None])
-    p = jnp.where(valid, p, 0.0)
-    corr = jnp.exp(m_prev - m_new)
-    l_ref[...] = l_ref[...] * corr + p.sum(axis=-1)
-    pv = jax.lax.dot_general(p, vb, (((2,), (0,)), ((0,), (1,))),
-                             preferred_element_type=jnp.float32)  # (KV, n_rep, hd)
-    acc_ref[...] = acc_ref[...] * corr[..., None] + pv
-    m_ref[...] = m_new
+    # active-extent predication (DESIGN.md §12): out-of-extent blocks are
+    # fully masked anyway — the online update they'd run is an exact no-op
+    # (m_new == m_prev, corr == 1, p == 0) — so the whole step is skipped.
+    @pl.when((i >= ext_lo) & (i < ext_hi))
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)             # (H, hd)
+        kb = k_ref[0].astype(jnp.float32)            # (BT, KV, hd)
+        vb = v_ref[0].astype(jnp.float32)
+        if quant:
+            blk = block_tbl_ref[b, i]
+            kb = kb * ks_ref[blk][None, :, None]     # (KV,) scales from SMEM
+            vb = vb * vs_ref[blk][None, :, None]
+        qg = q.reshape(kv, n_rep, hd)                # group q heads per kv head
+        pos = wb + i * bt + jax.lax.broadcasted_iota(jnp.int32, (1, 1, bt), 2)
+        valid = (pos <= t) & (pos > t - near_window) & (pos >= 0) & (active > 0)
+        _online_block_update(acc_ref, m_ref, l_ref, qg, kb, vb, valid, scale)
 
     @pl.when(i == nb - 1)
     def _finalize():
@@ -98,21 +128,97 @@ def _decode_kernel(*refs, bt: int, kv: int, n_rep: int, hd: int,
         o_ref[0] = jnp.where(active > 0, out, 0.0).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("near_window", "interpret"))
-def paged_decode_attention_pallas(q, pool_k, pool_v, block_table, window_base,
-                                  seq_lens, slot_active, *, near_window,
-                                  far_k=None, far_v=None, far_table=None,
-                                  far_valid=None, k_scale=None, v_scale=None,
-                                  interpret=True):
-    """Near-window paged attention; optional far-view handled by a jnp side
-    path merged via flash-combine (far view is the paper's optional policy).
+def _decode_kernel_db(*refs, bt: int, kv: int, n_rep: int, hd: int,
+                      near_window: int, scale: float, quant: bool, dma: bool):
+    """Double-buffered decode variant (prefetch_depth=1): pools live in ANY
+    memory space; block i+1's K/V is staged into one of two VMEM buffers
+    (async copy when `dma`, direct read otherwise) while block i computes."""
+    if quant:
+        (block_tbl_ref, meta_ref, ks_ref, vs_ref,
+         q_ref, kh_ref, vh_ref, o_ref,
+         kbuf, vbuf, acc_ref, m_ref, l_ref, *sems) = refs
+    else:
+        (block_tbl_ref, meta_ref,
+         q_ref, kh_ref, vh_ref, o_ref,
+         kbuf, vbuf, acc_ref, m_ref, l_ref, *sems) = refs
+    b = pl.program_id(0)
+    i = pl.program_id(1)
+    nb = pl.num_programs(1)
 
-    q: (B,H,hd); pool_k/pool_v: (P,BT,KV,hd); block_table: (B,NB).
-    k_scale/v_scale: optional (P,KV) f32 per-block per-head dequant scales
-    for narrow (int8 / float8_e4m3) pools — they ride as scalar-prefetch
-    operands (SMEM) and each grid step's block copy dequantizes on load, so
-    the descriptor contract and grid are unchanged (DESIGN.md §10).
-    Returns (out (B,H,hd), far_util (B,CAP))."""
+    wb = meta_ref[b, 0]
+    t = meta_ref[b, 1]
+    active = meta_ref[b, 2]
+    ext_lo = meta_ref[b, 3]
+    ext_hi = meta_ref[b, 4]
+
+    def _start_fetch(ib):
+        slot = ib % 2
+        blk = block_tbl_ref[b, ib]
+        if dma:
+            ksem, vsem = sems
+            pltpu.make_async_copy(kh_ref.at[blk], kbuf.at[slot],
+                                  ksem.at[slot]).start()
+            pltpu.make_async_copy(vh_ref.at[blk], vbuf.at[slot],
+                                  vsem.at[slot]).start()
+        else:
+            # interpret fallback: same two-buffer rotation, synchronous read
+            kbuf[slot] = kh_ref[blk]
+            vbuf[slot] = vh_ref[blk]
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+        @pl.when(ext_hi > ext_lo)
+        def _prime():
+            _start_fetch(ext_lo)
+
+    @pl.when((i >= ext_lo) & (i < ext_hi))
+    def _compute():
+        slot = i % 2
+        if dma:
+            ksem, vsem = sems
+            blk = block_tbl_ref[b, i]
+            pltpu.make_async_copy(kh_ref.at[blk], kbuf.at[slot],
+                                  ksem.at[slot]).wait()
+            pltpu.make_async_copy(vh_ref.at[blk], vbuf.at[slot],
+                                  vsem.at[slot]).wait()
+
+        # overlap: issue block i+1's fetch before touching block i's data
+        @pl.when(i + 1 < ext_hi)
+        def _ahead():
+            _start_fetch(i + 1)
+
+        q = q_ref[0].astype(jnp.float32)             # (H, hd)
+        kb = kbuf[slot].astype(jnp.float32)          # (BT, KV, hd)
+        vb = vbuf[slot].astype(jnp.float32)
+        if quant:
+            blk = block_tbl_ref[b, i]
+            kb = kb * ks_ref[blk][None, :, None]
+            vb = vb * vs_ref[blk][None, :, None]
+        qg = q.reshape(kv, n_rep, hd)
+        pos = wb + i * bt + jax.lax.broadcasted_iota(jnp.int32, (1, 1, bt), 2)
+        valid = (pos <= t) & (pos > t - near_window) & (pos >= 0) & (active > 0)
+        _online_block_update(acc_ref, m_ref, l_ref, qg, kb, vb, valid, scale)
+
+    @pl.when(i == nb - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-20)[..., None]
+        out = (acc_ref[...] / denom).reshape(kv * n_rep, hd)
+        o_ref[0] = jnp.where(active > 0, out, 0.0).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "near_window", "skip_extent", "prefetch_depth", "dma", "interpret"))
+def _paged_decode_attention_impl(q, pool_k, pool_v, block_table, window_base,
+                                 seq_lens, slot_active, *, near_window,
+                                 k_scale=None, v_scale=None,
+                                 skip_extent=True, prefetch_depth=0,
+                                 dma=True, interpret=True):
+    from repro.kernels.ref import active_block_extent
+
     B, H, hd = q.shape
     P, BT, KV, _ = pool_k.shape
     NB = block_table.shape[1]
@@ -121,55 +227,133 @@ def paged_decode_attention_pallas(q, pool_k, pool_v, block_table, window_base,
     scale = 1.0 / math.sqrt(hd)
     quant = k_scale is not None
 
-    meta = jnp.stack([window_base, seq_lens, slot_active.astype(jnp.int32)],
-                     axis=1).astype(jnp.int32)           # (B, 3)
+    ext_lo, ext_hi = active_block_extent(
+        window_base, seq_lens, slot_active,
+        near_window=near_window, nb=NB, bt=BT)
+    if not skip_extent:
+        # always-run baseline: full extents make the predication trivially
+        # true — the exact masked kernel, same executable, for bitwise A/Bs
+        ext_lo = jnp.zeros_like(ext_lo)
+        ext_hi = jnp.full_like(ext_hi, NB)
+    meta = jnp.stack([window_base, seq_lens, slot_active.astype(jnp.int32),
+                      ext_lo, ext_hi], axis=1).astype(jnp.int32)   # (B, 5)
 
     grid = (B, NB)
-    kernel = functools.partial(
-        _decode_kernel, bt=BT, kv=KV, n_rep=n_rep, hd=hd,
-        near_window=near_window, scale=scale, quant=quant)
-
     nsp = 4 if quant else 2
+
     def _ix(f):
         # index maps take one trailing arg per scalar-prefetch operand
-        return (lambda b, i, tbl, meta, ks, vs: f(b, i, tbl)) if quant \
-            else (lambda b, i, tbl, meta: f(b, i, tbl))
-    gs = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=nsp,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, H, hd), _ix(lambda b, i, tbl: (b, 0, 0))),
-            pl.BlockSpec((1, BT, KV, hd),
-                         _ix(lambda b, i, tbl: (tbl[b, i], 0, 0, 0))),
-            pl.BlockSpec((1, BT, KV, hd),
-                         _ix(lambda b, i, tbl: (tbl[b, i], 0, 0, 0))),
-        ],
-        out_specs=pl.BlockSpec((1, H, hd), _ix(lambda b, i, tbl: (b, 0, 0))),
-        scratch_shapes=[
-            pltpu.VMEM((KV, n_rep, hd), jnp.float32),
-            pltpu.VMEM((KV, n_rep), jnp.float32),
-            pltpu.VMEM((KV, n_rep), jnp.float32),
-        ],
-    )
+        return (lambda b, i, tbl, meta, ks, vs: f(b, i, tbl, meta)) if quant \
+            else (lambda b, i, tbl, meta: f(b, i, tbl, meta))
+
+    def _blk_ix(b, i, tbl, meta):
+        # clamp out-of-extent steps onto the extent boundary: the index map
+        # revisits a block it already mapped, so Mosaic elides the copy for
+        # every predicated-off grid step (the bandwidth half of the skip)
+        j = jnp.clip(i, meta[b, 3], jnp.maximum(meta[b, 4] - 1, meta[b, 3]))
+        return (tbl[b, j], 0, 0, 0)
+
     sp_args = (block_table.astype(jnp.int32), meta)
     if quant:
         sp_args += (k_scale.astype(jnp.float32), v_scale.astype(jnp.float32))
-    near_out = pl.pallas_call(
+
+    if prefetch_depth > 0:
+        # double-buffered manual staging: pools bypass the BlockSpec pipeline
+        kernel = functools.partial(
+            _decode_kernel_db, bt=BT, kv=KV, n_rep=n_rep, hd=hd,
+            near_window=near_window, scale=scale, quant=quant, dma=dma)
+        scratch = [
+            pltpu.VMEM((2, BT, KV, hd), pool_k.dtype),
+            pltpu.VMEM((2, BT, KV, hd), pool_v.dtype),
+            pltpu.VMEM((KV, n_rep, hd), jnp.float32),
+            pltpu.VMEM((KV, n_rep), jnp.float32),
+            pltpu.VMEM((KV, n_rep), jnp.float32),
+        ]
+        if dma:
+            scratch += [pltpu.SemaphoreType.DMA((2,)),
+                        pltpu.SemaphoreType.DMA((2,))]
+        gs = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=nsp,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, H, hd), _ix(lambda b, i, tbl, meta: (b, 0, 0))),
+                pl.BlockSpec(memory_space=pltpu.ANY),
+                pl.BlockSpec(memory_space=pltpu.ANY),
+            ],
+            out_specs=pl.BlockSpec((1, H, hd),
+                                   _ix(lambda b, i, tbl, meta: (b, 0, 0))),
+            scratch_shapes=scratch,
+        )
+    else:
+        kernel = functools.partial(
+            _decode_kernel, bt=BT, kv=KV, n_rep=n_rep, hd=hd,
+            near_window=near_window, scale=scale, quant=quant)
+        gs = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=nsp,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, H, hd), _ix(lambda b, i, tbl, meta: (b, 0, 0))),
+                pl.BlockSpec((1, BT, KV, hd), _ix(_blk_ix)),
+                pl.BlockSpec((1, BT, KV, hd), _ix(_blk_ix)),
+            ],
+            out_specs=pl.BlockSpec((1, H, hd),
+                                   _ix(lambda b, i, tbl, meta: (b, 0, 0))),
+            scratch_shapes=[
+                pltpu.VMEM((KV, n_rep, hd), jnp.float32),
+                pltpu.VMEM((KV, n_rep), jnp.float32),
+                pltpu.VMEM((KV, n_rep), jnp.float32),
+            ],
+        )
+    return pl.pallas_call(
         kernel, grid_spec=gs,
         out_shape=jax.ShapeDtypeStruct((B, H, hd), q.dtype),
         interpret=interpret,
     )(*sp_args, q, pool_k, pool_v)
 
-    if far_k is None or far_table is None:
-        return near_out, jnp.zeros((B, 1), jnp.float32)
-    assert not quant, "far view and the quantized KV tier are exclusive (§10)"
 
-    # --- far view (optional policy): jnp path + flash-combine --------------
-    from repro.kernels import ref as _ref
-    # near softmax stats must be recomputed for an exact merge; reuse the ref
-    # full path for correctness (far view off the critical core path).
-    out, fu = _ref.paged_decode_attention_ref(
+def paged_decode_attention_pallas(q, pool_k, pool_v, block_table, window_base,
+                                  seq_lens, slot_active, *, near_window,
+                                  far_k=None, far_v=None, far_table=None,
+                                  far_valid=None, k_scale=None, v_scale=None,
+                                  skip_extent=True, prefetch_depth=0,
+                                  dma=None, interpret=None):
+    """Near-window paged attention; optional far-view handled by a jnp side
+    path merged via flash-combine (far view is the paper's optional policy).
+
+    q: (B,H,hd); pool_k/pool_v: (P,BT,KV,hd); block_table: (B,NB).
+    k_scale/v_scale: optional (P,KV) f32 per-block per-head dequant scales
+    for narrow (int8 / float8_e4m3) pools — they ride as scalar-prefetch
+    operands (SMEM) and each grid step's block copy dequantizes on load, so
+    the descriptor contract and grid are unchanged (DESIGN.md §10).
+
+    skip_extent=False pins every slot's extent to [0, NB) — the always-run
+    masked baseline (same executable) for bitwise A/Bs. prefetch_depth=1
+    selects the double-buffered manual-staging variant; dma=None probes
+    whether interpret mode supports async copies (False forces the direct
+    -read fallback — test hook). interpret=None resolves from the backend
+    (kernels/runtime.py): CPU -> interpret, TPU/GPU -> compiled.
+    Returns (out (B,H,hd), far_util (B,CAP))."""
+    interpret = resolve_interpret(interpret)
+    if dma is None:
+        dma = (not interpret) or interpret_dma_supported()
+
+    if far_k is not None and far_table is not None:
+        assert k_scale is None, \
+            "far view and the quantized KV tier are exclusive (§10)"
+        # --- far view (optional policy): jnp path + flash-combine ----------
+        from repro.kernels import ref as _ref
+        # near softmax stats must be recomputed for an exact merge; reuse the
+        # ref full path for correctness (far view off the critical core path).
+        out, fu = _ref.paged_decode_attention_ref(
+            q, pool_k, pool_v, block_table, window_base, seq_lens, slot_active,
+            near_window=near_window, far_k=far_k, far_v=far_v,
+            far_table=far_table, far_valid=far_valid, skip_extent=skip_extent)
+        return out, fu
+
+    near_out = _paged_decode_attention_impl(
         q, pool_k, pool_v, block_table, window_base, seq_lens, slot_active,
-        near_window=near_window, far_k=far_k, far_v=far_v,
-        far_table=far_table, far_valid=far_valid)
-    return out, fu
+        near_window=near_window, k_scale=k_scale, v_scale=v_scale,
+        skip_extent=bool(skip_extent), prefetch_depth=int(prefetch_depth),
+        dma=bool(dma), interpret=interpret)
+    B = q.shape[0]
+    return near_out, jnp.zeros((B, 1), jnp.float32)

@@ -11,6 +11,11 @@ Chunked kernel: grid (KV, NB + 1) for ONE slot's C-token chunk. Steps
 0..NB-1 walk the committed near-window block table (scalar prefetch, one
 ~tau-byte HBM->VMEM block copy per step — the same merged-transport contract
 as the decode kernel); the final step folds the chunk's own K/V causally.
+Pool steps outside the chunk's active block extent (DESIGN.md §12 — blocks
+with no position in ``[max(0, start-W+1), start-1]``, i.e. the causal upper
+triangle plus the window trailing edge) are predicated off with ``@pl.when``
+and their copies elided via a clamped index map: fixed grid, variable work,
+bitwise-identical output.
 """
 from __future__ import annotations
 
@@ -21,6 +26,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.runtime import resolve_interpret
 
 NEG_INF = -1e30
 
@@ -93,6 +100,8 @@ def _chunk_kernel(*refs, bt: int, chunk: int, n_rep: int, hd: int,
     wb = meta_ref[0]
     start = meta_ref[1]
     n_valid = meta_ref[2]
+    ext_lo = meta_ref[3]
+    ext_hi = meta_ref[4]
     q = q_ref[:, 0].astype(jnp.float32)           # (C, n_rep, hd)
     qpos = start + jax.lax.broadcasted_iota(jnp.int32, (chunk, 1, 1), 0)
 
@@ -107,7 +116,11 @@ def _chunk_kernel(*refs, bt: int, chunk: int, n_rep: int, hd: int,
         m_ref[...] = m_new
         return p, corr
 
-    @pl.when(i < nb)
+    # pool steps (i < nb) run only inside the chunk's active block extent
+    # (DESIGN.md §12); out-of-extent pool blocks are fully masked anyway, so
+    # predication is a bitwise no-op that skips both dots and (with the
+    # clamped index map) the HBM->VMEM copy. ext_hi <= nb always.
+    @pl.when((i >= ext_lo) & (i < ext_hi))
     def _pool_block():
         kb = k_ref[0, :, 0].astype(jnp.float32)   # (BT, hd)
         vb = v_ref[0, :, 0].astype(jnp.float32)
@@ -145,19 +158,35 @@ def _chunk_kernel(*refs, bt: int, chunk: int, n_rep: int, hd: int,
                                 ).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("near_window", "interpret"))
 def chunked_prefill_attention_pallas(q, pool_k, pool_v, cur_k, cur_v,
                                      block_table, window_base, start_pos,
                                      n_valid, *, near_window,
                                      k_scale=None, v_scale=None,
-                                     interpret=True):
+                                     skip_extent=True, interpret=None):
     """One slot's C-token prompt chunk over the paged near window.
 
     q: (C,H,hd); pool_k/v: (P,BT,KV,hd); cur_k/v: (C,KV,hd);
     block_table: (NB,). k_scale/v_scale: optional (P,KV) f32 per-block
     dequant scales for narrow pools (scalar-prefetch/SMEM; DESIGN.md §10).
+    skip_extent=False pins the extent to [0, NB) — the always-run masked
+    baseline. interpret=None resolves from the backend (kernels/runtime.py).
     Returns (C,H,hd) with rows >= n_valid zeroed.
     Validated against kernels/ref.py chunked_prefill_attention_ref."""
+    return _chunked_prefill_attention_impl(
+        q, pool_k, pool_v, cur_k, cur_v, block_table, window_base, start_pos,
+        n_valid, near_window=near_window, k_scale=k_scale, v_scale=v_scale,
+        skip_extent=bool(skip_extent), interpret=resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("near_window", "skip_extent",
+                                             "interpret"))
+def _chunked_prefill_attention_impl(q, pool_k, pool_v, cur_k, cur_v,
+                                    block_table, window_base, start_pos,
+                                    n_valid, *, near_window,
+                                    k_scale=None, v_scale=None,
+                                    skip_extent=True, interpret=True):
+    from repro.kernels.ref import chunk_block_extent
+
     C, H, hd = q.shape
     P, BT, KV, _ = pool_k.shape
     NB = block_table.shape[0]
@@ -165,7 +194,16 @@ def chunked_prefill_attention_pallas(q, pool_k, pool_v, cur_k, cur_v,
     scale = 1.0 / math.sqrt(hd)
     quant = k_scale is not None
 
-    meta = jnp.stack([window_base, start_pos, n_valid]).astype(jnp.int32)
+    ext_lo, ext_hi = chunk_block_extent(
+        jnp.asarray(window_base), jnp.asarray(start_pos),
+        near_window=near_window, nb=NB, bt=BT)
+    if not skip_extent:
+        ext_lo = jnp.zeros_like(ext_lo)
+        ext_hi = jnp.full_like(ext_hi, NB)
+    meta = jnp.stack([jnp.asarray(window_base, jnp.int32),
+                      jnp.asarray(start_pos, jnp.int32),
+                      jnp.asarray(n_valid, jnp.int32),
+                      ext_lo, ext_hi]).astype(jnp.int32)          # (5,)
     qg = q.reshape(C, KV, n_rep, hd)
 
     grid = (KV, NB + 1)
@@ -175,24 +213,27 @@ def chunked_prefill_attention_pallas(q, pool_k, pool_v, cur_k, cur_v,
 
     def _ix(f):
         # index maps take one trailing arg per scalar-prefetch operand
-        return (lambda g, i, tbl, meta, ks, vs: f(g, i, tbl)) if quant \
-            else (lambda g, i, tbl, meta: f(g, i, tbl))
+        return (lambda g, i, tbl, meta, ks, vs: f(g, i, tbl, meta)) if quant \
+            else (lambda g, i, tbl, meta: f(g, i, tbl, meta))
+
+    def _blk_ix(g, i, tbl, meta):
+        # clamp out-of-extent steps (incl. the final chunk step) onto the
+        # extent boundary so the revisited index elides the block copy
+        j = jnp.clip(i, meta[3], jnp.maximum(meta[4] - 1, meta[3]))
+        return (tbl[jnp.minimum(j, tbl.shape[0] - 1)], 0, g, 0)
     gs = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=4 if quant else 2,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((C, 1, n_rep, hd), _ix(lambda g, i, tbl: (0, g, 0, 0))),
-            pl.BlockSpec((1, BT, 1, hd),
-                         _ix(lambda g, i, tbl:
-                             (tbl[jnp.minimum(i, tbl.shape[0] - 1)], 0, g, 0))),
-            pl.BlockSpec((1, BT, 1, hd),
-                         _ix(lambda g, i, tbl:
-                             (tbl[jnp.minimum(i, tbl.shape[0] - 1)], 0, g, 0))),
-            pl.BlockSpec((C, 1, hd), _ix(lambda g, i, tbl: (0, g, 0))),
-            pl.BlockSpec((C, 1, hd), _ix(lambda g, i, tbl: (0, g, 0))),
+            pl.BlockSpec((C, 1, n_rep, hd),
+                         _ix(lambda g, i, tbl, meta: (0, g, 0, 0))),
+            pl.BlockSpec((1, BT, 1, hd), _ix(_blk_ix)),
+            pl.BlockSpec((1, BT, 1, hd), _ix(_blk_ix)),
+            pl.BlockSpec((C, 1, hd), _ix(lambda g, i, tbl, meta: (0, g, 0))),
+            pl.BlockSpec((C, 1, hd), _ix(lambda g, i, tbl, meta: (0, g, 0))),
         ],
         out_specs=pl.BlockSpec((C, 1, n_rep, hd),
-                               _ix(lambda g, i, tbl: (0, g, 0, 0))),
+                               _ix(lambda g, i, tbl, meta: (0, g, 0, 0))),
         scratch_shapes=[
             pltpu.VMEM((C, n_rep, hd), jnp.float32),
             pltpu.VMEM((C, n_rep), jnp.float32),
@@ -210,12 +251,20 @@ def chunked_prefill_attention_pallas(q, pool_k, pool_v, cur_k, cur_v,
     return out.reshape(C, H, hd)
 
 
+def prefill_attention_pallas(q, k, v, *, causal=True, window=None,
+                             q_blk=128, k_blk=128, interpret=None):
+    """q: (B,S,H,hd); k,v: (B,S,KV,hd) -> (B,S,H,hd). GQA via kv replication
+    at the BlockSpec level (no materialized repeat). interpret=None resolves
+    from the backend (kernels/runtime.py)."""
+    return _prefill_attention_impl(q, k, v, causal=causal, window=window,
+                                   q_blk=q_blk, k_blk=k_blk,
+                                   interpret=resolve_interpret(interpret))
+
+
 @functools.partial(jax.jit, static_argnames=("causal", "window", "q_blk",
                                              "k_blk", "interpret"))
-def prefill_attention_pallas(q, k, v, *, causal=True, window=None,
-                             q_blk=128, k_blk=128, interpret=True):
-    """q: (B,S,H,hd); k,v: (B,S,KV,hd) -> (B,S,H,hd). GQA via kv replication
-    at the BlockSpec level (no materialized repeat)."""
+def _prefill_attention_impl(q, k, v, *, causal=True, window=None,
+                            q_blk=128, k_blk=128, interpret=True):
     B, S, H, hd = q.shape
     KV = k.shape[2]
     n_rep = H // KV

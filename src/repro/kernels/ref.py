@@ -15,6 +15,58 @@ import jax.numpy as jnp
 
 
 # ---------------------------------------------------------------------------
+# active block extents (work-skipping decode, DESIGN.md §12)
+#
+# The decode grid is fixed at (B, NB) — one compile per engine config — but
+# for a slot at position t only the window blocks intersecting
+# (t - near_window, t] carry any unmasked position. These helpers derive the
+# per-slot half-open block extent [ext_lo, ext_hi) from the SAME descriptor
+# fields the kernels already receive (window_base/seq_lens/slot_active), so
+# the extent is a pure function of the committed descriptor — no layout
+# change. core/descriptor.py holds the numpy twin used for host-side audit
+# accounting; tests assert the two derivations agree.
+# ---------------------------------------------------------------------------
+
+def active_block_extent(window_base, seq_lens, slot_active, *,
+                        near_window: int, nb: int, bt: int):
+    """Per-slot half-open window-block extent [lo, hi) of unmasked work.
+
+    Decode semantics: slot b's valid pool positions are
+    ``pos in (t - near_window, t] ∩ [0, inf)`` with ``pos = wb + i*bt + j``.
+    Retired slots (``slot_active == 0``) get an empty extent. Under the
+    engine's window-base construction the extent is exact; when the current
+    token rides outside the pool (``cur_k`` given) ``hi`` may be one block
+    wide — never narrow, so skipping stays lossless. All inputs (B,) int;
+    returns (lo, hi) each (B,) int32, clipped to [0, nb].
+    """
+    lo_pos = jnp.maximum(0, seq_lens + 1 - near_window)
+    lo = (lo_pos - window_base) // bt
+    hi = (seq_lens - window_base) // bt + 1
+    act = slot_active > 0
+    lo = jnp.clip(jnp.where(act, lo, 0), 0, nb).astype(jnp.int32)
+    hi = jnp.clip(jnp.where(act, hi, 0), 0, nb).astype(jnp.int32)
+    return lo, jnp.maximum(hi, lo)
+
+
+def chunk_block_extent(window_base, start_pos, *, near_window: int,
+                       nb: int, bt: int):
+    """Prefill-chunk twin of :func:`active_block_extent`.
+
+    A pool block is touched by ANY chunk row iff it holds a position in
+    ``[max(0, start_pos - near_window + 1), start_pos - 1]`` (row 0 has the
+    widest back-window; all rows stop strictly before the chunk). Scalar or
+    (B,) ints; returns int32 (lo, hi) clipped to [0, nb].
+    """
+    has_ctx = start_pos > window_base
+    lo_pos = jnp.maximum(0, start_pos - near_window + 1)
+    lo = (lo_pos - window_base) // bt
+    hi = jnp.where(has_ctx, (start_pos - 1 - window_base) // bt + 1, 0)
+    lo = jnp.clip(jnp.where(has_ctx, lo, 0), 0, nb).astype(jnp.int32)
+    hi = jnp.clip(hi, 0, nb).astype(jnp.int32)
+    return lo, jnp.maximum(hi, lo)
+
+
+# ---------------------------------------------------------------------------
 # quantized KV-block tier (DESIGN.md §10)
 #
 # Pools may store K/V in a narrow dtype (int8 / float8_e4m3) with a sibling
@@ -234,6 +286,7 @@ def paged_decode_attention_ref(
     k_scale=None, v_scale=None,  # (P, KV) per-block per-head dequant scales
                                  # (quantized KV tier, DESIGN.md §10)
     sm_scale: Optional[float] = None,
+    skip_extent: bool = False,   # mirror the kernel's extent predication
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Returns (attn_out (B,H,hd), far_utility (B,CAP)).
 
@@ -276,6 +329,17 @@ def paged_decode_attention_ref(
     upper = (pos < t) if cur_k is not None else (pos <= t)
     valid = upper & (pos > t - near_window) & (pos >= 0)
     valid &= (slot_active > 0)[:, None]
+    if skip_extent:
+        # AND the kernel's active-extent mask into validity (DESIGN.md §12):
+        # a correct extent only removes already-masked positions (bitwise
+        # no-op here); a too-narrow extent diverges this oracle from the
+        # mask-only one, so the engine-level identity gates catch extent bugs
+        ext_lo, ext_hi = active_block_extent(
+            window_base, seq_lens, slot_active,
+            near_window=near_window, nb=NB, bt=BT)
+        bi = jnp.arange(NB, dtype=jnp.int32)
+        blk_ok = (bi[None, :] >= ext_lo[:, None]) & (bi[None, :] < ext_hi[:, None])
+        valid &= jnp.repeat(blk_ok, BT, axis=1)
 
     # IMPORTANT: never .astype() pool-derived tensors — XLA hoists the
     # convert above the gather and converts the ENTIRE pool every layer
@@ -354,6 +418,7 @@ def chunked_prefill_attention_ref(
     near_window: int,
     k_scale=None, v_scale=None,  # (P, KV) per-block dequant scales (§10)
     sm_scale: Optional[float] = None,
+    skip_extent: bool = False,   # mirror the kernel's extent predication
 ):
     """One slot's prompt chunk: query i (abs pos p_i = start_pos + i) attends
     to pool context [max(0, p_i+1-W), start_pos) plus the chunk itself
@@ -385,6 +450,13 @@ def chunked_prefill_attention_ref(
     valid_w = ((pos_w[None, :] < start_pos)                       # strictly pre-chunk
                & (pos_w[None, :] > qpos[:, None] - near_window)
                & (pos_w[None, :] >= 0))                           # (C, Wn)
+    if skip_extent:
+        # kernel's causal-upper-triangle block predication (DESIGN.md §12)
+        ext_lo, ext_hi = chunk_block_extent(
+            window_base, start_pos, near_window=near_window, nb=NB, bt=BT)
+        bi = jnp.arange(NB, dtype=jnp.int32)
+        blk_ok = (bi >= ext_lo) & (bi < ext_hi)
+        valid_w &= jnp.repeat(blk_ok, BT)[None, :]
 
     qg = q.reshape(C, KV, n_rep, hd)
     s_w = jnp.einsum("ckrd,wkd->ckrw", qg, win_k,

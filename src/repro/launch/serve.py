@@ -228,6 +228,12 @@ def build_arg_parser() -> argparse.ArgumentParser:
                          "§11): swap readbacks block at the pressure event "
                          "instead of deferring behind fences — the A/B "
                          "baseline for the overlap identity gate")
+    ap.add_argument("--no-kernel-skip", action="store_true",
+                    help="disable active-extent work skipping in the paged "
+                         "decode/prefill kernels (DESIGN.md §12): every "
+                         "grid step runs its block even when fully masked "
+                         "— the always-run A/B baseline for the skip "
+                         "identity gate (kernel_blocks_skipped audits 0)")
     ap.add_argument("--json", action="store_true")
     return ap
 
@@ -250,7 +256,8 @@ def main(argv=None):
                           prefix_cache=args.prefix_cache,
                           prefix_cache_blocks=args.prefix_cache_blocks,
                           kv_dtype=args.kv_dtype,
-                          async_movement=not args.no_async_movement)
+                          async_movement=not args.no_async_movement,
+                          kernel_skip_extent=not args.no_kernel_skip)
     tcfg = traces.TraceConfig(n_requests=args.requests,
                               vocab=engines[0].cfg.vocab_size,
                               token_scale=args.token_scale)

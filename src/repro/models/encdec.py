@@ -141,7 +141,8 @@ def decode_step(params, cfg: ModelConfig, tokens, pools, descr):
         q, k, v = q[:, 0], k[:, 0], v[:, 0]
         o, futil = ops.paged_decode_attention(
             q, pk, pv, descr.block_table, descr.window_base, descr.seq_lens,
-            descr.slot_active, near_window=sv.near_window, cur_k=k, cur_v=v)
+            descr.slot_active, near_window=sv.near_window, cur_k=k, cur_v=v,
+            skip_extent=sv.skip_extent)
         x = x + cm.dense(layer["self_attn"]["wo"], o.reshape(B, -1))
         # cross attention over immutable encoder KV
         h = cm.rmsnorm(layer["ln_x"], x, cfg.norm_eps)

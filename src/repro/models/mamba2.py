@@ -247,7 +247,8 @@ def decode_step(params, cfg: ModelConfig, tokens, pools, descr):
         q, k, v = q[:, 0], k[:, 0], v[:, 0]
         o, futil = ops.paged_decode_attention(
             q, pk, pv, descr.block_table, descr.window_base, descr.seq_lens,
-            descr.slot_active, near_window=sv.near_window, cur_k=k, cur_v=v)
+            descr.slot_active, near_window=sv.near_window, cur_k=k, cur_v=v,
+            skip_extent=sv.skip_extent)
         x = x + cm.dense(params["shared_attn"]["attn"]["wo"], o.reshape(B, -1))
         h = cm.rmsnorm(params["shared_attn"]["ln2"], x, cfg.norm_eps)
         x = x + cm.mlp_apply(params["shared_attn"]["mlp"], h, cfg.mlp_act)

@@ -260,7 +260,7 @@ def decode_step(params, cfg: ModelConfig, tokens, pools, descr, *,
             far_k=fk, far_v=fv,
             far_table=descr.far_table if farview else None,
             far_valid=descr.far_valid if farview else None,
-            cur_k=k, cur_v=v)
+            cur_k=k, cur_v=v, skip_extent=sv.skip_extent)
         o = cm.dense(layer["attn"]["wo"], o.reshape(B, -1))
         return o, ((k, v) + ((fk, fv) if farview else ())), fu + futil
 

@@ -102,7 +102,7 @@ def prefill_chunk(params, cfg: ModelConfig, pools, descr):
         lambda q, pk, pv, k, v, tbl, wb, sp, nv, ks, vs:
         ops.chunked_prefill_attention(
             q, pk, pv, k, v, tbl, wb, sp, nv, near_window=sv.near_window,
-            k_scale=ks, v_scale=vs),
+            k_scale=ks, v_scale=vs, skip_extent=sv.skip_extent),
         in_axes=(0, None, None, 0, 0, 0, 0, 0, 0, None, None))
 
     # Same read-only pool discipline as decode_step: each layer's chunk K/V
@@ -203,7 +203,8 @@ def decode_step(params, cfg: ModelConfig, tokens, pools, descr):
             far_k=fk, far_v=fv,
             far_table=descr.far_table if farview else None,
             far_valid=descr.far_valid if farview else None,
-            cur_k=k, cur_v=v, k_scale=psk, v_scale=psv)
+            cur_k=k, cur_v=v, k_scale=psk, v_scale=psv,
+            skip_extent=sv.skip_extent)
         x = x + cm.dense(layer["attn"]["wo"], o.reshape(B, -1))
         h = cm.rmsnorm(layer["ln2"], x, cfg.norm_eps)
         x = x + cm.mlp_apply(layer["mlp"], h, cfg.mlp_act)

@@ -85,6 +85,11 @@ class Roofline:
     model_flops: float
     attn_flops: float
     useful_bytes: float
+    # effective (work-skipped) useful work: what the step needs once the
+    # extent-predicated kernels (DESIGN.md §12) drop fully-masked KV blocks.
+    # Defaults to the padded figures when no effective_window was given.
+    effective_attn_flops: float = 0.0
+    effective_useful_bytes: float = 0.0
     # derived
     compute_s: float = 0.0
     memory_s: float = 0.0
@@ -94,6 +99,9 @@ class Roofline:
     bound_step_s: float = 0.0
     ideal_step_s: float = 0.0
     roofline_fraction: float = 0.0
+    effective_ideal_step_s: float = 0.0
+    effective_roofline_fraction: float = 0.0
+    work_skip_fraction: float = 0.0
 
     def finalize(self) -> "Roofline":
         self.compute_s = self.hlo_flops / PEAK_FLOPS
@@ -110,6 +118,22 @@ class Roofline:
                                 self.useful_bytes / (self.chips * HBM_BW))
         self.roofline_fraction = (self.ideal_step_s / self.bound_step_s
                                   if self.bound_step_s else 0.0)
+        # effective (work-skipped) terms. roofline_fraction above stays on
+        # the PADDED useful work so it remains comparable across PRs; the
+        # effective_* figures bound what extent predication can recover.
+        if not (self.effective_attn_flops or self.effective_useful_bytes):
+            self.effective_attn_flops = self.attn_flops
+            self.effective_useful_bytes = self.useful_bytes
+        eff_flops = self.model_flops + self.effective_attn_flops
+        self.effective_ideal_step_s = max(
+            eff_flops / (self.chips * PEAK_FLOPS),
+            self.effective_useful_bytes / (self.chips * HBM_BW))
+        self.effective_roofline_fraction = (
+            self.effective_ideal_step_s / self.bound_step_s
+            if self.bound_step_s else 0.0)
+        self.work_skip_fraction = (
+            1.0 - self.effective_attn_flops / self.attn_flops
+            if self.attn_flops else 0.0)
         return self
 
     def to_dict(self) -> dict:
@@ -174,13 +198,20 @@ def useful_bytes_for(cfg, shape_cfg, visible_window: Optional[int] = None) -> fl
 
 def summarize(cost: dict, hlo_text: str, cfg, shape_cfg, arch: str,
               shape_name: str, mesh_name: str, chips: int,
-              visible_window: Optional[int] = None) -> Roofline:
+              visible_window: Optional[int] = None,
+              effective_window: Optional[int] = None) -> Roofline:
     """Trip-count-aware accounting via roofline.hlo_cost (XLA cost_analysis
     counts while bodies once — see hlo_cost docstring). The raw XLA numbers
-    are kept in coll_detail['xla_raw'] for reference."""
+    are kept in coll_detail['xla_raw'] for reference.
+
+    effective_window: mean per-slot visible extent under a skewed length
+    distribution — the work the extent-predicated kernels (DESIGN.md §12)
+    actually perform, vs the padded visible_window the fixed grid lowers.
+    """
     from repro.roofline import hlo_cost
     walked = hlo_cost.analyze(hlo_text)
     counts = collective_bytes(hlo_text).pop("_counts")
+    eff = effective_window if effective_window is not None else visible_window
     return Roofline(
         arch=arch, shape=shape_name, mesh=mesh_name, chips=chips,
         hlo_flops=float(walked.flops),
@@ -193,4 +224,6 @@ def summarize(cost: dict, hlo_text: str, cfg, shape_cfg, arch: str,
         model_flops=model_flops_for(cfg, shape_cfg),
         attn_flops=attn_flops_for(cfg, shape_cfg, visible_window),
         useful_bytes=useful_bytes_for(cfg, shape_cfg, visible_window),
+        effective_attn_flops=attn_flops_for(cfg, shape_cfg, eff),
+        effective_useful_bytes=useful_bytes_for(cfg, shape_cfg, eff),
     ).finalize()

@@ -22,10 +22,16 @@ from typing import Dict, Optional
 
 DEFAULT_ARCH = "qwen2.5-32b"
 
-# (name, tokens-per-slot lowered, batch, kind, visible_window)
+# (name, tokens-per-slot lowered, batch, kind, visible_window,
+#  effective_window) — effective_window models the mean per-slot extent a
+# skewed batch leaves after the extent-predicated kernels (DESIGN.md §12)
+# drop fully-masked KV blocks; None means no skew (effective == padded).
 KERNELS = (
-    ("prefill_chunk", 128, 2, "prefill", None),
-    ("decode_step", 1, 8, "decode", 512),
+    ("prefill_chunk", 128, 2, "prefill", None, None),
+    ("decode_step", 1, 8, "decode", 512, None),
+    # bimodal skew (1 long : 7 short slots) — same compiled program as
+    # decode_step, accounted at the mean visible extent instead of padded
+    ("decode_step_skewed", 1, 8, "decode", 512, 160),
 )
 
 
@@ -57,7 +63,7 @@ def kernel_rows(arch: str = DEFAULT_ARCH) -> Dict[str, dict]:
     params = jax.eval_shape(lambda k: registry.init_params(k, cfg),
                             jax.random.PRNGKey(0))
     rows: Dict[str, dict] = {}
-    for name, toks, batch, kind, vis in KERNELS:
+    for name, toks, batch, kind, vis, eff in KERNELS:
         # seq_len feeds useful-work accounting (the decode kernel's KV
         # window), toks is what the kernel actually lowers per slot
         shape_cfg = ShapeConfig(name, max(toks, vis or 0), batch, kind)
@@ -69,7 +75,8 @@ def kernel_rows(arch: str = DEFAULT_ARCH) -> Dict[str, dict]:
         compile_s = time.perf_counter() - t0
         roof = analysis.summarize(
             _cost_dict(compiled), compiled.as_text(), cfg, shape_cfg,
-            arch, name, "single", 1, visible_window=vis)
+            arch, name, "single", 1, visible_window=vis,
+            effective_window=eff)
         d = roof.to_dict()
         rows[name] = {
             "kernel": name, "arch": arch, "kind": kind,
@@ -83,6 +90,9 @@ def kernel_rows(arch: str = DEFAULT_ARCH) -> Dict[str, dict]:
             "bound_step_s": d["bound_step_s"],
             "ideal_step_s": d["ideal_step_s"],
             "roofline_fraction": d["roofline_fraction"],
+            "effective_ideal_step_s": d["effective_ideal_step_s"],
+            "effective_roofline_fraction": d["effective_roofline_fraction"],
+            "work_skip_fraction": d["work_skip_fraction"],
             "peak_flops": analysis.PEAK_FLOPS,
             "peak_hbm_bw": analysis.HBM_BW,
         }

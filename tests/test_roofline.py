@@ -113,7 +113,7 @@ def test_bench_kernel_rows_smoke():
     achieved-vs-peak terms (repro.roofline.bench)."""
     from repro.roofline import bench
     rows = bench.kernel_rows()
-    assert set(rows) == {"prefill_chunk", "decode_step"}
+    assert set(rows) == {"prefill_chunk", "decode_step", "decode_step_skewed"}
     for r in rows.values():
         assert r["hlo_flops"] > 0 and r["hlo_bytes"] > 0
         assert r["bottleneck"] in ("compute", "memory", "collective")
@@ -122,6 +122,16 @@ def test_bench_kernel_rows_smoke():
         assert 0 < r["roofline_fraction"] <= 1.01
         assert r["compute_s"] == pytest.approx(
             r["hlo_flops"] / r["peak_flops"])
+        assert 0.0 <= r["work_skip_fraction"] < 1.0
+        assert r["effective_ideal_step_s"] <= r["ideal_step_s"] * (1 + 1e-9)
+    # the skewed decode row accounts the same program at the mean visible
+    # extent: identical padded terms, strictly smaller effective ideal
+    sk, de = rows["decode_step_skewed"], rows["decode_step"]
+    assert sk["bound_step_s"] == pytest.approx(de["bound_step_s"])
+    assert sk["ideal_step_s"] == pytest.approx(de["ideal_step_s"])
+    assert sk["work_skip_fraction"] > 0.0
+    assert de["work_skip_fraction"] == 0.0
+    assert sk["effective_ideal_step_s"] < de["ideal_step_s"]
     # the prefill kernel lowers 128x the tokens of the decode step
     assert rows["prefill_chunk"]["hlo_flops"] \
         > rows["decode_step"]["hlo_flops"]
