@@ -1,0 +1,164 @@
+"""Sampled decode + detected-EOS retirement (DESIGN.md §13).
+
+Three sections:
+
+* **identity** — the §13 depth-transparency contract as a hard CI gate:
+  the seeded stop-token trace decodes at pipeline depths 0, 1 and 2 and
+  every pair must emit bitwise-identical per-request token streams
+  (``token_divergence``), with identical detected-EOS counts and zero
+  leaked blocks after overshoot reconciliation (``alloc_failures`` counts
+  still-reserved device blocks + stranded host slots at drain). CI's
+  diff_json correctness tier hard-fails either field nonzero.
+* **varlen** — variable-length decode driven by on-device stop detection:
+  ``stop_token_workload`` traces where gen_len is only a budget cap and
+  the ACTUAL lengths are decided by the sampled stream. Reports tokens/s,
+  the stop-retired share, and the token budget saved by detected EOS —
+  the §13 payoff: slots recycle as soon as the stream stops instead of
+  burning the full cap.
+* **legacy** — greedy budget-EOS baseline on the same budgets, so the
+  varlen rows have an apples-to-apples tokens/s reference (same compiled
+  path minus the sampler).
+"""
+import numpy as np
+
+from benchmarks.common import engine, print_rows, record_audit, row, \
+    run_workload, smoke_scale
+from repro.data import traces
+
+SAMPLE_KW = dict(greedy=False, temperature=1.2, top_k=50, top_p=0.95,
+                 sample_seed=123)
+
+
+def _tokens(eng):
+    return {r.rid: list(map(int, r.generated)) for r in eng.sched.finished}
+
+
+def _diverged(a, b):
+    return sum(1 for rid in set(a) | set(b) if a.get(rid) != b.get(rid))
+
+
+def _leaks(eng):
+    return eng.pager.reserved_blocks() + eng.pager.host_used
+
+
+def _stop_trace(n, vocab, stops=(), seed=17):
+    tcfg = traces.TraceConfig(n_requests=n, vocab=vocab, token_scale=0.12,
+                              prompt_mean=24, seed=seed, stop_tokens=stops)
+    return traces.stop_token_workload(tcfg)
+
+
+def _harvest_stops(vocab, n=6):
+    """Stop ids the sampler actually emits: probe a short sampled run and
+    take interior tokens, so detected-EOS fires well before the caps."""
+    probe = engine("paged_merge", batch=4, max_seq=64, block_tokens=8,
+                   **SAMPLE_KW)
+    run_workload(probe, _stop_trace(8, vocab))
+    pool = sorted({t for r in probe.sched.finished
+                   for t in r.generated[1:-2]})
+    return tuple(pool[:n])
+
+
+# ---------------------------------------------------------------------------
+# section 1: depth-identity A/B — bitwise tokens, zero leaks (CI hard gate)
+# ---------------------------------------------------------------------------
+
+def _identity_rows(rows, vocab, stops):
+    n = max(8, int(12 * smoke_scale()))
+    runs = {}
+    for depth in (0, 1, 2):
+        # small blocks + no span growth: overshot emissions cross block
+        # boundaries, so the reconcile path returns actual blocks
+        eng = engine("paged_merge", batch=4, max_seq=64, block_tokens=4,
+                     span_blocks=1, pipeline_depth=depth, **SAMPLE_KW)
+        run_workload(eng, _stop_trace(n, vocab, stops))
+        runs[depth] = eng
+    base = _tokens(runs[0])
+    a0 = runs[0].audit()
+    assert a0["eos_detected"] > 0, "identity trace detected no stop"
+    for depth, eng in runs.items():
+        a = eng.audit()
+        lat = eng.latency_stats()
+        div = _diverged(base, _tokens(eng))
+        tag = f"sampling_eos/identity_depth{depth}"
+        rows.append(row(
+            tag, lat["mean_ms"] * 1e3,
+            tok_s=eng.throughput(),
+            token_divergence=div, alloc_failures=_leaks(eng),
+            eos_detected=a["eos_detected"],
+            eos_overshoot_tokens=a["eos_overshoot_tokens"],
+            eos_reconciled_blocks=a["eos_reconciled_blocks"],
+            finished=len(eng.sched.finished)))
+        record_audit(tag, a)
+        assert div == 0, f"{tag}: {div} requests diverged from depth 0"
+        assert a["eos_detected"] == a0["eos_detected"], tag
+        # every retirement (stop OR budget) overshoots at most `depth`
+        # dispatched-ahead tokens, all scrubbed by the reconcile path
+        assert a["eos_overshoot_tokens"] <= depth * len(eng.sched.finished)
+        if depth > 0:
+            assert a["eos_overshoot_tokens"] > 0, tag
+            assert a["eos_reconciled_blocks"] > 0, \
+                f"{tag}: no overshoot crossed a block boundary"
+        eng.pager.check_invariants()
+        assert _leaks(eng) == 0, f"{tag}: leaked blocks after reconcile"
+
+
+# ---------------------------------------------------------------------------
+# sections 2+3: variable-length decode vs greedy budget baseline
+# ---------------------------------------------------------------------------
+
+def _varlen_rows(rows, vocab, stops):
+    n = max(12, int(24 * smoke_scale()))
+    kw = dict(batch=8, max_seq=128, block_tokens=8, pipeline_depth=1)
+    reqs = _stop_trace(n, vocab, stops, seed=29)
+    budget = sum(r.gen_len for r in reqs)
+
+    eng = engine("paged_merge", **kw, **SAMPLE_KW)
+    run_workload(eng, _stop_trace(n, vocab, stops, seed=29))
+    a = eng.audit()
+    lat = eng.latency_stats()
+    fin = eng.sched.finished
+    stopped = [r for r in fin if r.finish_reason == "stop"]
+    emitted = sum(len(r.generated) for r in fin)
+    tag = "sampling_eos/varlen_stop"
+    rows.append(row(
+        tag, lat["mean_ms"] * 1e3,
+        tok_s=eng.throughput(), step_p99_ms=lat["p99_ms"],
+        finished=len(fin), stop_retired_share=len(stopped) / len(fin),
+        saved_token_share=1.0 - emitted / budget,
+        eos_detected=a["eos_detected"],
+        eos_overshoot_tokens=a["eos_overshoot_tokens"],
+        eos_reconciled_blocks=a["eos_reconciled_blocks"],
+        token_divergence=0, alloc_failures=_leaks(eng)))
+    record_audit(tag, a)
+    assert len(stopped) > 0, "varlen trace retired nothing on detected EOS"
+    assert _leaks(eng) == 0
+
+    # greedy budget-EOS baseline: same budgets, legacy dispatch retirement
+    base = engine("paged_merge", **kw)
+    legacy_reqs = _stop_trace(n, vocab, stops, seed=29)
+    for r in legacy_reqs:
+        r.stop_tokens = ()
+    run_workload(base, legacy_reqs)
+    blat = base.latency_stats()
+    btag = "sampling_eos/legacy_budget"
+    rows.append(row(
+        btag, blat["mean_ms"] * 1e3,
+        tok_s=base.throughput(), step_p99_ms=blat["p99_ms"],
+        finished=len(base.sched.finished),
+        token_divergence=0, alloc_failures=_leaks(base)))
+    record_audit(btag, base.audit())
+    assert base.audit()["eos_detected"] == 0
+    assert _leaks(base) == 0
+
+
+def run():
+    rows = []
+    vocab = 256
+    stops = _harvest_stops(vocab)
+    _identity_rows(rows, vocab, stops)
+    _varlen_rows(rows, vocab, stops)
+    return rows
+
+
+if __name__ == "__main__":
+    print_rows(run())

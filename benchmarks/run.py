@@ -50,6 +50,7 @@ MODULES = [
     ("boundary_stress", "benchmarks.bench_boundary_stress"),
     ("longcontext_budget", "benchmarks.bench_longcontext_budget"),
     ("decode_skew", "benchmarks.bench_decode_skew"),
+    ("sampling_eos", "benchmarks.bench_sampling_eos"),
     ("kernels", "benchmarks.bench_kernels"),
     ("scaling", "benchmarks.bench_scaling"),
 ]

@@ -28,6 +28,30 @@ class ServingConfig:
 
 
 @dataclass(frozen=True)
+class SamplingConfig:
+    """On-device sampling + data-dependent EOS (DESIGN.md §13).
+
+    Bundles the per-run sampling policy the launcher hands to the engine
+    (EngineConfig fields) and the per-request stop set it stamps on every
+    submitted Request. ``greedy()`` mirrors the engine's legacy switch: the
+    exact dispatch-retired budget-EOS path is kept bit-identical whenever no
+    sampling knob is touched. "Greedy with stop tokens" is expressed as
+    ``temperature=0`` with ``legacy=False`` — the argmax branch of the
+    sampler, retired at readback like any sampled run.
+    """
+    temperature: float = 1.0     # <= 0 selects the exact argmax branch
+    top_k: int = 0               # 0 disables the top-k filter
+    top_p: float = 1.0           # 1.0 disables the nucleus filter
+    seed: int = 0                # base PRNG key (threefry; folded per slot)
+    stop_tokens: Tuple[int, ...] = ()   # any generated id in this set ends
+                                        # the request ("stop" finish reason)
+    legacy: bool = True          # True = legacy greedy budget-EOS path
+
+    def greedy(self) -> bool:
+        return self.legacy
+
+
+@dataclass(frozen=True)
 class ModelConfig:
     # --- identity ---
     arch_id: str

@@ -122,6 +122,20 @@ def descriptor_flat_size(batch: int, n_blocks: int, cap: int, max_trains: int,
                               chunk_blocks)[1]
 
 
+# host->device control plane appended AFTER the flat descriptor words in the
+# engine's single per-step commit buffer (DESIGN.md §3/§13): three (B,) int32
+# rows — host prompt tokens, the feed_sampled mask selecting device-side
+# token feedback, and the per-slot request id the sampler folds into its
+# per-step PRNG keys (rng meta: key = fold_in(fold_in(seed, rid), seq_len)).
+# ONE device_put moves descriptor + control rows together.
+N_CONTROL_ROWS = 3
+
+
+def control_plane_size(batch: int) -> int:
+    """Flat int32 words the engine appends after the descriptor."""
+    return N_CONTROL_ROWS * batch
+
+
 def flat_descriptor_views(flat: np.ndarray, batch: int, n_blocks: int,
                           cap: int, max_trains: int,
                           chunk_blocks: int = 1) -> "FrameDescriptor":

@@ -15,10 +15,18 @@ Hot-path structure (DESIGN.md §3):
   * ``pipeline_depth >= 1`` (default) overlaps host descriptor assembly for
     step t+1 with device execution of step t. Sampled-token feedback flows
     device-side (the compiled step selects between host prompt tokens and the
-    previous step's on-device argmax), so host readback lags dispatch by one
-    step. EOS in this repro is a fixed token budget, hence retirement is
-    host-predictable and happens at dispatch time — the pager/transport
-    timeline is bit-identical to the synchronous path.
+    previous step's on-device sample), so host readback lags dispatch by one
+    step. In legacy greedy mode (``greedy=True``) EOS is the gen_len token
+    budget, retirement is host-predictable and happens at dispatch time, and
+    the pager/transport timeline is bit-identical to the synchronous path.
+  * ``greedy = False`` (DESIGN.md §13) turns on real on-device sampling
+    (temperature/top-k/top-p, per-slot threefry keys derived from the
+    control plane's rid row + descriptor seq_lens) and data-dependent EOS:
+    per-request stop tokens end a request wherever they land. Retirement is
+    then DETECTED at readback — under pipelining the host learns of a stop
+    ``depth`` dispatches late, scrubs the overshot in-flight emissions, and
+    reconciles pager/transport/kernel accounting exactly, so the depth-0
+    and depth-d timelines still agree byte-for-byte.
   * ``pipeline_depth = 0`` preserves the exact seed behavior (per-slot
     descriptor assembly, blocking readback each step) for A/B measurement.
   * ``prefill_chunk = C > 0`` ingests prompts through a second fixed-shape
@@ -53,7 +61,8 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.descriptor import (FrameDescriptor, active_block_extents,
-                                   chunk_flat_size, descriptor_flat_size,
+                                   chunk_flat_size, control_plane_size,
+                                   descriptor_flat_size,
                                    empty_descriptor, flat_chunk_views,
                                    flat_descriptor_views,
                                    unflatten_chunk_descriptor,
@@ -61,6 +70,7 @@ from repro.core.descriptor import (FrameDescriptor, active_block_extents,
 from repro.core.farview import FarViewPolicy
 from repro.core.pager import (RES_DEVICE, RES_HOST, BlockPager, SwapRefused)
 from repro.core.prefix_cache import PrefixCache
+from repro.core.sampling import make_sampler, slot_keys
 from repro.core.scheduler import Request, Scheduler
 from repro.core.transport import MergeStagedTransport, StagedDescriptor, merge_runs
 from repro.models import registry
@@ -79,7 +89,15 @@ class EngineConfig:
     farview_cap: int = 16
     sv_chunk: int = 64
     span_blocks: int = 4             # placement span (BLOCKALIGN granularity)
-    greedy: bool = True
+    greedy: bool = True              # True = legacy bit-exact argmax decode
+    #                                  with pure budget-EOS; False = on-device
+    #                                  sampling + detected EOS (DESIGN.md §13)
+    # --- sampling knobs (greedy=False only; static at trace time) ---
+    temperature: float = 1.0         # <= 0 is an exact argmax branch
+    top_k: int = 0                   # 0 = off (full vocab)
+    top_p: float = 1.0               # 1.0 = off (no nucleus cut)
+    sample_seed: int = 0             # base PRNG seed; per-slot keys are
+    #                                  fold_in(fold_in(seed, rid), position)
     debug_logits: bool = False       # capture per-step logits (tests only)
     # --- host/device overlap + chunked prefill (DESIGN.md §3) ---
     pipeline_depth: int = 1          # 0 = seed-exact synchronous loop (A/B)
@@ -309,16 +327,40 @@ class KVRMEngine:
 
         dbg = ecfg.debug_logits
 
+        # --- on-device sampling (DESIGN.md §13) -------------------------
+        # greedy=True keeps the exact legacy argmax executor; greedy=False
+        # builds a static sampler closure (temperature/top-k/top-p baked at
+        # trace time) whose per-slot keys derive from the control plane's
+        # rid row and the committed seq_lens — tokens depend only on
+        # (sample_seed, rid, position), invariant to slot placement, batch
+        # composition, pipeline depth, preemption and mesh layout.
+        self._sampled = not ecfg.greedy
+        self.eos_detected = 0
+        self.eos_overshoot_tokens = 0
+        self.eos_reconciled_blocks = 0
+        if self._sampled:
+            if ecfg.temperature > 0 and not 0.0 < ecfg.top_p <= 1.0:
+                raise ValueError(f"top_p must be in (0, 1]: {ecfg.top_p}")
+            if ecfg.top_k < 0:
+                raise ValueError(f"top_k must be >= 0: {ecfg.top_k}")
+            sampler = make_sampler(ecfg.temperature, ecfg.top_k, ecfg.top_p)
+            base_key = jax.random.PRNGKey(ecfg.sample_seed)
+
         # Token selection happens ON DEVICE so the pipelined loop can feed the
         # previous step's sampled tokens without a host readback: host prompt
-        # tokens where feed_sampled=0, previous on-device argmax where 1. The
+        # tokens where feed_sampled=0, previous on-device sample where 1. The
         # synchronous path passes feed_sampled=0 everywhere — same semantics,
         # identical numerics for both paths.
-        def _step_core(params, host_tokens, feed_sampled, prev_nxt, pools, descr):
+        def _step_core(params, host_tokens, feed_sampled, rids, prev_nxt,
+                       pools, descr):
             tokens = jnp.where(feed_sampled > 0, prev_nxt, host_tokens)
             logits, pools, fu = registry.decode_step(params, cfg_dec, tokens,
                                                      pools, descr)
-            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            if self._sampled:
+                keys = slot_keys(base_key, rids, descr.seq_lens)
+                nxt = sampler(keys, logits)
+            else:
+                nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
             return nxt, pools, fu, (logits if dbg else jnp.zeros((), jnp.int32))
 
         self.depth = max(0, int(ecfg.pipeline_depth))
@@ -333,19 +375,21 @@ class KVRMEngine:
         if self.depth <= 0:
             # seed-exact executor: per-array descriptor operands
             kw = ({} if self.mesh is None else dict(
-                in_shardings=(self._param_sh, R, R, R, PS, R),
+                in_shardings=(self._param_sh, R, R, R, R, PS, R),
                 out_shardings=(R, PS, R, R)))
-            self._step_fn = jax.jit(_step_core, donate_argnums=(4,), **kw)
+            self._step_fn = jax.jit(_step_core, donate_argnums=(5,), **kw)
         else:
             # pipelined executor: the whole control plane (descriptor + host
-            # tokens + feed mask) arrives as ONE flat int32 operand — one
-            # device_put per step instead of ~18 (the dominant host cost)
+            # tokens + feed mask + rid row) arrives as ONE flat int32
+            # operand — one device_put per step instead of ~18 (the
+            # dominant host cost)
             def _step_flat(params, flat, prev_nxt, pools):
                 descr = unflatten_descriptor(flat[:D], B, NB, CAP, MT, CB)
                 host_tokens = flat[D:D + B]
                 feed_sampled = flat[D + B:D + 2 * B]
-                return _step_core(params, host_tokens, feed_sampled, prev_nxt,
-                                  pools, descr)
+                rids = flat[D + 2 * B:D + 3 * B]
+                return _step_core(params, host_tokens, feed_sampled, rids,
+                                  prev_nxt, pools, descr)
             kw = ({} if self.mesh is None else dict(
                 in_shardings=(self._param_sh, R, R, PS),
                 out_shardings=(R, PS, R, R)))
@@ -407,10 +451,11 @@ class KVRMEngine:
         # --- persistent flat descriptor buffer + window-block cache -------
         # (vectorized assembly: numpy views into one flat buffer, rebuilt
         # incrementally, never reallocated)
-        self._flat = np.zeros(D + 2 * ecfg.batch, np.int32)
+        self._flat = np.zeros(D + control_plane_size(ecfg.batch), np.int32)
         self._pdescr = flat_descriptor_views(self._flat[:D], B, NB, CAP, MT, CB)
         self._tokens_buf = self._flat[D:D + B]
         self._feed_buf = self._flat[D + B:D + 2 * B]
+        self._rid_buf = self._flat[D + 2 * B:D + 3 * B]
         self._win_base_cache = np.full(ecfg.batch, -1, np.int64)
         self._win_dirty = np.ones(ecfg.batch, bool)
         self._win_groups = np.zeros(ecfg.batch, np.int64)
@@ -491,6 +536,12 @@ class KVRMEngine:
 
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
+        if getattr(req, "stop_tokens", ()) and not self._sampled:
+            raise ValueError(
+                "per-request stop_tokens require sampled decode "
+                "(greedy=False); legacy greedy mode is budget-EOS only. "
+                "For argmax decode WITH stop tokens use greedy=False, "
+                "temperature=0.")
         self.sched.submit(req)
 
     # ------------------------------------------------------------------
@@ -501,6 +552,7 @@ class KVRMEngine:
             self._win_dirty[slot] = True
             self._win_base_cache[slot] = -1
             self._feed_ok[slot] = False
+            self._rid_buf[slot] = req.rid    # sampler rng meta (§13)
             self._step_touched.add(slot)
             if req.swap_sid >= 0 and req.swap_sid == sid:
                 # resume from the host tier (DESIGN.md §8): swap the window
@@ -762,6 +814,8 @@ class KVRMEngine:
         """EOS retirement: return the slot + its blocks, clear caches."""
         req = self.sched.requests[self.sched.slots[slot].rid]
         req.finish_wall = self.cum_wall
+        if not req.finish_reason:
+            req.finish_reason = "budget"     # legacy dispatch-time budget EOS
         if self._host_tier:
             # release exactly what the admission gate charged (§9: the
             # charge was reduced by the aliased prefix at admission time)
@@ -774,6 +828,7 @@ class KVRMEngine:
             self._slot_sid[slot] = -1
         self._slot_len[slot] = 0
         self._feed_ok[slot] = False
+        self._rid_buf[slot] = 0
         d = self._pdescr
         d.block_table[slot, :] = 0
         d.train_len[slot, :] = 0
@@ -898,8 +953,11 @@ class KVRMEngine:
         return wb // self.bt - s.trimmed_prefix_blocks
 
     def _footprint_blocks(self, req) -> int:
-        """Worst-case device blocks a request can reach (EOS is a fixed
-        token budget, so this is exact up to span-placement slack)."""
+        """Worst-case device blocks a request can reach. ``gen_len`` is a
+        CAP, not a schedule: with sampled decode (§13) a detected stop
+        token can retire the request much earlier, so this is an upper
+        bound (exact up to span-placement slack only in legacy greedy mode,
+        where budget-EOS makes the length deterministic)."""
         tokens = len(req.prompt) + req.gen_len + 1
         return -(-tokens // self.bt) + self.e.span_blocks
 
@@ -1024,6 +1082,11 @@ class KVRMEngine:
         swap the whole session out, and re-queue the request for resume."""
         self.flush()
         req = self.sched.request_at(slot)
+        if req is None:
+            # sampled mode (§13): the flush's drained readbacks can detect
+            # this victim's stop token and retire it — its blocks are
+            # already free, which is exactly what the caller wanted
+            return
         sid = int(self._slot_sid[slot])
         deferred = bool(self.e.async_movement)
         pairs = self.pager.swap_out_session(sid, deferred=deferred)
@@ -1049,6 +1112,7 @@ class KVRMEngine:
         self._slot_sid[slot] = -1
         self._slot_len[slot] = 0
         self._feed_ok[slot] = False
+        self._rid_buf[slot] = 0
         d = self._pdescr
         d.block_table[slot, :] = 0
         d.train_len[slot, :] = 0
@@ -1197,16 +1261,23 @@ class KVRMEngine:
     def _account_kernel_blocks(self, window_base, seq_lens, slot_active):
         """Integrate the decode kernel's padded-vs-active block counts over
         this step's participating slots (descriptor-side host math — the
-        same derivation the kernel receives as scalar-prefetch meta)."""
+        same derivation the kernel receives as scalar-prefetch meta).
+        Returns the per-slot skipped counts (aligned with the input rows)
+        when skip predication is on, else None — the pipelined sampled
+        path records them per dispatch so a lagged-EOS scrub (§13) can
+        reverse this step's share exactly."""
         n = len(window_base)
         if n == 0:
-            return
+            return None
         self._kernel_blocks_total += self.NB * n
         if self.e.kernel_skip_extent:
             lo, hi = active_block_extents(
                 window_base, seq_lens, slot_active,
                 near_window=self.W, nb=self.NB, bt=self.bt)
-            self._kernel_blocks_skipped += int((self.NB - (hi - lo)).sum())
+            skipped = self.NB - (hi - lo)
+            self._kernel_blocks_skipped += int(skipped.sum())
+            return skipped
+        return None
 
     # ------------------------------------------------------------------
     def _step_sync(self, now: float) -> StepMetrics:
@@ -1302,7 +1373,7 @@ class KVRMEngine:
         self.transport.note_dispatch_overlap()
         nxt, self.pools, fu, lg = self._step_fn(
             self.params, jnp.asarray(tokens), self._zero_feed,
-            self._prev_nxt, self.pools, jdescr)
+            jnp.asarray(self._rid_buf), self._prev_nxt, self.pools, jdescr)
         self._prev_nxt = nxt
         nxt = np.asarray(jax.block_until_ready(nxt))
         if self.e.debug_logits:
@@ -1322,8 +1393,11 @@ class KVRMEngine:
                 if not hasattr(req, "logit_trace"):
                     req.logit_trace = []
                 req.logit_trace.append(np.asarray(lg[slot], np.float32))
+            req_s = self.sched.request_at(slot)
             if self.sched.record_output(slot, int(nxt[slot])):
                 m.emitted += 1
+                if req_s is not None and req_s.eos_hit:
+                    self.eos_detected += 1
                 self._retire_slot(slot)
             else:
                 m.emitted += 1
@@ -1372,6 +1446,9 @@ class KVRMEngine:
 
         parts: List[int] = []
         emits: List[tuple] = []          # (slot, req) emitting this step
+        resv: Dict[int, list] = {}       # slot -> blocks THIS step reserved
+        kskip = None                     # per-slot kernel blocks predicated
+        far_flags = None
         for slot in active:
             req = self.sched.request_at(slot)
             if req is None:
@@ -1403,8 +1480,11 @@ class KVRMEngine:
                 d.write_offset[slot] = off
             else:
                 sid = int(self._slot_sid[slot])
-                if self._reserve(slot, sid, 2):   # this token + lookahead
+                newb = self._reserve(slot, sid, 2)  # this token + lookahead
+                if newb:
                     self._win_dirty[slot] = True  # new tail block in window
+                    if self._sampled:
+                        resv[slot] = newb         # §13 overshoot reconcile
                 blk, off = self.pager.append_token(sid)
                 d.write_block[slot] = blk
                 d.write_offset[slot] = off
@@ -1446,8 +1526,28 @@ class KVRMEngine:
             self.transport.account_batch(self._win_nblocks[pa],
                                          self._win_groups[pa], far_flags)
             m.dma_groups = int(self._win_groups[pa].sum() + far_flags.sum())
-            self._account_kernel_blocks(d.window_base[pa], d.seq_lens[pa],
-                                        d.slot_active[pa])
+            kskip = self._account_kernel_blocks(d.window_base[pa],
+                                                d.seq_lens[pa],
+                                                d.slot_active[pa])
+
+        # sampled decode (§13): snapshot each emitting slot's share of THIS
+        # step's pager/transport/kernel accounting so a lagged detected-EOS
+        # readback can reverse the overshoot dispatches exactly
+        eos_meta = None
+        if self._sampled and emits:
+            idx = {slot: i for i, slot in enumerate(parts)}
+            eos_meta = {}
+            for slot, _req in emits:
+                i = idx[slot]
+                eos_meta[slot] = {
+                    "sid": (int(self._slot_sid[slot])
+                            if self.e.mode != "arena" else -1),
+                    "newb": resv.get(slot, []),
+                    "nblocks": int(self._win_nblocks[slot]),
+                    "groups": int(self._win_groups[slot]),
+                    "far": int(far_flags[i]) if far_flags is not None else 0,
+                    "kskip": int(kskip[i]) if kskip is not None else 0,
+                }
 
         # ---- Frame: single atomic commit
         tf0 = time.perf_counter()
@@ -1469,20 +1569,24 @@ class KVRMEngine:
             self.params, jflat, self._prev_nxt, self.pools)
         self._prev_nxt = nxt
 
-        # ---- structural bookkeeping at DISPATCH time: EOS here is a fixed
-        # token budget, so retirement is host-predictable; pager/transport
-        # timelines stay bit-identical to the synchronous path. Token VALUES
-        # land at readback, one step later.
+        # ---- structural bookkeeping at DISPATCH time. Legacy greedy: EOS
+        # is the fixed gen_len budget, so retirement is host-predictable
+        # here and pager/transport timelines stay bit-identical to the
+        # synchronous path. Sampled (§13): EOS is data-dependent, so NOTHING
+        # retires at dispatch — stop AND budget retirement both happen at
+        # readback, where overshot dispatches are scrubbed via ``eos_meta``.
+        # Token VALUES land at readback either way, ``depth`` steps later.
         m.emitted = len(emits)
         for slot in parts:
             self._slot_len[slot] += 1
         for slot, req in emits:
             self._feed_ok[slot] = True
-            if self.sched.note_emit(slot):
+            if self.sched.note_emit(slot) and not self._sampled:
                 self._retire_slot(slot)
 
         self._inflight.append({
             "nxt": nxt, "lg": lg, "fu": fu, "emits": emits,
+            "m": m, "eos": eos_meta,
             "far_table": d.far_table.copy() if self.fv is not None else None,
         })
         while len(self._inflight) > self.depth:
@@ -1513,7 +1617,8 @@ class KVRMEngine:
             # never flattered by the one-step pipeline lag
             if len(req.generated) == 1:
                 req.ttft_wall = self.cum_wall
-            if req.emitted >= req.gen_len and len(req.generated) >= req.gen_len:
+            if not self._sampled and req.emitted >= req.gen_len \
+                    and len(req.generated) >= req.gen_len:
                 req.finish_wall = self.cum_wall
             if lg is not None:
                 if not hasattr(req, "logit_trace"):
@@ -1521,8 +1626,56 @@ class KVRMEngine:
                 req.logit_trace.append(lg[slot])
             if self.sched.slots[slot].rid == req.rid:
                 self._last_token[slot] = tok
+            if not self._sampled:
+                continue
+            # sampled decode (§13): ALL retirement is readback-side. The
+            # host learns of a stop ``depth`` steps late — scrub the
+            # overshoot dispatches still in flight, then retire.
+            stop = bool(req.stop_tokens) and tok in req.stop_tokens
+            if not stop and len(req.generated) < req.gen_len:
+                continue
+            req.eos_hit = stop
+            req.finish_reason = "stop" if stop else "budget"
+            if stop:
+                self.eos_detected += 1
+            assert self.sched.slots[slot].rid == req.rid, \
+                "sampled mode never retires at dispatch"
+            self._scrub_overshoot(slot, req)
+            self._retire_slot(slot)
         if self.fv is not None:
             self.fv.observe_utility(np.asarray(rec["fu"]), rec["far_table"])
+
+    def _scrub_overshoot(self, slot: int, req) -> None:
+        """Reverse every in-flight dispatch issued for ``req`` AFTER its
+        finishing token (DESIGN.md §13). Each scrubbed emit undoes exactly
+        what its dispatch accounted: the scheduler's structural emission,
+        the pager's append (and any tail block that step's reserve
+        committed), the transport's per-slot window traffic, and the
+        kernel-block integrals. Newest-first so tail-block pops at
+        depth > 1 unwind in LIFO order. Freeing a tail block that an
+        in-flight device step still references is safe: donated-pool
+        chaining serializes device steps, and a decode tail block is never
+        shared or cold-swapped (refcount 1) — asserted by the pager.
+        Known limit: pressure-relief side effects (cold-swap, preemption)
+        triggered BY an overshoot step's reserve are not reversed."""
+        for rec in reversed(self._inflight):
+            hit = next((p for p in rec["emits"] if p[1] is req), None)
+            if hit is None:
+                continue
+            rec["emits"].remove(hit)
+            meta = rec["eos"][slot]
+            req.emitted -= 1
+            self._slot_len[slot] -= 1
+            self.eos_overshoot_tokens += 1
+            rec["m"].emitted -= 1
+            rec["m"].dma_groups -= meta["groups"] + meta["far"]
+            if self.pager is not None:
+                self.pager.reconcile_overshoot(meta["sid"], meta["newb"])
+                self.eos_reconciled_blocks += len(meta["newb"])
+            self.transport.unaccount_slot(meta["nblocks"], meta["groups"],
+                                          meta["far"])
+            self._kernel_blocks_total -= self.NB
+            self._kernel_blocks_skipped -= meta["kskip"]
 
     def flush(self) -> None:
         """Drain the dispatch pipeline (blocks on outstanding device steps).
@@ -1613,6 +1766,13 @@ class KVRMEngine:
             "kernel_skip_extent": bool(self.e.kernel_skip_extent),
             "kernel_blocks_total": self._kernel_blocks_total,
             "kernel_blocks_skipped": self._kernel_blocks_skipped,
+            # --- sampled decode + detected-EOS retirement (DESIGN.md §13).
+            # All three counters are zero in legacy greedy mode — the A/B
+            # identity gates check exactly that.
+            "greedy": bool(self.e.greedy),
+            "eos_detected": self.eos_detected,
+            "eos_overshoot_tokens": self.eos_overshoot_tokens,
+            "eos_reconciled_blocks": self.eos_reconciled_blocks,
             "async_movement": bool(self.e.async_movement),
             "overlap_steps": self.transport.stats.overlap_steps,
             "deferred_readbacks": self.transport.stats.deferred_readbacks,

@@ -76,6 +76,11 @@ class Session:
     cow_pending: Optional[Tuple[int, int]] = None     # (src, dst) tail copy
     trimmed_prefix_blocks: int = 0                    # far-view: summarized+trimmed
     swap_state: str = RES_DEVICE                      # DESIGN.md §8 state machine
+    # provenance stack of recent reserves' takes — (newb, [(start, want,
+    # length, class_idx)]) — so a lagged-EOS reconcile (§13) can undo each
+    # overshoot allocation POSITIONALLY (newest first) and leave the free
+    # structure byte-identical to the timeline that never reserved
+    reserve_provenance: List[Tuple] = field(default_factory=list)
 
     def device_blocks(self) -> List[int]:
         return [b for b in self.blocks if b > 0]
@@ -123,6 +128,7 @@ class BlockPager:
         self._run_len: Dict[int, int] = {}
         self._run_of: Dict[int, int] = {}
         self._free_by_class: Dict[int, List[int]] = {c: [] for c in self.size_classes}
+        self._take_log: Optional[List[Tuple]] = None  # reserve provenance
         self._insert_run(1, num_blocks - 1)           # block 0 = scratch
         self.refcount = np.zeros(num_blocks, np.int32)
         self.sessions: Dict[int, Session] = {}
@@ -183,12 +189,19 @@ class BlockPager:
     def _take_run(self, start: int, want: int) -> List[int]:
         """Take `want` blocks from the head of run `start`."""
         length = self._run_len.pop(start)
-        self._remove_from_class(start, length)
+        cls = self._class_of(length)
+        try:
+            idx = self._free_by_class[cls].index(start)
+            self._free_by_class[cls].pop(idx)
+        except ValueError:
+            idx = None
         for b in range(start, start + length):
             self._run_of.pop(b, None)
         taken = list(range(start, start + want))
         if length > want:
             self._insert_run(start + want, length - want)
+        if self._take_log is not None:
+            self._take_log.append((start, want, length, idx))
         return taken
 
     def _alloc_blocks(self, n: int, hint: Optional[int] = None) -> List[int]:
@@ -284,11 +297,100 @@ class BlockPager:
         want = max(nb, self.span_blocks)
         if want > nb and self.free_blocks() < want + self.span_blocks:
             want = nb
-        newb = self._alloc_blocks(want, hint=hint)
+        self._take_log = []
+        try:
+            newb = self._alloc_blocks(want, hint=hint)
+            s.reserve_provenance.append((tuple(newb), self._take_log))
+            del s.reserve_provenance[:-4]    # bounded: > max pipeline depth
+        finally:
+            self._take_log = None
         s.blocks += newb
         self._edit_log.append(("reserve", sid, tuple(newb)))
         self.stats["reserve_ops"] += 1
         return newb
+
+    def reconcile_overshoot(self, sid: int, newb: List[int],
+                            n_tokens: int = 1) -> None:
+        """Reverse ONE dispatched-but-scrubbed emission (lagged-EOS
+        reconcile, DESIGN.md §13): under pipelining the host learns of a
+        detected stop token ``depth`` dispatches late, and the overshot
+        steps already ran ``reserve`` + ``append_token`` for tokens that
+        will never be read. Roll the session back exactly: undo the length
+        accounting and return the blocks that overshoot's reserve took
+        (``newb``, possibly [] when capacity already existed — reserve's
+        early return increments nothing, so neither does this). Stats are
+        reversed rather than double-counted so a depth-d run's pager audit
+        is byte-identical to the depth-0 run of the same trace. Tail decode
+        blocks are never shared (COW aliases cover prompt prefixes only)
+        and never cold-swapped (the append tail stays device-resident), so
+        popping them is safe even though a frame already committed them —
+        the committed descriptor only ever pointed one WRITE at them, and
+        that write is the one being scrubbed."""
+        s = self.sessions[sid]
+        assert s.swap_state == RES_DEVICE, \
+            f"overshoot reconcile on non-resident sid={sid}"
+        s.length -= n_tokens
+        assert s.length >= 0
+        if newb:
+            assert s.blocks[-len(newb):] == list(newb), \
+                f"overshoot blocks not at tail: sid={sid} {newb}"
+            for b in reversed(newb):
+                assert b > 0 and self.refcount[b] == 1, \
+                    f"overshoot block {b} shared (refcount "\
+                    f"{self.refcount[b]})"
+                s.blocks.pop()
+                self.refcount[b] -= 1
+            takes = None
+            if s.reserve_provenance and \
+                    s.reserve_provenance[-1][0] == tuple(newb):
+                takes = s.reserve_provenance.pop()[1]
+            if not self._undo_takes(takes, newb):
+                # free structure disturbed since the reserve (another slot
+                # allocated in between) — positional identity is already
+                # gone; return the blocks through the normal coalescing
+                # path so the pool stays leak-free
+                for b in reversed(newb):
+                    self._insert_run(b, 1)
+            # exact reversal of the overshoot's reserve: the allocation and
+            # op counters net to the timeline that never reserved
+            self.stats["blocks_allocated"] -= len(newb)
+            self.stats["reserve_ops"] -= 1
+        self._edit_log.append(("reconcile", sid, tuple(newb)))
+
+    def _undo_takes(self, takes, newb: List[int]) -> bool:
+        """Positionally invert one reserve's ``_take_run`` sequence so the
+        free structure (runs AND class-list order — allocation picks
+        ``[-1]``, so order decides future placement) ends byte-identical to
+        the never-reserved timeline. Returns False without mutating when
+        the provenance no longer matches — e.g. a remainder run was
+        consumed or coalesced by an interleaved allocation — in which case
+        the caller falls back to plain frees (the documented §13 limit:
+        placement identity holds for uncontended overshoot windows)."""
+        if takes is None or sum(t[1] for t in takes) != len(newb):
+            return False
+        got = [b for st_, w, _, _ in takes for b in range(st_, st_ + w)]
+        if got != list(newb):
+            return False
+        for st_, w, length, idx in takes:
+            if idx is None:
+                return False
+            if length > w and self._run_len.get(st_ + w) != length - w:
+                return False
+            if length == w and any(b in self._run_of
+                                   for b in range(st_, st_ + w)):
+                return False
+        for st_, w, length, idx in reversed(takes):
+            if length > w:
+                rem = st_ + w
+                self._run_len.pop(rem)
+                self._remove_from_class(rem, length - w)
+                for b in range(rem, rem + length - w):
+                    self._run_of.pop(b, None)
+            self._run_len[st_] = length
+            for b in range(st_, st_ + length):
+                self._run_of[b] = st_
+            self._free_by_class[self._class_of(length)].insert(idx, st_)
+        return True
 
     def alias(self, src_sid: int, dst_sid: int, n_tokens: int) -> None:
         """Share the first n_tokens of src with dst (COW). Raises

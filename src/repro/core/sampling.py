@@ -1,0 +1,101 @@
+"""On-device sampling for the fixed-shape decode step (DESIGN.md §13).
+
+The sampler is a static closure over (temperature, top_k, top_p): the knobs
+are trace-time Python constants, so every configuration compiles to its own
+minimal program and ``greedy`` mode pays nothing for the machinery. Per-slot
+randomness is derived FUNCTIONALLY from the control plane: the key for one
+emission is
+
+    fold_in(fold_in(PRNGKey(sample_seed), rid), position)
+
+where ``rid`` rides the flat descriptor commit's rid row and ``position`` is
+the descriptor's ``seq_lens`` entry (logical length BEFORE this step's
+token). A token therefore depends only on (seed, rid, position) — it is
+invariant to slot placement, batch composition, pipeline depth, preemption/
+resume, and mesh layout, which is what makes the depth-0 vs depth-1 and
+TP-vs-single identity gates possible for sampled decode.
+
+Filter semantics (float32 throughout, mirrored by the numpy reference):
+  * temperature <= 0 is an exact argmax branch (no categorical draw), so
+    "greedy with stop tokens" is expressible as greedy=False, temperature=0.
+  * top-k keeps every logit >= the k-th largest (ties INCLUDED — the
+    support may exceed k on ties, never lose probability mass to tie order).
+  * top-p keeps the smallest descending-sorted prefix whose mass reaches p
+    (the top-1 token is always kept; kept mass is >= p).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def slot_keys(base_key, rids, positions):
+    """Per-slot threefry keys for one step: vmapped double fold_in over the
+    (B,) rid row and the (B,) seq_lens row of the committed descriptor."""
+    def one(rid, pos):
+        return jax.random.fold_in(jax.random.fold_in(base_key, rid), pos)
+    return jax.vmap(one)(rids, positions)
+
+
+def make_sampler(temperature: float, top_k: int, top_p: float):
+    """Build the jitted-path sampler: (keys (B,2|key), logits (B,V)) ->
+    token ids (B,) int32. The knobs are STATIC (baked at trace time)."""
+    t = float(temperature)
+    k = int(top_k)
+    p = float(top_p)
+
+    def sample(keys, logits):
+        x = logits.astype(jnp.float32)
+        if t <= 0.0:
+            return jnp.argmax(x, axis=-1).astype(jnp.int32)
+        x = x / t
+        if 0 < k < x.shape[-1]:
+            kth = jax.lax.top_k(x, k)[0][..., -1:]
+            x = jnp.where(x < kth, -jnp.inf, x)
+        if p < 1.0:
+            xs = jnp.sort(x, axis=-1)[..., ::-1]
+            probs = jax.nn.softmax(xs, axis=-1)
+            excl = jnp.cumsum(probs, axis=-1) - probs
+            thr = jnp.min(jnp.where(excl < p, xs, jnp.inf), axis=-1,
+                          keepdims=True)
+            x = jnp.where(x < thr, -jnp.inf, x)
+        return jax.vmap(
+            lambda kk, xx: jax.random.categorical(kk, xx))(keys, x).astype(
+                jnp.int32)
+
+    return sample
+
+
+def ref_support(logits, temperature: float, top_k: int, top_p: float):
+    """Numpy reference: the exact set of token ids the sampler can emit for
+    one logit row, under the same float32 filter semantics as
+    ``make_sampler``. The property suite asserts sampled tokens land in this
+    set; it does NOT model the categorical draw itself."""
+    x = np.asarray(logits, np.float32)
+    n = x.shape[-1]
+    if temperature <= 0.0:
+        return {int(np.argmax(x))}
+    x = (x / np.float32(temperature)).astype(np.float32)
+    if 0 < top_k < n:
+        kth = np.sort(x)[-top_k]
+        x = np.where(x < kth, -np.inf, x).astype(np.float32)
+    if top_p < 1.0:
+        xs = np.sort(x)[::-1].astype(np.float32)
+        m = xs[0]
+        e = np.exp((xs - m).astype(np.float32)).astype(np.float32)
+        probs = (e / e.sum(dtype=np.float32)).astype(np.float32)
+        excl = (np.cumsum(probs, dtype=np.float32) - probs).astype(np.float32)
+        thr = np.min(np.where(excl < np.float32(top_p), xs, np.inf))
+        x = np.where(x < thr, -np.inf, x)
+    return {i for i in range(n) if np.isfinite(x[i])}
+
+
+def ref_probs(logits, temperature: float) -> np.ndarray:
+    """Float64 softmax of logits/temperature — the mass basis the property
+    suite uses for the top-p bound (tolerant of float32 cumsum edges)."""
+    x = np.asarray(logits, np.float64)
+    if temperature > 0:
+        x = x / temperature
+    e = np.exp(x - x.max())
+    return e / e.sum()

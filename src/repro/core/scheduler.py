@@ -17,20 +17,29 @@ import numpy as np
 class Request:
     rid: int
     prompt: np.ndarray               # int32 token ids
-    gen_len: int                     # tokens to generate before EOS
+    gen_len: int                     # max tokens to generate (budget cap)
     arrival: float = 0.0             # for trace replay
     prefix_of: Optional[int] = None  # rid whose prompt prefix this shares
     prefix_len: int = 0
+    # data-dependent EOS (DESIGN.md §13): any generated token in this set
+    # ends the request. Only meaningful with sampled decode (greedy=False);
+    # an empty set keeps the legacy pure-budget semantics bit-exact.
+    stop_tokens: tuple = ()
     # runtime
     generated: List[int] = field(default_factory=list)
     prompt_pos: int = 0              # tokens of prompt already consumed
     start_step: int = -1
     finish_step: int = -1
     first_token_step: int = -1
-    # structural emission count: known at DISPATCH time (EOS here is a fixed
-    # token budget, so retirement is host-predictable); token VALUES land in
-    # ``generated`` at readback, one step later under pipelining (DESIGN.md §3)
+    # structural emission count, stamped at DISPATCH time. In legacy greedy
+    # mode EOS is the gen_len budget, so retirement is host-predictable from
+    # this counter alone; in sampled mode EOS is data-dependent and ALL
+    # retirement happens at readback, where overshot dispatches are scrubbed
+    # back out of this counter (DESIGN.md §13). Token VALUES land in
+    # ``generated`` at readback, ``pipeline_depth`` steps later (DESIGN.md §3)
     emitted: int = 0
+    eos_hit: bool = False            # a stop token ended this request
+    finish_reason: str = ""          # "stop" | "budget" (set at retirement)
     # --- preemption / host-tier resume (DESIGN.md §8) ---
     swap_sid: int = -1               # pager session holding swapped-out KV
     resume_len: int = 0              # tokens in cache at preemption
@@ -182,8 +191,10 @@ class Scheduler:
 
     def note_emit(self, slot: int) -> bool:
         """Account one decode emission structurally (at dispatch time); True
-        if the request hits EOS with this token. The token value itself is
-        appended to ``generated`` at readback."""
+        if the request hits its gen_len budget with this token. The token
+        value itself is appended to ``generated`` at readback. Sampled mode
+        ignores the return value — detected-EOS retirement is readback-side
+        (DESIGN.md §13) and the engine scrubs any budget overshoot there."""
         req = self.request_at(slot)
         if req.first_token_step < 0:
             req.first_token_step = self.step_idx
@@ -191,10 +202,19 @@ class Scheduler:
         return req.emitted >= req.gen_len
 
     def record_output(self, slot: int, token: int) -> bool:
-        """Record a generated token; True if the request hit EOS."""
+        """Record a generated token; True if the request hit EOS — a
+        per-request stop token (data-dependent, DESIGN.md §13) or the
+        gen_len budget cap."""
         req = self.request_at(slot)
         if req.first_token_step < 0:
             req.first_token_step = self.step_idx
         req.generated.append(token)
         req.emitted = len(req.generated)
-        return len(req.generated) >= req.gen_len
+        if req.stop_tokens and token in req.stop_tokens:
+            req.eos_hit = True
+            req.finish_reason = "stop"
+            return True
+        if len(req.generated) >= req.gen_len:
+            req.finish_reason = "budget"
+            return True
+        return False

@@ -303,6 +303,20 @@ class MergeStagedTransport:
         self.stats.unmerged_groups += int((n_blocks + far_flags).sum())
         self._account_quant_saving(int((n_blocks + far_flags).sum()))
 
+    def unaccount_slot(self, n_blocks: int, n_groups: int,
+                       far_flag: int = 0) -> None:
+        """Reverse ONE slot-step of ``account_batch`` (lagged-EOS overshoot
+        reconcile, DESIGN.md §13): a pipelined dispatch accounted this
+        slot's window DMA before the readback revealed the request had
+        already stopped, so subtract exactly what that dispatch added.
+        ``max_groups`` is a monotone high-water mark and is left alone."""
+        blocks = int(n_blocks) + int(far_flag)
+        self.stats.steps -= 1
+        self.stats.total_groups -= int(n_groups) + int(far_flag)
+        self.stats.total_bytes -= blocks * self.block_bytes
+        self.stats.unmerged_groups -= blocks
+        self._account_quant_saving(-blocks)
+
     def fill_train_arrays(self, trains: List[Tuple[int, int, int]],
                           train_start: np.ndarray, train_len: np.ndarray,
                           train_dst: np.ndarray, row: int) -> None:

@@ -31,6 +31,11 @@ class TraceConfig:
     shared_prefix_len: int = 16
     n_prefixes: int = 4            # distinct system prompts (shared_prefix_*)
     gen_mean: int = 32             # shared-prefix family: mean decode length
+    # stop-token family (DESIGN.md §13): per-request stop sets drawn from
+    # the low-id band the sampler actually emits, so detected-EOS
+    # retirement fires well before the gen_len budget cap
+    stop_tokens: tuple = ()        # explicit stop set (all requests)
+    n_stop_tokens: int = 4         # drawn per trace when stop_tokens empty
 
 
 def _heavy_tail_lengths(rng, n, scale):
@@ -119,6 +124,34 @@ def shared_prefix_workload(cfg: TraceConfig) -> List[Request]:
         gen = max(2, int(rng.poisson(cfg.gen_mean * cfg.token_scale)))
         reqs.append(Request(rid=i, prompt=np.concatenate([pfx, suffix]),
                             gen_len=gen, arrival=float(arrivals[i])))
+    return reqs
+
+
+def stop_token_workload(cfg: TraceConfig) -> List[Request]:
+    """Variable-length decode driven by detected EOS (DESIGN.md §13): every
+    request carries a stop set, and the gen_len budget is only a cap — the
+    ACTUAL lengths are decided on-device by the sampled token stream, which
+    is exactly the data-dependent heterogeneity the paper's static-graph
+    retirement path has to absorb. The stop set is shared across the trace
+    (one tokenizer's EOS ids) and drawn from the vocab unless pinned via
+    ``cfg.stop_tokens``; budgets are heavy-tailed so budget-capped and
+    stop-retired requests mix. Requires sampled decode (greedy=False) —
+    the engine rejects stop sets in legacy mode."""
+    rng = np.random.default_rng(cfg.seed)
+    if cfg.stop_tokens:
+        stops = tuple(int(t) for t in cfg.stop_tokens)
+    else:
+        stops = tuple(sorted(int(t) for t in rng.choice(
+            cfg.vocab, size=min(cfg.n_stop_tokens, cfg.vocab),
+            replace=False)))
+    gen = _heavy_tail_lengths(rng, cfg.n_requests, cfg.token_scale)
+    plen = np.maximum(1, rng.poisson(cfg.prompt_mean * cfg.token_scale,
+                                     cfg.n_requests))
+    reqs = []
+    for i in range(cfg.n_requests):
+        prompt = rng.integers(0, cfg.vocab, size=int(plen[i])).astype(np.int32)
+        reqs.append(Request(rid=i, prompt=prompt, gen_len=int(gen[i]),
+                            arrival=0.0, stop_tokens=stops))
     return reqs
 
 

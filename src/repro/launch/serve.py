@@ -91,6 +91,7 @@ import jax
 import numpy as np
 
 from repro.configs import get_reduced
+from repro.configs.base import SamplingConfig
 from repro.core.engine import EngineConfig, KVRMEngine
 from repro.data import traces
 from repro.launch import mesh as mesh_mod
@@ -186,7 +187,7 @@ def build_arg_parser() -> argparse.ArgumentParser:
                     choices=["arena", "paged", "paged_merge", "full"])
     ap.add_argument("--workload", default="mixed",
                     choices=["mixed", "predictable", "replay",
-                             "shared_prefix"])
+                             "shared_prefix", "stop_token"])
     ap.add_argument("--requests", type=int, default=32)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--max-seq", type=int, default=256)
@@ -234,6 +235,30 @@ def build_arg_parser() -> argparse.ArgumentParser:
                          "grid step runs its block even when fully masked "
                          "— the always-run A/B baseline for the skip "
                          "identity gate (kernel_blocks_skipped audits 0)")
+    # --- on-device sampling + detected-EOS retirement (DESIGN.md §13).
+    # Passing ANY of these switches the engine out of the legacy greedy
+    # budget-EOS path (greedy=False); with none of them the run stays
+    # bitwise-identical to seed. "Greedy with stop tokens" is
+    # --temperature 0 plus --stop-token (the sampler's exact argmax
+    # branch, retired at readback on the detected stop).
+    ap.add_argument("--temperature", type=float, default=None,
+                    help="sampling temperature (0 = exact argmax branch); "
+                         "any sampling flag enables sampled decode with "
+                         "detected-EOS retirement (DESIGN.md §13)")
+    ap.add_argument("--top-k", type=int, default=None,
+                    help="keep the k highest logits before sampling "
+                         "(0 = disabled; ties at the k-th value included)")
+    ap.add_argument("--top-p", type=float, default=None,
+                    help="nucleus filter: smallest logit-sorted set with "
+                         "mass >= p (top-1 always kept)")
+    ap.add_argument("--stop-token", type=int, action="append", default=None,
+                    help="token id ending a request (repeatable); stamped "
+                         "on every submitted request and detected on the "
+                         "readback path, one step late under pipelining")
+    ap.add_argument("--seed", type=int, default=None,
+                    help="sampler base PRNG key (threefry), folded with "
+                         "(rid, position) per slot-step so token streams "
+                         "are invariant to slot/batch/depth placement")
     ap.add_argument("--json", action="store_true")
     return ap
 
@@ -249,8 +274,28 @@ def main(argv=None):
     if args.prefix_cache and args.mesh not in ("1x1", "1X1"):
         ap.error("the prefix cache is single-device for now: "
                  "use --mesh 1x1 with --prefix-cache")
+
+    # sampled decode (§13): any sampling flag leaves the legacy greedy path
+    sampling = SamplingConfig(
+        temperature=1.0 if args.temperature is None else args.temperature,
+        top_k=args.top_k or 0,
+        top_p=1.0 if args.top_p is None else args.top_p,
+        seed=args.seed or 0,
+        stop_tokens=tuple(args.stop_token or ()),
+        legacy=all(v is None for v in (
+            args.temperature, args.top_k, args.top_p, args.stop_token,
+            args.seed)) and args.workload != "stop_token",
+    )
+    sample_kw = {}
+    if not sampling.greedy():
+        sample_kw = dict(greedy=False,
+                         temperature=sampling.temperature,
+                         top_k=sampling.top_k, top_p=sampling.top_p,
+                         sample_seed=sampling.seed)
+
     engines = build_lanes(args.arch, args.mode, args.batch, args.max_seq,
                           args.mesh, pool_budget_frac=args.pool_budget,
+                          **sample_kw,
                           kv_oversubscribe=args.kv_oversubscribe,
                           host_pool_blocks=args.host_pool_blocks,
                           prefix_cache=args.prefix_cache,
@@ -260,12 +305,17 @@ def main(argv=None):
                           kernel_skip_extent=not args.no_kernel_skip)
     tcfg = traces.TraceConfig(n_requests=args.requests,
                               vocab=engines[0].cfg.vocab_size,
-                              token_scale=args.token_scale)
+                              token_scale=args.token_scale,
+                              stop_tokens=sampling.stop_tokens)
     gen = {"mixed": traces.mixed_length_workload,
            "predictable": traces.predictable_workload,
            "replay": traces.azure_like_replay,
-           "shared_prefix": traces.shared_prefix_workload}[args.workload]
+           "shared_prefix": traces.shared_prefix_workload,
+           "stop_token": traces.stop_token_workload}[args.workload]
     reqs = gen(tcfg)
+    if sampling.stop_tokens and args.workload != "stop_token":
+        for r in reqs:
+            r.stop_tokens = sampling.stop_tokens
     print("workload:", traces.trace_summary(reqs))
 
     now_fn = None

@@ -1,0 +1,90 @@
+"""Legacy-mode regression pin (DESIGN.md §13): greedy=True + budget-EOS is
+the exact PR 7 decode path — the sampling tentpole must not move a single
+bit of it. The seeded mixed-length trace's token digest and pager counters
+were captured on the pristine pre-sampling tree; this test replays the
+trace at depths 0 and 1 and pins both against that baseline.
+
+The digest covers every generated token of every request (sha256 over the
+sorted rid->tokens JSON), so any drift in argmax decode, descriptor
+layout, dispatch bookkeeping, or retirement order fails loudly. The token
+digest is a function of jax's PRNG + reduced-model numerics, which are
+version-stable in practice but not contractually; if a jax upgrade ever
+moves it, the within-run depth-0 == depth-1 assertions still hold the
+actual §13 contract (legacy pipelining is bitwise transparent) and the
+pinned constants should be re-captured.
+"""
+import hashlib
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.core.engine import EngineConfig, KVRMEngine
+from repro.core.scheduler import Request
+from repro.models import registry
+
+# captured on the PR 7 tree (pre-sampling), qwen2.5-32b reduced,
+# params = init_params(PRNGKey(7)), prompts from default_rng(1)
+GOLDEN_DIGEST = \
+    "fb8c0f9acb339f55b44e7f4a6cc0ee09e97282a9dbd0e4c4e0ad66ca898a0812"
+GOLDEN_STEPS_RUN = 40
+GOLDEN_PAGER_STATS = {"alias_ops": 0, "blocks_allocated": 40,
+                      "blocks_freed": 40, "frames": 9, "reserve_ops": 10,
+                      "swap_in_blocks": 0, "swap_out_blocks": 0,
+                      "swap_refusals": 0, "trim_ops": 9}
+
+LENS = [(5, 6), (17, 4), (3, 8), (33, 5), (9, 7), (21, 3),
+        (4, 5), (6, 5), (8, 5)]
+
+
+@pytest.fixture(scope="module")
+def dense_setup():
+    cfg = get_reduced("qwen2.5-32b")
+    params = registry.init_params(jax.random.PRNGKey(7), cfg)
+    return cfg, params
+
+
+def _reqs(vocab):
+    rng = np.random.default_rng(1)
+    return [Request(rid=i, prompt=rng.integers(0, vocab, size=p)
+                    .astype(np.int32), gen_len=g)
+            for i, (p, g) in enumerate(LENS)]
+
+
+def _run(cfg, params, depth):
+    eng = KVRMEngine(cfg, params, EngineConfig(
+        mode="paged_merge", batch=4, max_seq=64, block_tokens=8,
+        pipeline_depth=depth))
+    for r in _reqs(cfg.vocab_size):
+        eng.submit(r)
+    eng.run(max_steps=500)
+    toks = {r.rid: list(map(int, r.generated)) for r in eng.sched.finished}
+    digest = hashlib.sha256(
+        json.dumps(toks, sort_keys=True).encode()).hexdigest()
+    return eng, toks, digest
+
+
+def test_legacy_greedy_pinned_to_pr7_baseline(dense_setup):
+    cfg, params = dense_setup
+    runs = {d: _run(cfg, params, d) for d in (0, 1)}
+    # the §13 contract proper: depth is bitwise transparent in legacy mode
+    assert runs[1][1] == runs[0][1]
+    for d, (eng, toks, digest) in runs.items():
+        assert len(toks) == len(LENS)
+        assert digest == GOLDEN_DIGEST, \
+            f"legacy token stream drifted at depth {d}: {digest}"
+        assert eng.steps_run == GOLDEN_STEPS_RUN
+        got = {k: eng.pager.stats[k] for k in GOLDEN_PAGER_STATS}
+        assert got == GOLDEN_PAGER_STATS, f"depth {d}"
+        a = eng.audit()
+        # legacy runs never touch the sampled-retirement counters
+        assert a["greedy"] is True
+        assert a["eos_detected"] == 0
+        assert a["eos_overshoot_tokens"] == 0
+        assert a["eos_reconciled_blocks"] == 0
+        assert a["single_commit_per_step"]
+        assert a["compilations"] in (-1, 1)
+        eng.pager.check_invariants()
+        assert eng.pager.reserved_blocks() == 0

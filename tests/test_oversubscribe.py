@@ -149,12 +149,15 @@ def test_swap_preserves_frame_edit_log():
 @settings(max_examples=50, deadline=None)
 @given(st.lists(st.tuples(st.sampled_from(["open", "reserve", "append",
                                            "cold", "preempt", "resume",
-                                           "trim", "frame"]),
+                                           "trim", "frame", "eos"]),
                           st.integers(0, 5), st.integers(1, 40)),
                 min_size=1, max_size=60))
 def test_swap_invariants_fuzz(ops):
     """Random verb sequences over BOTH tiers preserve refcount/free-list
-    AND host-slot invariants; closing everything drains both pools."""
+    AND host-slot invariants; closing everything drains both pools. The
+    ``eos`` verb injects a lagged-EOS overshoot (DESIGN.md §13): one
+    reserve + append that is immediately scrubbed via
+    ``reconcile_overshoot``, randomly interleaved with every other verb."""
     p = BlockPager(64, 8, span_blocks=1, host_pool_blocks=24)
     live = set()
     for op, sid, n in ops:
@@ -172,6 +175,17 @@ def test_swap_invariants_fuzz(ops):
                 s = p.sessions[sid]
                 if s.length < len(s.blocks) * p.block_tokens:
                     p.append_token(sid)
+            elif op == "eos" and sid in live:
+                # overshot emission: the engine reserved and appended a
+                # token the detected stop invalidates, then reconciles
+                s = p.sessions[sid]
+                newb = p.reserve(sid, 1)
+                local = s.length - s.trimmed_prefix_blocks * p.block_tokens
+                if s.blocks[local // p.block_tokens] > 0:
+                    p.append_token(sid)
+                    p.reconcile_overshoot(sid, newb, 1)
+                else:        # write target cold-swapped: undo reserve only
+                    p.reconcile_overshoot(sid, newb, 0)
             elif op == "cold" and sid in live:
                 p.swap_out_cold(sid, min(n, len(p.sessions[sid].blocks)))
             elif op == "preempt" and sid in live:

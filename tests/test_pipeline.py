@@ -151,6 +151,156 @@ def test_pipelined_alias_prefix(dense_setup):
     assert outs[(0, 0)] == outs[(1, 0)] == outs[(1, 8)]
 
 
+def _sampled_run(cfg, params, depth, stops, **kw):
+    base = dict(mode="paged_merge", batch=4, max_seq=64, block_tokens=4,
+                span_blocks=1, pipeline_depth=depth, greedy=False,
+                temperature=1.2, top_k=50, top_p=0.95, sample_seed=123)
+    base.update(kw)
+    eng = KVRMEngine(cfg, params, EngineConfig(**base))
+    rng = np.random.default_rng(1)
+    lens = [(5, 12), (17, 10), (3, 14), (9, 11), (4, 10), (6, 9)]
+    for i, (p, g) in enumerate(lens):
+        eng.submit(Request(rid=i, prompt=rng.integers(0, cfg.vocab_size,
+                                                      size=p)
+                           .astype(np.int32), gen_len=g, stop_tokens=stops))
+    eng.run(max_steps=400)
+    return eng
+
+
+# pager counters that must be byte-identical across pipeline depths for a
+# sampled run after overshoot reconciliation; 'frames'/'steps' are coupled
+# to steps_run, which legitimately differs by the trailing scrubbed-empty
+# step when the stopping request was the last active one
+PAGER_IDENTITY_EXCLUDE = {"frames", "steps"}
+
+
+def _pager_subset(eng):
+    return {k: v for k, v in eng.pager.stats.items()
+            if k not in PAGER_IDENTITY_EXCLUDE}
+
+
+def _transport_subset(eng, placement=False):
+    """Transport counters that must match across depths for a sampled run.
+    The count-based figures (slot-steps, bytes, block counts) are exact
+    after overshoot scrubbing. ``total_groups`` is placement-SENSITIVE
+    (merge trains follow physical contiguity): a stop-retired request frees
+    its blocks ``depth`` readback steps later than at depth 0, so a
+    neighbour reserving inside that lag window can land on different
+    physical blocks — the documented §13 limit. Compare it only in
+    uncontended scenarios (``placement=True``)."""
+    s = eng.transport.stats
+    out = {"steps": s.steps, "total_bytes": s.total_bytes,
+           "unmerged_groups": s.unmerged_groups,
+           "quant_bytes_saved": s.quant_bytes_saved}
+    if placement:
+        out["total_groups"] = s.total_groups
+    return out
+
+
+def test_sampled_lagged_eos_depth_identity(dense_setup):
+    """DESIGN.md §13 acceptance: sampled decode with per-request stop
+    tokens retires on DETECTED EOS at depths 0, 1 and 2 — the host learns
+    of a stop ``depth`` steps late, scrubs the overshoot dispatches, and
+    the depth>0 token streams AND pager/transport audits come out
+    byte-identical to depth 0, with zero leaked blocks. span_blocks=1 +
+    block_tokens=4 force overshoot steps across block boundaries so the
+    reconcile path actually pops committed tail blocks."""
+    cfg, params = dense_setup
+    # harvest stop ids from a stop-free probe so stops are guaranteed to
+    # land mid-stream (detected EOS, not just the budget cap)
+    probe = _sampled_run(cfg, params, 0, ())
+    pool = sorted({t for r in probe.sched.finished for t in r.generated[1:-2]})
+    stops = tuple(pool[:6])
+    runs = {d: _sampled_run(cfg, params, d, stops) for d in (0, 1, 2)}
+
+    toks = {d: {r.rid: list(map(int, r.generated))
+                for r in e.sched.finished} for d, e in runs.items()}
+    assert len(toks[0]) == 6
+    a0 = runs[0].audit()
+    assert a0["eos_detected"] > 0          # stops actually fired
+    assert any(r.finish_reason == "stop" for r in runs[0].sched.finished)
+    assert any(r.finish_reason == "budget" for r in runs[0].sched.finished)
+    assert a0["eos_overshoot_tokens"] == 0  # depth 0 never overshoots
+    for d in (1, 2):
+        ad = runs[d].audit()
+        assert toks[d] == toks[0], f"depth {d} token stream diverged"
+        assert ad["eos_detected"] == a0["eos_detected"]
+        # every overshoot dispatch was scrubbed: one per in-flight step per
+        # stop-retired request, bounded by depth * detected stops
+        assert 0 < ad["eos_overshoot_tokens"] <= d * len(toks[0])
+        assert ad["eos_reconciled_blocks"] > 0   # tail blocks were popped
+        assert _pager_subset(runs[d]) == _pager_subset(runs[0])
+        assert _transport_subset(runs[d]) == _transport_subset(runs[0])
+        assert ad["kernel_blocks_total"] == a0["kernel_blocks_total"]
+        assert ad["kernel_blocks_skipped"] == a0["kernel_blocks_skipped"]
+        assert ad["single_commit_per_step"]
+        runs[d].pager.check_invariants()
+        assert runs[d].pager.reserved_blocks() == 0   # zero leaked blocks
+    # throughput numerator excludes scrubbed tokens: emitted sums match
+    assert sum(m.emitted for m in runs[1].metrics) == \
+        sum(m.emitted for m in runs[0].metrics)
+
+
+def test_sampled_budget_eos_depth_identity(dense_setup):
+    """Budget-capped sampled requests (no stop set) ALSO retire at readback
+    and overshoot by <= depth dispatches — the same reconcile path must
+    leave the audits byte-identical to depth 0."""
+    cfg, params = dense_setup
+    runs = {d: _sampled_run(cfg, params, d, ()) for d in (0, 1)}
+    toks = {d: {r.rid: list(map(int, r.generated))
+                for r in e.sched.finished} for d, e in runs.items()}
+    assert toks[1] == toks[0]
+    assert all(r.finish_reason == "budget" for r in runs[1].sched.finished)
+    a1 = runs[1].audit()
+    assert a1["eos_detected"] == 0
+    assert a1["eos_overshoot_tokens"] > 0
+    assert _pager_subset(runs[1]) == _pager_subset(runs[0])
+    assert _transport_subset(runs[1], placement=True) == \
+        _transport_subset(runs[0], placement=True)
+    assert runs[1].pager.reserved_blocks() == 0
+
+
+def test_sampled_uncontended_stop_full_identity(dense_setup):
+    """With non-overlapping request lifetimes (no neighbour allocates
+    inside a retirement lag window) the §13 reconcile restores the pager's
+    free structure POSITIONALLY, so even the placement-sensitive merge
+    group count is byte-identical across depths: the late request's blocks
+    land exactly where the depth-0 timeline put them."""
+    cfg, params = dense_setup
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, cfg.vocab_size, size=p).astype(np.int32)
+               for p in (5, 7)]
+
+    def run(depth, stops):
+        eng = KVRMEngine(cfg, params, EngineConfig(
+            mode="paged_merge", batch=4, max_seq=64, block_tokens=4,
+            span_blocks=1, pipeline_depth=depth, greedy=False,
+            temperature=1.2, top_k=50, top_p=0.95, sample_seed=123))
+        eng.submit(Request(rid=0, prompt=prompts[0], gen_len=14,
+                           stop_tokens=stops))
+        # rid 1 arrives only after rid 0 has fully retired (and any
+        # overshoot was reconciled) at every depth under test
+        eng.submit(Request(rid=1, prompt=prompts[1], gen_len=8,
+                           arrival=40.0, stop_tokens=stops))
+        eng.run(max_steps=300, now_fn=lambda: float(eng.steps_run))
+        return eng
+
+    probe = run(0, ())
+    toks0 = {r.rid: r.generated for r in probe.sched.finished}
+    stops = (toks0[0][5],)      # mid-stream stop for rid 0
+    runs = {d: run(d, stops) for d in (0, 1, 2)}
+    toks = {d: {r.rid: list(map(int, r.generated))
+                for r in e.sched.finished} for d, e in runs.items()}
+    assert runs[0].audit()["eos_detected"] >= 1
+    for d in (1, 2):
+        assert toks[d] == toks[0]
+        assert runs[d].audit()["eos_overshoot_tokens"] > 0
+        assert _pager_subset(runs[d]) == _pager_subset(runs[0])
+        assert _transport_subset(runs[d], placement=True) == \
+            _transport_subset(runs[0], placement=True)
+        assert runs[d].pager.reserved_blocks() == 0
+
+
 def test_prefill_step_count():
     """A 256-token prompt completes prefill in <= 256/chunk + 1 engine steps
     (vs 256 at seed): the chunked executor ingests C tokens per step and the

@@ -1,0 +1,231 @@
+"""On-device sampling (DESIGN.md §13): property-based sampler semantics vs
+the numpy reference (top-k support, top-p mass bound, temperature->0 argmax
+convergence, key determinism across batch placement / devices / mesh
+layouts), plus engine-level contracts: stop tokens are rejected in legacy
+greedy mode, submit-order invariance of sampled streams, and "greedy with
+stop tokens" (temperature=0) truncating the legacy argmax stream exactly.
+
+Property tests use coarse-grid integer logits and power-of-two temperatures
+so every float32 filter threshold (x/t, the k-th value, the top-p cut) is
+exact — no tie-edge flakiness; the top-p mass bound is checked against a
+float64 softmax with an epsilon.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.configs import get_reduced
+from repro.core.engine import EngineConfig, KVRMEngine
+from repro.core.sampling import (make_sampler, ref_probs, ref_support,
+                                 slot_keys)
+from repro.core.scheduler import Request
+from repro.models import registry
+
+TEMPS = [0.25, 0.5, 1.0, 2.0, 4.0]          # powers of two: exact x/t
+TOPPS = [0.25, 0.5, 0.75, 0.9]
+
+logits_row = st.lists(st.integers(-8, 8), min_size=4, max_size=24)
+seeds = st.integers(0, 2**16)
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted(t, k, p):
+    return jax.jit(make_sampler(t, k, p))
+
+
+def _one(seed, row, t, k, p):
+    """Sample one token for a single logit row under a derived key."""
+    key = jax.random.fold_in(jax.random.PRNGKey(0), seed)
+    return int(_jitted(t, k, p)(key[None], jnp.asarray([row], jnp.float32))[0])
+
+
+# ---------------------------------------------------------------------------
+# sampler vs numpy reference
+# ---------------------------------------------------------------------------
+@settings(max_examples=60, deadline=None)
+@given(row=logits_row, t=st.sampled_from(TEMPS), k=st.integers(0, 6),
+       p=st.sampled_from(TOPPS + [1.0]), seed=seeds)
+def test_sampled_token_in_reference_support(row, t, k, p, seed):
+    tok = _one(seed, row, t, k, p)
+    assert tok in ref_support(row, t, k, p)
+
+
+@settings(max_examples=60, deadline=None)
+@given(row=logits_row, k=st.integers(1, 6), seed=seeds)
+def test_top_k_never_emits_out_of_k(row, k, seed):
+    tok = _one(seed, row, 1.0, k, 1.0)
+    x = np.asarray(row, np.float32)
+    kth = np.sort(x)[-min(k, len(x))]
+    assert x[tok] >= kth            # ties at the k-th value are included
+
+
+@settings(max_examples=60, deadline=None)
+@given(row=logits_row, t=st.sampled_from(TEMPS), p=st.sampled_from(TOPPS),
+       seed=seeds)
+def test_top_p_mass_bound(row, t, p, seed):
+    tok = _one(seed, row, t, 0, p)
+    probs = ref_probs(row, t)
+    # the emitted token's strictly-greater-prob mass is < p (it was inside
+    # the smallest prefix reaching p), and the kept support carries >= p
+    excl = probs[probs > probs[tok]].sum()
+    assert excl < p + 1e-6
+    sup = sorted(ref_support(row, t, 0, p))
+    assert probs[sup].sum() >= p - 1e-6
+
+
+@settings(max_examples=40, deadline=None)
+@given(row=logits_row, seed=seeds)
+def test_temperature_zero_is_exact_argmax(row, seed):
+    tok = _one(seed, row, 0.0, 0, 1.0)
+    assert tok == int(np.argmax(np.asarray(row, np.float32)))
+
+
+@settings(max_examples=40, deadline=None)
+@given(row=logits_row, seed=seeds)
+def test_temperature_converges_to_argmax(row, seed):
+    row = list(row) + [9]           # unique max by construction (grid <= 8)
+    assert _one(seed, row, 1.0 / 64, 0, 1.0) == len(row) - 1
+
+
+# ---------------------------------------------------------------------------
+# key determinism across placement
+# ---------------------------------------------------------------------------
+@settings(max_examples=40, deadline=None)
+@given(row=logits_row, t=st.sampled_from(TEMPS), k=st.integers(0, 6),
+       p=st.sampled_from(TOPPS + [1.0]), seed=seeds, slot=st.integers(0, 3))
+def test_identical_key_identical_token_across_batch(row, t, k, p, seed, slot):
+    """The token for (key, logits) is independent of which batch row holds
+    it and of what the other rows contain — the property the engine's
+    (seed, rid, position) key derivation relies on."""
+    sampler = _jitted(t, k, p)
+    key = jax.random.fold_in(jax.random.PRNGKey(0), seed)
+    single = int(sampler(key[None], jnp.asarray([row], jnp.float32))[0])
+    B = 4
+    keys = jnp.stack([jax.random.fold_in(jax.random.PRNGKey(1), i)
+                      for i in range(B)])
+    keys = keys.at[slot].set(key)
+    noise = np.tile(np.asarray(row, np.float32)[::-1], (B, 1))
+    noise[slot] = np.asarray(row, np.float32)
+    assert int(sampler(keys, jnp.asarray(noise))[slot]) == single
+
+
+def test_identical_key_identical_token_across_devices():
+    """Threefry sampling is a pure function of (key, logits): placing the
+    same inputs on different devices or sharding the batch over a mesh
+    yields the same tokens."""
+    devs = jax.devices()
+    if len(devs) < 2:
+        pytest.skip("needs >= 2 devices")
+    sampler = make_sampler(1.3, 5, 0.9)
+    rng = np.random.default_rng(0)
+    logits = rng.normal(size=(4, 32)).astype(np.float32)
+    keys = slot_keys(jax.random.PRNGKey(3), jnp.arange(4),
+                     jnp.arange(4) * 7)
+    base = np.asarray(jax.jit(sampler)(keys, jnp.asarray(logits)))
+    for dev in devs[:2]:
+        got = jax.jit(sampler)(jax.device_put(keys, dev),
+                               jax.device_put(jnp.asarray(logits), dev))
+        np.testing.assert_array_equal(np.asarray(got), base)
+    # mesh layout: batch sharded 2-ways vs fully replicated
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+    mesh = Mesh(np.array(devs[:2]), ("data",))
+    sh = NamedSharding(mesh, P("data"))
+    got = jax.jit(sampler)(jax.device_put(keys, sh),
+                           jax.device_put(jnp.asarray(logits), sh))
+    np.testing.assert_array_equal(np.asarray(got), base)
+
+
+def test_slot_keys_fold_order():
+    """slot_keys folds rid first, position second — distinct on both axes."""
+    base = jax.random.PRNGKey(0)
+    k = np.asarray(slot_keys(base, jnp.asarray([1, 1, 2]),
+                             jnp.asarray([5, 6, 5])))
+    assert not np.array_equal(k[0], k[1])     # same rid, different position
+    assert not np.array_equal(k[0], k[2])     # different rid, same position
+
+
+# ---------------------------------------------------------------------------
+# engine-level contracts
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def dense_setup():
+    cfg = get_reduced("qwen2.5-32b")
+    params = registry.init_params(jax.random.PRNGKey(7), cfg)
+    return cfg, params
+
+
+def _reqs(vocab, stops=(), order=None):
+    lens = [(5, 6), (17, 4), (3, 8), (9, 7), (4, 5), (6, 5)]
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, vocab, size=p).astype(np.int32)
+               for p, _ in lens]
+    idx = order if order is not None else range(len(lens))
+    return [Request(rid=i, prompt=prompts[i], gen_len=lens[i][1],
+                    stop_tokens=stops) for i in idx]
+
+
+def _sampled_engine(cfg, params, depth=1, **kw):
+    base = dict(mode="paged_merge", batch=4, max_seq=64, block_tokens=8,
+                pipeline_depth=depth, greedy=False, temperature=1.2,
+                top_k=50, top_p=0.95, sample_seed=123)
+    base.update(kw)
+    return KVRMEngine(cfg, params, EngineConfig(**base))
+
+
+def test_stop_tokens_require_sampled_mode(dense_setup):
+    cfg, params = dense_setup
+    eng = KVRMEngine(cfg, params, EngineConfig(
+        mode="paged_merge", batch=4, max_seq=64, block_tokens=8))
+    with pytest.raises(ValueError, match="greedy"):
+        eng.submit(Request(rid=0, prompt=np.arange(4, dtype=np.int32),
+                           gen_len=4, stop_tokens=(5,)))
+
+
+def test_sampled_stream_invariant_to_submit_order(dense_setup):
+    """Keys derive from (seed, rid, position), so slot assignment — here
+    permuted via submit order — cannot change any request's tokens."""
+    cfg, params = dense_setup
+    outs = []
+    for order in (None, [3, 1, 5, 0, 4, 2]):
+        eng = _sampled_engine(cfg, params)
+        for r in _reqs(cfg.vocab_size, order=order):
+            eng.submit(r)
+        eng.run(max_steps=400)
+        outs.append({r.rid: list(map(int, r.generated))
+                     for r in eng.sched.finished})
+        assert len(outs[-1]) == 6
+    assert outs[0] == outs[1]
+
+
+def test_greedy_with_stop_tokens_truncates_argmax_stream(dense_setup):
+    """greedy=False + temperature=0 is the sampler's exact argmax branch:
+    with a stop token drawn from the legacy stream, the sampled run emits
+    the identical prefix and retires on the detected stop."""
+    cfg, params = dense_setup
+    legacy = KVRMEngine(cfg, params, EngineConfig(
+        mode="paged_merge", batch=4, max_seq=64, block_tokens=8,
+        pipeline_depth=1))
+    for r in _reqs(cfg.vocab_size):
+        legacy.submit(r)
+    legacy.run(max_steps=400)
+    ref = {r.rid: list(map(int, r.generated)) for r in legacy.sched.finished}
+    # pick a mid-stream token of rid 2 (gen_len 8) as the stop
+    stop = ref[2][3]
+    eng = _sampled_engine(cfg, params, temperature=0.0, top_k=0, top_p=1.0)
+    for r in _reqs(cfg.vocab_size, stops=(stop,)):
+        eng.submit(r)
+    eng.run(max_steps=400)
+    got = {r.rid: list(map(int, r.generated)) for r in eng.sched.finished}
+    reasons = {r.rid: r.finish_reason for r in eng.sched.finished}
+    for rid, toks in ref.items():
+        cut = toks.index(stop) + 1 if stop in toks else len(toks)
+        assert got[rid] == toks[:cut], rid
+        assert reasons[rid] == ("stop" if stop in toks else "budget")
+    assert eng.audit()["eos_detected"] == \
+        sum(1 for t in ref.values() if stop in t)
+    eng.pager.check_invariants()
+    assert eng.pager.reserved_blocks() == 0

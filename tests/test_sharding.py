@@ -79,6 +79,46 @@ def test_tp2_token_identical(dense_setup, mode):
     assert a1["tp_degree"] == 2
 
 
+def test_tp2_sampled_stop_tokens_identical(dense_setup):
+    """Sampled decode (DESIGN.md §13) is mesh-transparent too: threefry
+    keys derive from (seed, rid, position) and the sampler runs replicated
+    on the logits, so a TP=2 run with temperature/top-k/top-p and detected
+    stop-token retirement emits the exact tokens — and retires on the exact
+    steps — of the single-device engine, sampling counters included."""
+    cfg, params = dense_setup
+    kw = dict(greedy=False, temperature=1.2, top_k=50, top_p=0.95,
+              sample_seed=123)
+    probe = _run(cfg, params, None, **kw)
+    pool = sorted({t for r in probe.sched.finished
+                   for t in r.generated[1:-2]})
+    stops = tuple(pool[:6])
+
+    def sampled(mesh):
+        eng = KVRMEngine(cfg, params, EngineConfig(
+            mode="paged_merge", batch=4, max_seq=64, block_tokens=8,
+            mesh=mesh, pipeline_depth=1, prefill_chunk=8, **kw))
+        for r in _reqs(cfg.vocab_size):
+            r.stop_tokens = stops
+            eng.submit(r)
+        eng.run(max_steps=500)
+        return eng
+
+    e0, e1 = sampled(None), sampled(make_engine_mesh(1, 2))
+    t0 = {r.rid: list(map(int, r.generated)) for r in e0.sched.finished}
+    t1 = {r.rid: list(map(int, r.generated)) for r in e1.sched.finished}
+    assert len(t0) == len(t1) == 9
+    assert t0 == t1
+    a0, a1 = e0.audit(), e1.audit()
+    assert a0["eos_detected"] == a1["eos_detected"] > 0
+    assert a0["eos_overshoot_tokens"] == a1["eos_overshoot_tokens"]
+    assert a0["eos_reconciled_blocks"] == a1["eos_reconciled_blocks"]
+    assert {r.rid: r.finish_reason for r in e0.sched.finished} == \
+           {r.rid: r.finish_reason for r in e1.sched.finished}
+    assert a1["compilations"] in (-1, 1)
+    assert a1["single_commit_per_step"]
+    assert e1.pager.reserved_blocks() == 0
+
+
 def test_tp_with_data_axis(dense_setup):
     """A (data=2, model=2) mesh (pools replicated over `data`, sharded over
     `model`) still decodes token-for-token identically."""
