@@ -6,16 +6,13 @@ import os
 import time
 from typing import List, Tuple
 
-import jax
 import numpy as np
 
-from repro.configs import get_reduced
-from repro.core.engine import EngineConfig, KVRMEngine
+from repro.core.engine import KVRMEngine
 from repro.data import traces
-from repro.models import registry
+from repro.serving.factory import build as serving_build
 
 ARCH = "qwen2.5-32b"      # bench model family (paper uses qwen2.5-7B)
-_PARAM_CACHE = {}
 
 # engine audits recorded during a bench run, aggregated by run.py --json
 # into the per-PR perf-trajectory artifact (BENCH_PR<n>.json)
@@ -33,14 +30,11 @@ def collected_audits() -> dict:
 
 def engine(mode: str, *, batch=8, max_seq=256, near_window=None,
            block_tokens=8, pool_budget=1.0, arch=ARCH, seed=0, **kw) -> KVRMEngine:
-    key = (arch, seed)
-    if key not in _PARAM_CACHE:
-        cfg = get_reduced(arch)
-        _PARAM_CACHE[key] = (cfg, registry.init_params(jax.random.PRNGKey(seed), cfg))
-    cfg, params = _PARAM_CACHE[key]
-    return KVRMEngine(cfg, params, EngineConfig(
-        mode=mode, batch=batch, max_seq=max_seq, near_window=near_window,
-        block_tokens=block_tokens, pool_budget_frac=pool_budget, **kw))
+    """One engine via the consolidated serving factory (§14); params stay
+    cached per (arch, seed) inside the factory."""
+    return serving_build(arch, mode=mode, batch=batch, max_seq=max_seq,
+                         near_window=near_window, block_tokens=block_tokens,
+                         pool_budget=pool_budget, seed=seed, **kw)[0]
 
 
 def run_workload(eng: KVRMEngine, reqs, warmup: int = 3, replay_scale=None):

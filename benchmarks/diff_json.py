@@ -35,6 +35,8 @@ KEY_METRICS = {
     "step_p99_ms": "down",
     "completion_p99_ms": "down",
     "ttft_p99_ms": "down",
+    "tpot_p99_ms": "down",
+    "goodput": "up",
     "per_device_peak_reserved_kv": "down",
     "peak_reserved_kv": "down",
     "dma_groups": "down",

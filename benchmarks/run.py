@@ -51,6 +51,7 @@ MODULES = [
     ("longcontext_budget", "benchmarks.bench_longcontext_budget"),
     ("decode_skew", "benchmarks.bench_decode_skew"),
     ("sampling_eos", "benchmarks.bench_sampling_eos"),
+    ("gateway_slo", "benchmarks.bench_gateway_slo"),
     ("kernels", "benchmarks.bench_kernels"),
     ("scaling", "benchmarks.bench_scaling"),
 ]

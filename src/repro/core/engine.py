@@ -74,6 +74,7 @@ from repro.core.sampling import make_sampler, slot_keys
 from repro.core.scheduler import Request, Scheduler
 from repro.core.transport import MergeStagedTransport, StagedDescriptor, merge_runs
 from repro.models import registry
+from repro.serving.api import AuditReport
 
 MODES = ("arena", "paged", "paged_merge", "full")
 
@@ -338,6 +339,13 @@ class KVRMEngine:
         self.eos_detected = 0
         self.eos_overshoot_tokens = 0
         self.eos_reconciled_blocks = 0
+        # per-token event hook (serving gateway, DESIGN.md §14): called as
+        # ``token_hook(req, token, finished)`` wherever a token VALUE lands
+        # host-side — the sync step's post-device loop and the pipelined
+        # readback. Scrubbed overshoot emissions (§13) never fire it, and a
+        # cancel's terminal event is the caller's to emit (no token lands).
+        self.token_hook = None
+        self.cancelled = 0
         if self._sampled:
             if ecfg.temperature > 0 and not 0.0 < ecfg.top_p <= 1.0:
                 raise ValueError(f"top_p must be in (0, 1]: {ecfg.top_p}")
@@ -543,6 +551,60 @@ class KVRMEngine:
                 "For argmax decode WITH stop tokens use greedy=False, "
                 "temperature=0.")
         self.sched.submit(req)
+
+    def cancel(self, rid: int) -> bool:
+        """Cancel a request wherever it lives (serving gateway, §14):
+
+        * still waiting — drop it from the queue (it holds no resources);
+        * preempted (host-resident, §8) — release its admission charge and
+          prefix pins, close its swapped-out pager session (``trim`` frees
+          host entries too);
+        * active in a slot — drain the dispatch pipeline first (in-flight
+          steps reference its blocks and still owe token readbacks), then
+          retire the slot through the one retirement path, which frees
+          device blocks, pins and the session exactly as an EOS would.
+
+        ``finish_reason`` becomes "cancelled"; partial output stays on
+        ``req.generated``. Returns False when rid is unknown or already
+        finished. The pager's zero-leak invariant holds after any cancel
+        (asserted in tests via ``pager.check_invariants()``)."""
+        req = self.sched.requests.get(rid)
+        if req is None or req.finish_reason:
+            return False
+        if req in self.sched.waiting:
+            self.sched.waiting.remove(req)
+            req.finish_reason = "cancelled"
+            req.finish_wall = self.cum_wall
+            req.finish_step = self.sched.step_idx
+            self.sched.finished.append(req)
+            self.cancelled += 1
+            return True
+        if req in self.sched.preempted:
+            self.sched.preempted.remove(req)
+            if self._host_tier:
+                self._committed_blocks -= req.committed_blocks
+            self._prefix_release(req)
+            self._indexed_rids.discard(rid)
+            if self.pager is not None and req.swap_sid >= 0:
+                self._drain_out_fences()     # in-flight swap-outs must land
+                self.pager.trim(req.swap_sid, close=True)
+                req.swap_sid = -1
+            req.finish_reason = "cancelled"
+            req.finish_wall = self.cum_wall
+            req.finish_step = self.sched.step_idx
+            self.sched.finished.append(req)
+            self.cancelled += 1
+            return True
+        for slot, st in enumerate(self.sched.slots):
+            if st.rid == rid:
+                self.flush()
+                if self.sched.slots[slot].rid != rid:
+                    return False             # the drain already retired it
+                req.finish_reason = "cancelled"
+                self._retire_slot(slot)
+                self.cancelled += 1
+                return True
+        return False
 
     # ------------------------------------------------------------------
     def _admit(self, now: float) -> None:
@@ -1394,13 +1456,14 @@ class KVRMEngine:
                     req.logit_trace = []
                 req.logit_trace.append(np.asarray(lg[slot], np.float32))
             req_s = self.sched.request_at(slot)
-            if self.sched.record_output(slot, int(nxt[slot])):
-                m.emitted += 1
+            done = self.sched.record_output(slot, int(nxt[slot]))
+            m.emitted += 1
+            if done:
                 if req_s is not None and req_s.eos_hit:
                     self.eos_detected += 1
                 self._retire_slot(slot)
-            else:
-                m.emitted += 1
+            if self.token_hook is not None and req_s is not None:
+                self.token_hook(req_s, int(nxt[slot]), done)
         if self.fv is not None:
             self.fv.observe_utility(np.asarray(fu), np.asarray(descr.far_table))
 
@@ -1617,31 +1680,34 @@ class KVRMEngine:
             # never flattered by the one-step pipeline lag
             if len(req.generated) == 1:
                 req.ttft_wall = self.cum_wall
+            fin = False
             if not self._sampled and req.emitted >= req.gen_len \
                     and len(req.generated) >= req.gen_len:
                 req.finish_wall = self.cum_wall
+                fin = True
             if lg is not None:
                 if not hasattr(req, "logit_trace"):
                     req.logit_trace = []
                 req.logit_trace.append(lg[slot])
             if self.sched.slots[slot].rid == req.rid:
                 self._last_token[slot] = tok
-            if not self._sampled:
-                continue
-            # sampled decode (§13): ALL retirement is readback-side. The
-            # host learns of a stop ``depth`` steps late — scrub the
-            # overshoot dispatches still in flight, then retire.
-            stop = bool(req.stop_tokens) and tok in req.stop_tokens
-            if not stop and len(req.generated) < req.gen_len:
-                continue
-            req.eos_hit = stop
-            req.finish_reason = "stop" if stop else "budget"
-            if stop:
-                self.eos_detected += 1
-            assert self.sched.slots[slot].rid == req.rid, \
-                "sampled mode never retires at dispatch"
-            self._scrub_overshoot(slot, req)
-            self._retire_slot(slot)
+            if self._sampled:
+                # sampled decode (§13): ALL retirement is readback-side.
+                # The host learns of a stop ``depth`` steps late — scrub
+                # the overshoot dispatches still in flight, then retire.
+                stop = bool(req.stop_tokens) and tok in req.stop_tokens
+                if stop or len(req.generated) >= req.gen_len:
+                    req.eos_hit = stop
+                    req.finish_reason = "stop" if stop else "budget"
+                    if stop:
+                        self.eos_detected += 1
+                    assert self.sched.slots[slot].rid == req.rid, \
+                        "sampled mode never retires at dispatch"
+                    self._scrub_overshoot(slot, req)
+                    self._retire_slot(slot)
+                    fin = True
+            if self.token_hook is not None:
+                self.token_hook(req, tok, fin)
         if self.fv is not None:
             self.fv.observe_utility(np.asarray(rec["fu"]), rec["far_table"])
 
@@ -1700,6 +1766,11 @@ class KVRMEngine:
     # audits & metrics
     # ------------------------------------------------------------------
     def audit(self) -> dict:
+        """Legacy dict view of :meth:`audit_report` — every pre-§14
+        ``audit()[key]`` call site keeps working unchanged."""
+        return self.audit_report().as_dict()
+
+    def audit_report(self) -> AuditReport:
         # audit reads host-slot state: deferred swap-out bytes must land
         # first (DESIGN.md §11) so the figures match the sync schedule
         self._drain_out_fences()
@@ -1710,7 +1781,10 @@ class KVRMEngine:
         ncomp = getattr(self._step_fn, "_cache_size", lambda: -1)()
         nc_prefill = (getattr(self._chunk_fn, "_cache_size", lambda: -1)()
                       if self._chunk_fn is not None else 0)
-        return {
+        # field-per-counter typed report (serving/api.py, §14): a counter
+        # added here without an AuditReport field — or vice versa — raises
+        # TypeError on every audit call, so the contract cannot drift
+        return AuditReport(**{
             "mode": self.e.mode,
             "steps": len(steps),
             "compilations": ncomp,
@@ -1781,6 +1855,7 @@ class KVRMEngine:
             "admit_blocked_no_slot": self.sched.admit_blocked["no_slot"],
             "admit_blocked_kv_watermark":
                 self.sched.admit_blocked["kv_watermark"],
+            "cancelled": self.cancelled,
             # --- radix prefix cache (DESIGN.md §9): shared-prefix reuse.
             # COW tail copies are their own transport group kind so prefix
             # traffic is auditable apart from window trains and swaps.
@@ -1814,7 +1889,7 @@ class KVRMEngine:
             "per_device_reserved_kv": self.reserved_kv_bytes() // self._kv_shards,
             "per_device_active_kv": self.active_kv_bytes() // self._kv_shards,
             "per_device_peak_reserved_kv": self.peak_reserved_kv // self._kv_shards,
-        }
+        })
 
     def reserved_kv_bytes(self) -> int:
         n_layers = max(1, registry.n_paged_layers(self.cfg))
@@ -1852,15 +1927,24 @@ class KVRMEngine:
         otherwise). Raw ``finish_wall``/``ttft_wall`` stamps are engine-start
         relative, so trace replay (arrivals gate admission) must subtract the
         arrival offset or late requests inflate the percentiles by their own
-        arrival time; clamped at 0 for in-flight edge stamps."""
+        arrival time; clamped at 0 for in-flight edge stamps.
+
+        TTFT and TPOT are reported SEPARATELY: TPOT is the mean inter-token
+        gap (finish - first token) / (n - 1), so the first-token wait —
+        queueing + prefill — no longer folds into the per-token figure."""
         fin = self.sched.finished
         if not fin:
             return {}
         arr = np.array([getattr(r, "arrival", 0.0) or 0.0 for r in fin])
-        comp = np.maximum(
-            np.array([getattr(r, "finish_wall", 0.0) for r in fin]) - arr, 0.0)
-        ttft = np.maximum(
-            np.array([getattr(r, "ttft_wall", 0.0) for r in fin]) - arr, 0.0)
+        finw = np.array([getattr(r, "finish_wall", 0.0) for r in fin])
+        ttftw = np.array([getattr(r, "ttft_wall", 0.0) for r in fin])
+        ngen = np.array([len(r.generated) for r in fin])
+        comp = np.maximum(finw - arr, 0.0)
+        ttft = np.maximum(ttftw - arr, 0.0)
+        tpot = np.where(ngen > 1,
+                        np.maximum(finw - ttftw, 0.0) / np.maximum(ngen - 1, 1),
+                        0.0)
         q = lambda a, p: float(np.percentile(a * 1e3, p))
         return {"completion_p50_ms": q(comp, 50), "completion_p99_ms": q(comp, 99),
-                "ttft_p50_ms": q(ttft, 50), "ttft_p99_ms": q(ttft, 99)}
+                "ttft_p50_ms": q(ttft, 50), "ttft_p99_ms": q(ttft, 99),
+                "tpot_p50_ms": q(tpot, 50), "tpot_p99_ms": q(tpot, 99)}

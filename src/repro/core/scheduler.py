@@ -60,14 +60,28 @@ class SlotState:
     sid: int = -1                    # pager session
 
 
+class AdmissionPolicy:
+    """Pluggable admission ORDERING (DESIGN.md §14): ``order`` returns the
+    sequence in which the waiting queue is considered this admit round —
+    head-of-line blocking then applies in that order. The default identity
+    policy preserves the seed FIFO semantics bit-for-bit; the serving
+    gateway installs an SLO-priority policy. Only the fresh-admission
+    queue is reordered: preempted resumes keep their no-overtaking FIFO
+    (a resume's working set shrinks only when others finish)."""
+
+    def order(self, waiting: List["Request"], now: float) -> List["Request"]:
+        return waiting
+
+
 class Scheduler:
-    def __init__(self, n_slots: int):
+    def __init__(self, n_slots: int, policy: Optional[AdmissionPolicy] = None):
         self.n_slots = n_slots
         self.slots = [SlotState() for _ in range(n_slots)]
         self.waiting: List[Request] = []
         self.preempted: List[Request] = []   # resume-priority queue (§8)
         self.requests: Dict[int, Request] = {}
         self.finished: List[Request] = []
+        self.policy = policy
         self._next_sid = 0
         self.step_idx = 0
         # admission-stall counters: one count per admit() call whose queue
@@ -100,25 +114,28 @@ class Scheduler:
         ``kv_ok(req, is_resume)``, when given, is the KV watermark gate
         (DESIGN.md §8): a request that has a slot available but fails the
         gate is counted in ``admit_blocked['kv_watermark']``; a request
-        with no free slot counts in ``admit_blocked['no_slot']``."""
+        with no free slot counts in ``admit_blocked['no_slot']``.
+
+        An installed ``self.policy`` (§14) reorders the FRESH queue's
+        consideration order; with the default identity policy the walk —
+        and every counter — is bit-identical to the seed FIFO."""
         out = []
         free = self.free_slots()
         blocked = False
         for queue, is_resume in ((self.preempted, True), (self.waiting, False)):
-            still = []
-            for req in queue:
+            view = queue if (is_resume or self.policy is None) \
+                else self.policy.order(queue, now)
+            taken = set()
+            for req in view:
                 if blocked or req.arrival > now:
-                    still.append(req)
                     continue
                 if not free:
                     self.admit_blocked["no_slot"] += 1
                     blocked = True
-                    still.append(req)
                     continue
                 if kv_ok is not None and not kv_ok(req, is_resume):
                     self.admit_blocked["kv_watermark"] += 1
                     blocked = True
-                    still.append(req)
                     continue
                 slot = free.pop(0)
                 if is_resume:
@@ -129,7 +146,9 @@ class Scheduler:
                     req.start_step = self.step_idx
                 self.slots[slot] = SlotState(rid=req.rid, sid=sid)
                 out.append((slot, req, sid))
-            queue[:] = still
+                taken.add(id(req))
+            if taken:
+                queue[:] = [r for r in queue if id(r) not in taken]
         return out
 
     def preempt(self, slot: int) -> Request:

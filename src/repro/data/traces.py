@@ -45,6 +45,52 @@ def _heavy_tail_lengths(rng, n, scale):
     return np.maximum(1, lens.astype(np.int64))
 
 
+# ---------------------------------------------------------------------------
+# open-loop arrival processes (serving gateway, DESIGN.md §14)
+# ---------------------------------------------------------------------------
+
+def poisson_arrivals(n: int, window_s: float, rng) -> np.ndarray:
+    """Memoryless open-loop arrivals: n exponential inter-arrival gaps
+    with mean window_s / n (so the window holds the whole trace in
+    expectation), cumulatively summed."""
+    gaps = rng.exponential(window_s / max(1, n), size=n)
+    return np.cumsum(gaps)
+
+
+def bursty_arrivals(n: int, window_s: float, burstiness: float,
+                    rng) -> np.ndarray:
+    """Concentrated arrivals matching the Azure-trace heterogeneity (top
+    10% of windows hold ~31% of arrivals): Pareto-weighted window counts,
+    uniform placement within each window. Factored out of
+    ``azure_like_replay`` so the gateway's open-loop driver and the
+    closed-loop replay share one arrival process."""
+    nw = 20
+    w = rng.pareto(burstiness / 2, size=nw) + 0.1
+    w = w / w.sum()
+    counts = rng.multinomial(n, w)
+    arrivals = []
+    for wi, c in enumerate(counts):
+        lo = window_s * wi / nw
+        hi = window_s * (wi + 1) / nw
+        arrivals += list(rng.uniform(lo, hi, size=c))
+    return np.sort(np.array(arrivals))[:n]
+
+
+def assign_arrivals(reqs: List[Request], kind: str, cfg: TraceConfig) -> None:
+    """Reassign a workload's arrivals in place: ``kind`` is 'poisson' or
+    'bursty' (serve.py --arrival); the generator draws from a seed offset
+    so arrival randomness is independent of the length mixture."""
+    rng = np.random.default_rng(cfg.seed + 7)
+    if kind == "poisson":
+        arr = poisson_arrivals(len(reqs), cfg.window_s, rng)
+    elif kind == "bursty":
+        arr = bursty_arrivals(len(reqs), cfg.window_s, cfg.burstiness, rng)
+    else:
+        raise ValueError(f"unknown arrival process {kind!r}")
+    for r, a in zip(reqs, arr):
+        r.arrival = float(a)
+
+
 def mixed_length_workload(cfg: TraceConfig) -> List[Request]:
     """Controlled mixed-length decode (paper Fig. 4c-d): all arrive at t=0."""
     rng = np.random.default_rng(cfg.seed)
@@ -81,17 +127,10 @@ def azure_like_replay(cfg: TraceConfig) -> List[Request]:
     gen = _heavy_tail_lengths(rng, cfg.n_requests, cfg.token_scale)
     plen = np.maximum(1, rng.poisson(cfg.prompt_mean * cfg.token_scale,
                                      cfg.n_requests))
-    # bursty arrivals: draw window weights from a Pareto, assign arrivals
-    nw = 20
-    w = rng.pareto(cfg.burstiness / 2, size=nw) + 0.1
-    w = w / w.sum()
-    counts = rng.multinomial(cfg.n_requests, w)
-    arrivals = []
-    for wi, c in enumerate(counts):
-        lo = cfg.window_s * wi / nw
-        hi = cfg.window_s * (wi + 1) / nw
-        arrivals += list(rng.uniform(lo, hi, size=c))
-    arrivals = np.sort(np.array(arrivals))[:cfg.n_requests]
+    # bursty arrivals: Pareto-weighted window concentration (shared with
+    # the gateway's open-loop driver via bursty_arrivals)
+    arrivals = bursty_arrivals(cfg.n_requests, cfg.window_s,
+                               cfg.burstiness, rng)
     reqs = []
     for i in range(cfg.n_requests):
         prompt = rng.integers(0, cfg.vocab, size=int(plen[i])).astype(np.int32)

@@ -104,3 +104,13 @@ def lane_meshes(mesh: Mesh) -> list[Mesh]:
         return [Mesh(devs, ("model",))]
     rows = np.array(mesh.devices).reshape(mesh.shape["data"], -1)
     return [Mesh(rows[i], ("model",)) for i in range(rows.shape[0])]
+
+
+def lane_meshes_for_spec(spec: str) -> list:
+    """Lane meshes for a '--mesh DxM' spec; the 1x1 spec maps to ``[None]``
+    (single-device engine, seed-exact placement) so callers — the
+    ``serving.build`` factory — need no special case."""
+    d, m = parse_mesh_spec(spec)
+    if (d, m) == (1, 1):
+        return [None]
+    return lane_meshes(make_engine_mesh(d, m))

@@ -87,43 +87,33 @@ import argparse
 import json
 import time
 
-import jax
 import numpy as np
 
-from repro.configs import get_reduced
 from repro.configs.base import SamplingConfig
-from repro.core.engine import EngineConfig, KVRMEngine
+from repro.core.engine import KVRMEngine
 from repro.data import traces
-from repro.launch import mesh as mesh_mod
 from repro.launch import xla_flags
-from repro.models import registry
 
 
 def build_engine(arch: str, mode: str, batch: int, max_seq: int,
                  near_window=None, seed: int = 0, mesh=None,
                  params=None, **kw) -> KVRMEngine:
-    cfg = get_reduced(arch)
-    if params is None:
-        params = registry.init_params(jax.random.PRNGKey(seed), cfg)
-    ecfg = EngineConfig(mode=mode, batch=batch, max_seq=max_seq,
-                        near_window=near_window, block_tokens=8, mesh=mesh,
-                        **kw)
-    return KVRMEngine(cfg, params, ecfg)
+    """Thin shim over the consolidated ``serving.build`` factory (§14)."""
+    from repro.serving.factory import build
+    return build(arch, mode=mode, batch=batch, max_seq=max_seq,
+                 near_window=near_window, seed=seed, mesh=mesh,
+                 params=params, **kw)[0]
 
 
 def build_lanes(arch: str, mode: str, batch: int, max_seq: int,
                 mesh_spec: str, **kw) -> list:
     """One replicated engine per `data` row of the requested mesh; params
-    are initialized once and placed per lane."""
-    d, m = mesh_mod.parse_mesh_spec(mesh_spec)
-    if (d, m) == (1, 1):
-        return [build_engine(arch, mode, batch, max_seq, **kw)]
-    full = mesh_mod.make_engine_mesh(d, m)
-    cfg = get_reduced(arch)
-    params = registry.init_params(jax.random.PRNGKey(kw.pop("seed", 0)), cfg)
-    return [build_engine(arch, mode, batch, max_seq, mesh=lane,
-                         params=params, **kw)
-            for lane in mesh_mod.lane_meshes(full)]
+    are initialized once (cached) and placed per lane. Delegates to
+    ``serving.build`` (§14) — the one construction path for serve,
+    benchmarks and the gateway."""
+    from repro.serving.factory import build
+    return build(arch, mode=mode, batch=batch, max_seq=max_seq,
+                 mesh_spec=mesh_spec, seed=kw.pop("seed", 0), **kw)
 
 
 def run_lanes(engines: list, reqs, *, max_steps: int = 100_000,
@@ -175,6 +165,68 @@ def run_lanes(engines: list, reqs, *, max_steps: int = 100_000,
     if len(engines) > 1:
         out["lane_audits"] = [e.audit() for e in engines[1:]]
     return out
+
+
+def run_gateway(engines: list, reqs, *, slo_class: str = "standard",
+                arrival_scale: float = 0.02, tenants: int = 4,
+                router=None, admission=None) -> dict:
+    """Open-loop serving through the asyncio gateway (DESIGN.md §14): an
+    async driver submits each request at its (scaled) trace arrival and
+    consumes its token-event stream; rejected/shed submissions surface as
+    typed AdmissionRejected backpressure, counted not raised."""
+    import asyncio
+
+    from repro import serving
+
+    classes = [serving.SLO_CLASSES[slo_class]] if slo_class != "mixed" \
+        else [serving.INTERACTIVE, serving.STANDARD, serving.BATCH]
+    jobs = [(float(r.arrival) * arrival_scale,
+             serving.GenerationRequest(
+                 rid=r.rid, prompt=tuple(int(t) for t in r.prompt),
+                 gen_len=r.gen_len, tenant=f"tenant{i % tenants}",
+                 slo=classes[i % len(classes)],
+                 stop_tokens=tuple(r.stop_tokens)))
+            for i, r in enumerate(reqs)]
+
+    gw = serving.Gateway(engines, router=router, admission=admission)
+    rejects = []
+
+    async def _one(arrival, greq):
+        await asyncio.sleep(max(0.0, arrival - gw.now()))
+        try:
+            return await gw.generate(greq)
+        except serving.AdmissionRejected as e:
+            rejects.append((greq.rid, e.reason))
+            return None
+
+    async def _drive():
+        res = await asyncio.gather(*[_one(a, g) for a, g in jobs])
+        await gw.drain()
+        gw.close()
+        return res
+
+    results = [r for r in asyncio.run(_drive()) if r is not None]
+    audit = gw.audit()
+    lane_audits = audit.pop("lane_audits")
+    ttft = sorted(r.ttft_s for r in results) or [0.0]
+    tpot = sorted(r.tpot_s for r in results) or [0.0]
+    p99 = lambda xs: xs[min(len(xs) - 1, int(0.99 * len(xs)))]
+    return {
+        "lanes": len(engines),
+        "offered": len(jobs),
+        "finished": len(results),
+        "rejected": len(rejects),
+        "tokens": sum(len(r.tokens) for r in results),
+        "ttft_p50_ms": 1e3 * ttft[len(ttft) // 2],
+        "ttft_p99_ms": 1e3 * p99(ttft),
+        "tpot_p50_ms": 1e3 * tpot[len(tpot) // 2],
+        "tpot_p99_ms": 1e3 * p99(tpot),
+        "slo": gw.slo_stats(),
+        "gateway_audit": audit,
+        "audit": lane_audits[0],
+        **({"lane_audits": lane_audits[1:]} if len(lane_audits) > 1 else {}),
+        "results": {r.rid: list(r.tokens) for r in results},
+    }
 
 
 def build_arg_parser() -> argparse.ArgumentParser:
@@ -259,6 +311,28 @@ def build_arg_parser() -> argparse.ArgumentParser:
                     help="sampler base PRNG key (threefry), folded with "
                          "(rid, position) per slot-step so token streams "
                          "are invariant to slot/batch/depth placement")
+    # --- async serving gateway (DESIGN.md §14). Default OFF: without
+    # --gateway the closed-loop replay path below is bitwise-identical to
+    # seed (the gateway reuses the same engines, so the identity gate in
+    # bench_gateway_slo can diff the two token streams).
+    ap.add_argument("--gateway", action="store_true",
+                    help="serve through the asyncio gateway (DESIGN.md "
+                         "§14): typed submit/stream/cancel API, SLO-aware "
+                         "admission with typed backpressure, per-tenant "
+                         "fairness, prefix-affinity lane routing; off = "
+                         "the closed-loop replay driver (seed-exact)")
+    ap.add_argument("--arrival", default="trace",
+                    choices=["trace", "poisson", "bursty"],
+                    help="open-loop arrival process overriding the "
+                         "workload's own arrivals (data/traces.py): "
+                         "memoryless 'poisson' or Pareto-window 'bursty'; "
+                         "'trace' keeps the workload's arrivals")
+    ap.add_argument("--slo-class", default="standard",
+                    choices=["interactive", "standard", "batch", "mixed"],
+                    help="SLO class stamped on gateway requests "
+                         "(serving/api.py: TTFT/TPOT targets + shed "
+                         "depth); 'mixed' stripes all three classes "
+                         "round-robin over the trace")
     ap.add_argument("--json", action="store_true")
     return ap
 
@@ -316,21 +390,30 @@ def main(argv=None):
     if sampling.stop_tokens and args.workload != "stop_token":
         for r in reqs:
             r.stop_tokens = sampling.stop_tokens
+    if args.arrival != "trace":
+        # open-loop arrival override (§14): Poisson or bursty process over
+        # the TraceConfig window, independent of the length mixture
+        traces.assign_arrivals(reqs, args.arrival, tcfg)
     print("workload:", traces.trace_summary(reqs))
 
-    now_fn = None
-    if args.workload == "replay":
-        # virtual-time replay: arrivals gate admission. The 60s trace window
-        # is compressed into wall seconds up front (arrivals and the
-        # engine's latency stamps then share one clock; admission timing is
-        # equivalent to dividing now by the scale).
-        scale = 0.02
-        for r in reqs:
-            r.arrival *= scale
-        t0 = time.perf_counter()
-        now_fn = lambda: time.perf_counter() - t0
-    out = run_lanes(engines, reqs, now_fn=now_fn)
-    out["throughput_tok_s"] = out["aggregate_tok_s"]
+    scale = 0.02                # trace window -> wall seconds compression
+    if args.gateway:
+        out = run_gateway(engines, reqs, slo_class=args.slo_class,
+                          arrival_scale=scale)
+        out.pop("results")      # per-rid token streams: bench-only payload
+    else:
+        now_fn = None
+        if args.workload == "replay" or args.arrival != "trace":
+            # virtual-time replay: arrivals gate admission. The trace
+            # window is compressed into wall seconds up front (arrivals and
+            # the engine's latency stamps then share one clock; admission
+            # timing is equivalent to dividing now by the scale).
+            for r in reqs:
+                r.arrival *= scale
+            t0 = time.perf_counter()
+            now_fn = lambda: time.perf_counter() - t0
+        out = run_lanes(engines, reqs, now_fn=now_fn)
+        out["throughput_tok_s"] = out["aggregate_tok_s"]
     out["xla_profile"] = xla_flags.active_profile()
 
     if args.json:

@@ -1,0 +1,35 @@
+"""Serving layer (DESIGN.md §14): typed API + asyncio gateway over the
+data-parallel engine lanes.
+
+``repro.serving.api`` is imported eagerly (pure dataclasses — the engine
+itself imports ``AuditReport`` from there); the gateway / router /
+admission / build modules import the engine, so they load lazily via
+PEP 562 to keep ``core.engine -> serving.api`` acyclic.
+"""
+from repro.serving.api import (BATCH, INTERACTIVE, REJECT_QUEUE_FULL,
+                               REJECT_REASONS, REJECT_SLO_SHED, SLO_CLASSES,
+                               STANDARD, AdmissionRejected, AuditReport,
+                               GenerationRequest, RequestResult, SLOClass,
+                               TokenEvent)
+
+_LAZY = {
+    "Gateway": ("repro.serving.gateway", "Gateway"),
+    "AdmissionController": ("repro.serving.admission", "AdmissionController"),
+    "SLOOrderPolicy": ("repro.serving.admission", "SLOOrderPolicy"),
+    "AffinityRouter": ("repro.serving.router", "AffinityRouter"),
+    "RoundRobinRouter": ("repro.serving.router", "RoundRobinRouter"),
+    "build": ("repro.serving.factory", "build"),
+}
+
+__all__ = ["AdmissionRejected", "AuditReport", "GenerationRequest",
+           "RequestResult", "SLOClass", "TokenEvent", "SLO_CLASSES",
+           "INTERACTIVE", "STANDARD", "BATCH", "REJECT_QUEUE_FULL",
+           "REJECT_SLO_SHED", "REJECT_REASONS"] + list(_LAZY)
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        import importlib
+        modname, attr = _LAZY[name]
+        return getattr(importlib.import_module(modname), attr)
+    raise AttributeError(f"module 'repro.serving' has no attribute {name!r}")

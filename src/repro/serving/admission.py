@@ -1,0 +1,95 @@
+"""SLO-aware admission control + per-tenant fairness (DESIGN.md §14).
+
+The gateway consults :class:`AdmissionController` at SUBMIT time — before
+a request touches any engine queue — so backpressure is typed and
+immediate (:class:`~repro.serving.api.AdmissionRejected`), extending the
+engine's §8 ``admit_blocked_*`` stall taxonomy with the two gateway-level
+outcomes:
+
+  * ``queue_full`` — a tenant's queue bound or the gateway's global
+    outstanding bound is exhausted (fairness backpressure);
+  * ``slo_shed``   — the request's SLO class already has
+    ``max_queue_depth`` requests queued-or-running per lane, so queueing
+    deeper provably blows its TTFT target; shedding it NOW keeps the
+    admitted population's tail inside the SLO (the paper's goodput
+    argument applied above the engines).
+
+:class:`SLOOrderPolicy` is the matching scheduler plug-in: once requests
+reach an engine's waiting queue, admission considers them in
+(SLO priority, arrival) order instead of raw FIFO.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.core.scheduler import AdmissionPolicy
+from repro.serving.api import (REJECT_QUEUE_FULL, REJECT_SLO_SHED,
+                               AdmissionRejected, GenerationRequest)
+
+
+class SLOOrderPolicy(AdmissionPolicy):
+    """Engine-side admission ordering: (SLO priority, arrival, rid).
+    Requests without a gateway-attached SLO sort as standard priority."""
+
+    def order(self, waiting, now):
+        return sorted(waiting,
+                      key=lambda r: (getattr(r, "slo_priority", 1),
+                                     r.arrival, r.rid))
+
+
+class AdmissionController:
+    """Bounded-queue admission with per-class accounting.
+
+    ``check`` raises :class:`AdmissionRejected` or records the admit; the
+    per-class admitted / rejected / shed counters feed the gateway audit.
+    ``unbounded=True`` disables every bound (the naive admit-everything
+    A/B baseline in bench_gateway_slo).
+    """
+
+    def __init__(self, *, tenant_queue_max: int = 64,
+                 max_outstanding: int = 0, unbounded: bool = False):
+        self.tenant_queue_max = tenant_queue_max
+        self.max_outstanding = max_outstanding   # 0 = lanes*batch*4 at check
+        self.unbounded = unbounded
+        self.admitted_per_class: Dict[str, int] = {}
+        self.rejected_per_class: Dict[str, int] = {}
+        self.shed_per_class: Dict[str, int] = {}
+
+    # ------------------------------------------------------------------
+    def check(self, greq: GenerationRequest, gw) -> None:
+        cls = greq.slo.name
+        if not self.unbounded:
+            cap = self.max_outstanding or 4 * sum(
+                e.e.batch for e in gw.engines)
+            if gw.outstanding() >= cap:
+                self.rejected_per_class[cls] = \
+                    self.rejected_per_class.get(cls, 0) + 1
+                raise AdmissionRejected(
+                    REJECT_QUEUE_FULL,
+                    f"gateway outstanding {gw.outstanding()} >= {cap}")
+            if gw.tenant_queued(greq.tenant) >= self.tenant_queue_max:
+                self.rejected_per_class[cls] = \
+                    self.rejected_per_class.get(cls, 0) + 1
+                raise AdmissionRejected(
+                    REJECT_QUEUE_FULL,
+                    f"tenant '{greq.tenant}' queue >= {self.tenant_queue_max}")
+            depth_cap = greq.slo.max_queue_depth * len(gw.engines)
+            if depth_cap and gw.outstanding_in_class(cls) >= depth_cap:
+                self.shed_per_class[cls] = self.shed_per_class.get(cls, 0) + 1
+                raise AdmissionRejected(
+                    REJECT_SLO_SHED,
+                    f"class '{cls}' depth >= {depth_cap}: TTFT target "
+                    f"{greq.slo.ttft_target_ms}ms unmeetable from this deep")
+        self.admitted_per_class[cls] = self.admitted_per_class.get(cls, 0) + 1
+
+    # ------------------------------------------------------------------
+    def stats(self) -> dict:
+        tot = lambda d: sum(d.values())
+        return {
+            "admitted": tot(self.admitted_per_class),
+            "admit_rejected_queue_full": tot(self.rejected_per_class),
+            "admit_shed_slo": tot(self.shed_per_class),
+            "admitted_per_class": dict(self.admitted_per_class),
+            "rejected_per_class": dict(self.rejected_per_class),
+            "shed_per_class": dict(self.shed_per_class),
+        }

@@ -1,0 +1,66 @@
+"""Lane routing policies for the serving gateway (DESIGN.md §14).
+
+A router picks which data-parallel engine lane serves a request. The
+load-bearing policy is :class:`AffinityRouter`: it checks the request's
+block-aligned prompt prefix against each lane's radix prefix index (§9)
+— ``PrefixCache.match`` is a pure longest-prefix lookup over committed
+block chunks, so peeking is free and side-effect-less — and routes to the
+lane already holding the longest hit. Shared-system-prompt tenants
+therefore concentrate on the lane whose cache is warm instead of
+round-robin smearing every prefix into every lane's cache.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+
+class RoundRobinRouter:
+    """Stripe requests over lanes in submit order — the naive baseline
+    (and the exact lane placement of the closed-loop replay path)."""
+
+    def __init__(self):
+        self._i = 0
+
+    def route(self, greq, engines: List, depths: List[int]) -> int:
+        lane = self._i % len(engines)
+        self._i += 1
+        return lane
+
+
+class LeastLoadedRouter:
+    """Route to the lane with the fewest queued-or-running requests;
+    ties break to the lowest lane index (deterministic)."""
+
+    def route(self, greq, engines: List, depths: List[int]) -> int:
+        return int(np.argmin(depths))
+
+
+class AffinityRouter:
+    """Prefix-cache-affinity routing: peek every lane's radix index with
+    the prompt's block-aligned prefix chunks and route to the deepest
+    match (>= one block); cold prompts fall back to least-loaded.
+    ``affinity_hits`` / ``affinity_misses`` count routed-by-match vs
+    fallback decisions (surfaced in the gateway audit)."""
+
+    def __init__(self):
+        self.affinity_hits = 0
+        self.affinity_misses = 0
+        self._fallback = LeastLoadedRouter()
+
+    def route(self, greq, engines: List, depths: List[int]) -> int:
+        prompt = np.asarray(greq.prompt, np.int32)
+        best_lane, best_tok = -1, 0
+        for lane, eng in enumerate(engines):
+            pc = getattr(eng, "prefix_cache", None)
+            if pc is None:
+                continue
+            tok = pc.match(prompt).tokens
+            if tok > best_tok:
+                best_lane, best_tok = lane, tok
+        if best_lane >= 0 and best_tok >= engines[best_lane].bt:
+            self.affinity_hits += 1
+            return best_lane
+        self.affinity_misses += 1
+        return self._fallback.route(greq, engines, depths)

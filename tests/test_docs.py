@@ -1,9 +1,11 @@
 """Docs cannot rot: operator-reference regression tests + link check.
 
-* Every key a live ``engine.audit()`` dict returns must be documented in
+* Every field of the typed :class:`repro.serving.api.AuditReport` (the
+  schema behind ``engine.audit()``, §14) must be documented in
   ``docs/OPERATIONS.md`` (the counter tables), and every ``serve.py``
   flag must appear there too — adding a counter or flag without
-  documenting it fails CI.
+  documenting it fails CI. Diffing the dataclass needs no live engine
+  run: the field list IS the audit surface.
 * Every relative markdown link in the repo's ``*.md`` files must resolve
   to a real file, and a ``#fragment`` must match a heading anchor in the
   target (GitHub slugification).
@@ -19,16 +21,35 @@ OPERATIONS = REPO / "docs" / "OPERATIONS.md"
 
 
 # ---------------------------------------------------------------------------
-# audit-doc regression: live audit() keys vs docs/OPERATIONS.md
+# audit-doc regression: AuditReport schema vs docs/OPERATIONS.md
 # ---------------------------------------------------------------------------
 
-@pytest.fixture(scope="module")
-def live_audit():
+def _documented_keys(text):
+    """Keys documented as `code` spans (counter tables use `key` cells)."""
+    return set(re.findall(r"`([A-Za-z_][A-Za-z0-9_]*)`", text))
+
+
+def test_every_audit_field_documented():
+    from repro.serving.api import AuditReport
+    text = OPERATIONS.read_text()
+    # split composite cells like `a` / `b` too — the regex already
+    # captures each span separately
+    documented = _documented_keys(text)
+    missing = sorted(set(AuditReport.field_names()) - documented)
+    assert not missing, (
+        f"AuditReport fields missing from docs/OPERATIONS.md: {missing} — "
+        f"document each new counter with the invariant it witnesses")
+
+
+def test_audit_report_matches_live_audit():
+    """The typed schema and a live ``engine.audit()`` dict agree exactly:
+    same keys (``as_dict`` is the back-compat surface), no drift."""
     import numpy as np
     from repro.configs import get_reduced
     from repro.core.engine import EngineConfig, KVRMEngine
     from repro.core.scheduler import Request
     from repro.models import registry
+    from repro.serving.api import AuditReport
     cfg = get_reduced("qwen2.5-32b")
     params = registry.init_params(jax.random.PRNGKey(0), cfg)
     eng = KVRMEngine(cfg, params, EngineConfig(
@@ -36,23 +57,10 @@ def live_audit():
     eng.submit(Request(rid=0, prompt=np.arange(4, dtype=np.int32),
                        gen_len=4))
     eng.run(max_steps=64)
-    return eng.audit()
-
-
-def _documented_keys(text):
-    """Keys documented as `code` spans (counter tables use `key` cells)."""
-    return set(re.findall(r"`([A-Za-z_][A-Za-z0-9_]*)`", text))
-
-
-def test_every_audit_key_documented(live_audit):
-    text = OPERATIONS.read_text()
-    # split composite cells like `a` / `b` too — the regex already
-    # captures each span separately
-    documented = _documented_keys(text)
-    missing = sorted(set(live_audit) - documented)
-    assert not missing, (
-        f"engine.audit() keys missing from docs/OPERATIONS.md: {missing} — "
-        f"document each new counter with the invariant it witnesses")
+    rep = eng.audit_report()
+    assert isinstance(rep, AuditReport)
+    assert list(eng.audit()) == list(AuditReport.field_names())
+    assert eng.audit() == rep.as_dict()
 
 
 def test_every_serve_flag_documented():

@@ -1,0 +1,207 @@
+"""Serving-gateway semantics (DESIGN.md §14).
+
+* cancel-mid-decode frees every pager block (zero leaks — the PR 8
+  reconciliation invariant, ``pager.check_invariants`` + closed sessions);
+* backpressure rejects carry the right typed reason (queue_full vs
+  slo_shed, extending the §8 admit_blocked_* taxonomy);
+* the affinity router sends a warm-prefix request to the lane holding the
+  cached prefix even when another lane is less loaded;
+* gateway-vs-replay token streams are bitwise-identical for the same
+  requests at pipeline depths 0 and 1 (the gateway changes WHEN work is
+  scheduled, never WHAT tokens a request produces).
+"""
+import asyncio
+
+import numpy as np
+import pytest
+
+from repro import serving
+from repro.data import traces
+from repro.launch.serve import run_lanes
+from repro.serving.admission import AdmissionController
+from repro.serving.factory import build
+from repro.serving.router import AffinityRouter
+
+
+def _greq(rid, prompt, gen_len, *, tenant="t0", slo=serving.STANDARD,
+          arrival=None):
+    return serving.GenerationRequest(
+        rid=rid, prompt=tuple(int(t) for t in prompt), gen_len=gen_len,
+        tenant=tenant, slo=slo, arrival=arrival)
+
+
+def _rand_prompt(rng, n=6):
+    return rng.integers(0, 100, size=n)
+
+
+def _assert_no_leaks(eng):
+    eng.pager.check_invariants()
+    assert not eng.pager.sessions, "cancel leaked an open pager session"
+
+
+# ---------------------------------------------------------------------------
+# cancel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("depth", [0, 1])
+def test_cancel_mid_decode_frees_all_blocks(depth):
+    rng = np.random.default_rng(0)
+    engines = build("qwen2.5-32b", mode="paged_merge", batch=2, max_seq=64,
+                    block_tokens=8, lanes=1, pipeline_depth=depth)
+    gw = serving.Gateway(engines)
+
+    async def main():
+        # rid 0/1 fill both slots; rid 2's far-future arrival keeps it in
+        # the GATEWAY queue (pump releases only arrived requests)
+        streams = [gw.submit(_greq(0, _rand_prompt(rng), 40)),
+                   gw.submit(_greq(1, _rand_prompt(rng), 40)),
+                   gw.submit(_greq(2, _rand_prompt(rng), 40, arrival=1e9))]
+        ev0 = await streams[0].__anext__()
+        assert not ev0.finished and ev0.index == 0
+        assert gw.cancel(0)                 # mid-decode, blocks held
+        assert gw.cancel(2)                 # still gateway-queued
+        assert not gw.cancel(0)             # double-cancel refused
+        tails = []
+        for s in streams:
+            tails.append([ev async for ev in s])
+        await gw.drain()
+        gw.close()
+        return tails
+
+    t0, t1, t2 = asyncio.run(main())
+    assert t0[-1].finished and t0[-1].finish_reason == "cancelled"
+    assert t1[-1].finished and t1[-1].finish_reason == "budget"
+    assert len([e for e in t1 if e.token >= 0]) == 40
+    assert len(t2) == 1 and t2[0].finish_reason == "cancelled"
+    assert gw.result(0).finish_reason == "cancelled"
+    assert gw.result(2).tokens == ()
+    eng = engines[0]
+    _assert_no_leaks(eng)                   # zero-leak: PR 8 invariant
+    assert eng.audit()["cancelled"] == 1    # rid 2 never reached the engine
+    assert gw.audit()["cancelled"] == 2
+
+
+def test_cancel_preempted_request_frees_host_blocks():
+    # oversubscribed single lane (§8): force a preemption, then cancel the
+    # host-resident request — trim(close=True) must free its host slots
+    rng = np.random.default_rng(1)
+    engines = build("qwen2.5-32b", mode="paged_merge", batch=4, max_seq=64,
+                    block_tokens=8, near_window=32, lanes=1,
+                    pool_budget_frac=0.1, host_pool_blocks=40)
+    eng = engines[0]
+    from repro.core.scheduler import Request
+    for i in range(6):
+        eng.submit(Request(rid=i, prompt=rng.integers(0, 100, size=8)
+                           .astype(np.int32), gen_len=48))
+    for _ in range(3000):
+        eng.step()
+        if eng.sched.preempted:
+            break
+    assert eng.sched.preempted, "workload never triggered a preemption"
+    victim = eng.sched.preempted[0].rid
+    assert eng.cancel(victim)
+    eng.run(max_steps=3000)
+    assert len(eng.sched.finished) == 6
+    _assert_no_leaks(eng)
+    assert eng.pager.host_used == 0
+    assert eng.audit()["cancelled"] == 1
+
+
+# ---------------------------------------------------------------------------
+# typed backpressure
+# ---------------------------------------------------------------------------
+
+def test_backpressure_reasons():
+    rng = np.random.default_rng(1)
+    engines = build("qwen2.5-32b", mode="paged_merge", batch=2, max_seq=64,
+                    block_tokens=8, lanes=1)
+    adm = AdmissionController(tenant_queue_max=2, max_outstanding=100)
+    gw = serving.Gateway(engines, admission=adm)
+
+    async def main():
+        # tenant bound: submits back-to-back (no await -> pump never runs),
+        # so two gateway-queued for t-greedy means the third must reject
+        for i in range(2):
+            gw.submit(_greq(i, _rand_prompt(rng), 4, tenant="t-greedy"))
+        with pytest.raises(serving.AdmissionRejected) as ei:
+            gw.submit(_greq(9, _rand_prompt(rng), 4, tenant="t-greedy"))
+        assert ei.value.reason == serving.REJECT_QUEUE_FULL
+        # slo shed: interactive depth bound is max_queue_depth * lanes
+        cap = serving.INTERACTIVE.max_queue_depth
+        for i in range(cap):
+            gw.submit(_greq(100 + i, _rand_prompt(rng), 4,
+                            tenant=f"u{i}", slo=serving.INTERACTIVE))
+        with pytest.raises(serving.AdmissionRejected) as ei:
+            gw.submit(_greq(200, _rand_prompt(rng), 4, tenant="u-late",
+                            slo=serving.INTERACTIVE))
+        assert ei.value.reason == serving.REJECT_SLO_SHED
+        await gw.drain()
+        gw.close()
+
+    asyncio.run(main())
+    st = gw.audit()
+    assert st["rejected_per_class"]["standard"] == 1
+    assert st["shed_per_class"]["interactive"] == 1
+    assert st["admitted"] == 2 + serving.INTERACTIVE.max_queue_depth
+    _assert_no_leaks(engines[0])
+
+
+# ---------------------------------------------------------------------------
+# affinity routing
+# ---------------------------------------------------------------------------
+
+def test_affinity_router_prefers_warm_lane():
+    rng = np.random.default_rng(2)
+    engines = build("qwen2.5-32b", mode="paged_merge", batch=2, max_seq=64,
+                    block_tokens=8, lanes=2, prefix_cache=True)
+    from repro.core.scheduler import Request
+    pfx = rng.integers(0, 100, size=24)
+    # warm lane 0's radix index with the shared prefix (closed loop)
+    engines[0].submit(Request(rid=0, prompt=pfx.astype(np.int32), gen_len=3))
+    engines[0].run(max_steps=100)
+    assert engines[0].prefix_cache.match(pfx.astype(np.int32)).tokens >= 8
+
+    router = AffinityRouter()
+    warm = _greq(1, np.concatenate([pfx, _rand_prompt(rng)]), 4)
+    cold = _greq(2, _rand_prompt(rng, 24), 4)
+    # lane 0 is warm but MORE loaded — affinity must still pick it ...
+    assert router.route(warm, engines, [5, 0]) == 0
+    assert router.affinity_hits == 1
+    # ... while a cold prompt falls back to least-loaded (lane 1)
+    assert router.route(cold, engines, [5, 0]) == 1
+    assert router.affinity_misses == 1
+
+
+# ---------------------------------------------------------------------------
+# gateway-vs-replay bitwise identity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("depth", [0, 1])
+def test_gateway_token_streams_match_replay(depth):
+    tcfg = traces.TraceConfig(n_requests=6, vocab=100, token_scale=0.1,
+                              seed=11)
+    kw = dict(mode="paged_merge", batch=2, max_seq=64, block_tokens=8,
+              pipeline_depth=depth)
+
+    reqs = traces.mixed_length_workload(tcfg)
+    engines = build("qwen2.5-32b", lanes=2, **kw)
+    out = run_lanes(engines, reqs, max_steps=5000)
+    assert out["finished"] == len(reqs)
+    replay = {r.rid: list(r.generated)
+              for e in engines for r in e.sched.finished}
+
+    greqs = [_greq(r.rid, r.prompt, r.gen_len, tenant=f"t{i % 3}")
+             for i, r in enumerate(traces.mixed_length_workload(tcfg))]
+    gw = build("qwen2.5-32b", lanes=2, gateway=True, **kw)
+
+    async def main():
+        res = await asyncio.gather(*[gw.generate(g) for g in greqs])
+        await gw.drain()
+        gw.close()
+        return res
+
+    results = asyncio.run(main())
+    got = {r.rid: list(r.tokens) for r in results}
+    assert got == replay, "gateway re-scheduled WHAT, not just WHEN"
+    for eng in gw.engines:
+        _assert_no_leaks(eng)
