@@ -52,6 +52,7 @@ MODULES = [
     ("decode_skew", "benchmarks.bench_decode_skew"),
     ("sampling_eos", "benchmarks.bench_sampling_eos"),
     ("gateway_slo", "benchmarks.bench_gateway_slo"),
+    ("continuous", "benchmarks.bench_continuous"),
     ("kernels", "benchmarks.bench_kernels"),
     ("scaling", "benchmarks.bench_scaling"),
 ]

@@ -136,6 +136,45 @@ def control_plane_size(batch: int) -> int:
     return N_CONTROL_ROWS * batch
 
 
+class ControlPlane(NamedTuple):
+    """Numpy views of the three per-slot control rows inside the engine's
+    flat commit buffer (host assembly side). Unpacks positionally in the
+    row order the compiled step slices them back out."""
+    host_tokens: np.ndarray      # (B,) prompt token fed where feed == 0
+    feed_sampled: np.ndarray     # (B,) 1 = take the device-side feedback
+    rids: np.ndarray             # (B,) request id (sampler PRNG meta, §13)
+
+
+def control_plane_views(flat: np.ndarray, batch: int, *,
+                        offset: int) -> ControlPlane:
+    """ControlPlane of numpy VIEWS into ``flat`` starting at ``offset``
+    (the descriptor words precede the control rows in the commit buffer)."""
+    B = batch
+    assert flat.dtype == np.int32 and flat.size >= offset + N_CONTROL_ROWS * B
+    return ControlPlane(
+        host_tokens=flat[offset:offset + B],
+        feed_sampled=flat[offset + B:offset + 2 * B],
+        rids=flat[offset + 2 * B:offset + 3 * B])
+
+
+def refresh_control_row(cp: ControlPlane, slot: int, *, rid: int = 0) -> None:
+    """Incremental control-row refresh for ONE slot that changes owner
+    mid-pipeline (step-level admission, DESIGN.md §15).
+
+    A slot freed by EOS retirement / cancel / preemption and refilled on
+    the very next step flips exactly these three words: the rid row must
+    carry the NEW owner before its first dispatch (the sampler folds it
+    into every per-step PRNG key, so a stale rid would silently decode
+    the predecessor's stream), and the token/feed words reset so the
+    first step re-seeds from the host prompt rather than the
+    predecessor's device-side feedback chain. Everything else in the
+    committed descriptor is rebuilt per step or owned by the pager's
+    frame edits — slot ownership changes never touch it."""
+    cp.host_tokens[slot] = 0
+    cp.feed_sampled[slot] = 0
+    cp.rids[slot] = rid
+
+
 def flat_descriptor_views(flat: np.ndarray, batch: int, n_blocks: int,
                           cap: int, max_trains: int,
                           chunk_blocks: int = 1) -> "FrameDescriptor":

@@ -62,9 +62,10 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.descriptor import (FrameDescriptor, active_block_extents,
                                    chunk_flat_size, control_plane_size,
+                                   control_plane_views,
                                    descriptor_flat_size,
                                    empty_descriptor, flat_chunk_views,
-                                   flat_descriptor_views,
+                                   flat_descriptor_views, refresh_control_row,
                                    unflatten_chunk_descriptor,
                                    unflatten_descriptor)
 from repro.core.farview import FarViewPolicy
@@ -132,6 +133,12 @@ class EngineConfig:
     kernel_skip_extent: bool = True  # per-slot active-extent predication in
     #                                  the decode/prefill kernels; False =
     #                                  always-run masked baseline (A/B)
+    # --- step-level (continuous) batching (DESIGN.md §15) ---
+    continuous_batching: bool = True  # admit into freed slots at every
+    #                                  decode step; False = round-based
+    #                                  baseline (admit only once every
+    #                                  active slot has drained) for A/B
+    #                                  head-of-line-blocking measurement
 
 
 @dataclass
@@ -346,6 +353,17 @@ class KVRMEngine:
         # cancel's terminal event is the caller's to emit (no token lands).
         self.token_hook = None
         self.cancelled = 0
+        # --- step-level admission audit (DESIGN.md §15) -----------------
+        # continuous_admits counts admissions that landed while at least
+        # one other slot was mid-round (already decoding) — exactly the
+        # admissions a round-based engine would have held at the barrier.
+        # slot_idle_steps_saved integrates, per dispatched step, the slots
+        # occupied by such a mid-round admission: the idle slot-steps the
+        # barrier would have cost. Both are identically 0 when
+        # continuous_batching=False — the A/B witness.
+        self.continuous_admits = 0
+        self.slot_idle_steps_saved = 0
+        self._mid_round = np.zeros(ecfg.batch, bool)
         if self._sampled:
             if ecfg.temperature > 0 and not 0.0 < ecfg.top_p <= 1.0:
                 raise ValueError(f"top_p must be in (0, 1]: {ecfg.top_p}")
@@ -461,9 +479,10 @@ class KVRMEngine:
         # incrementally, never reallocated)
         self._flat = np.zeros(D + control_plane_size(ecfg.batch), np.int32)
         self._pdescr = flat_descriptor_views(self._flat[:D], B, NB, CAP, MT, CB)
-        self._tokens_buf = self._flat[D:D + B]
-        self._feed_buf = self._flat[D + B:D + 2 * B]
-        self._rid_buf = self._flat[D + 2 * B:D + 3 * B]
+        self._cp = control_plane_views(self._flat, B, offset=D)
+        self._tokens_buf = self._cp.host_tokens
+        self._feed_buf = self._cp.feed_sampled
+        self._rid_buf = self._cp.rids
         self._win_base_cache = np.full(ecfg.batch, -1, np.int64)
         self._win_dirty = np.ones(ecfg.batch, bool)
         self._win_groups = np.zeros(ecfg.batch, np.int64)
@@ -608,14 +627,33 @@ class KVRMEngine:
 
     # ------------------------------------------------------------------
     def _admit(self, now: float) -> None:
+        """Step-level admission gate (DESIGN.md §15). With continuous
+        batching (the default) every call falls through to
+        ``_admit_into_free_slots``: a slot freed by EOS retirement, cancel
+        or preemption is refilled on the very next decode step, while the
+        surviving slots keep stepping. The round-based baseline instead
+        holds the scheduler at a barrier (``hold=True``, which audits the
+        stall) until the current round has fully drained."""
+        if not self.e.continuous_batching and self.sched.active_slots():
+            self.sched.admit(now, hold=True)
+            return
+        self._admit_into_free_slots(now)
+
+    def _admit_into_free_slots(self, now: float) -> None:
         kv_ok = self._admission_ok if self._host_tier else None
         self._resume_pending = 0         # per-admit-call swap-in demand
+        # an admission is "mid-round" when another slot is already decoding
+        # — the case a round-based engine would have left this slot idle
+        mid_round = bool(self.sched.active_slots())
         for slot, req, sid in self.sched.admit(now, kv_ok=kv_ok):
             self._win_dirty[slot] = True
             self._win_base_cache[slot] = -1
             self._feed_ok[slot] = False
-            self._rid_buf[slot] = req.rid    # sampler rng meta (§13)
+            refresh_control_row(self._cp, slot, rid=req.rid)  # rng meta §13
             self._step_touched.add(slot)
+            if mid_round:
+                self.continuous_admits += 1
+                self._mid_round[slot] = True
             if req.swap_sid >= 0 and req.swap_sid == sid:
                 # resume from the host tier (DESIGN.md §8): swap the window
                 # working set back onto device in merged groups and
@@ -890,7 +928,8 @@ class KVRMEngine:
             self._slot_sid[slot] = -1
         self._slot_len[slot] = 0
         self._feed_ok[slot] = False
-        self._rid_buf[slot] = 0
+        self._mid_round[slot] = False
+        refresh_control_row(self._cp, slot, rid=0)
         d = self._pdescr
         d.block_table[slot, :] = 0
         d.train_len[slot, :] = 0
@@ -1174,7 +1213,8 @@ class KVRMEngine:
         self._slot_sid[slot] = -1
         self._slot_len[slot] = 0
         self._feed_ok[slot] = False
-        self._rid_buf[slot] = 0
+        self._mid_round[slot] = False
+        refresh_control_row(self._cp, slot, rid=0)
         d = self._pdescr
         d.block_table[slot, :] = 0
         d.train_len[slot, :] = 0
@@ -1415,6 +1455,9 @@ class KVRMEngine:
             self._account_kernel_blocks(descr.window_base[parts],
                                         descr.seq_lens[parts],
                                         descr.slot_active[parts])
+            # §15: each participating mid-round-admitted slot is one
+            # slot-step a round barrier would have left idle
+            self.slot_idle_steps_saved += int(self._mid_round[parts].sum())
 
         # ---- Frame: single atomic commit
         tf0 = time.perf_counter()
@@ -1592,6 +1635,9 @@ class KVRMEngine:
             kskip = self._account_kernel_blocks(d.window_base[pa],
                                                 d.seq_lens[pa],
                                                 d.slot_active[pa])
+            # §15: each participating mid-round-admitted slot is one
+            # slot-step a round barrier would have left idle
+            self.slot_idle_steps_saved += int(self._mid_round[pa].sum())
 
         # sampled decode (§13): snapshot each emitting slot's share of THIS
         # step's pager/transport/kernel accounting so a lagged detected-EOS
@@ -1603,6 +1649,10 @@ class KVRMEngine:
             for slot, _req in emits:
                 i = idx[slot]
                 eos_meta[slot] = {
+                    # ownership stamp (§15): a slot re-admitted inside the
+                    # pipeline-lag window must never be scrubbed by its
+                    # PREDECESSOR's overshoot — _scrub_overshoot checks it
+                    "rid": _req.rid,
                     "sid": (int(self._slot_sid[slot])
                             if self.e.mode != "arena" else -1),
                     "newb": resv.get(slot, []),
@@ -1730,6 +1780,13 @@ class KVRMEngine:
                 continue
             rec["emits"].remove(hit)
             meta = rec["eos"][slot]
+            # §15 slot-reuse-inside-lag-window guard: emits matched by
+            # ``req`` identity above, so a successor admitted into this
+            # slot while the overshoot was still in flight can never be
+            # scrubbed here — the rid stamp makes that contract checkable
+            assert meta["rid"] == req.rid, \
+                (f"§15 scrub ownership violated: slot {slot} eos_meta "
+                 f"stamped rid={meta['rid']} but scrubbing rid={req.rid}")
             req.emitted -= 1
             self._slot_len[slot] -= 1
             self.eos_overshoot_tokens += 1
@@ -1856,6 +1913,16 @@ class KVRMEngine:
             "admit_blocked_kv_watermark":
                 self.sched.admit_blocked["kv_watermark"],
             "cancelled": self.cancelled,
+            # --- step-level (continuous) batching (DESIGN.md §15).
+            # continuous_admits / slot_idle_steps_saved count what a round
+            # barrier would have cost; admit_blocked_round_barrier counts
+            # what the barrier DID cost. Each triple's zero side is the
+            # A/B witness for the opposite mode.
+            "continuous_batching": bool(self.e.continuous_batching),
+            "continuous_admits": self.continuous_admits,
+            "slot_idle_steps_saved": self.slot_idle_steps_saved,
+            "admit_blocked_round_barrier":
+                self.sched.admit_blocked["round_barrier"],
             # --- radix prefix cache (DESIGN.md §9): shared-prefix reuse.
             # COW tail copies are their own transport group kind so prefix
             # traffic is auditable apart from window trains and swaps.

@@ -87,8 +87,13 @@ class Scheduler:
         # admission-stall counters: one count per admit() call whose queue
         # head was arrived but could not be placed, keyed by why — lets
         # operators split compute-bound (no_slot) from memory-bound
-        # (kv_watermark) queueing in serve.py's audit
-        self.admit_blocked = {"no_slot": 0, "kv_watermark": 0}
+        # (kv_watermark) queueing in serve.py's audit. "round_barrier"
+        # counts admit() calls held by round-based batching (an arrived
+        # request existed but the engine's --no-continuous-batching
+        # barrier kept every free slot idle, DESIGN.md §15) — identically
+        # 0 under step-level (continuous) admission.
+        self.admit_blocked = {"no_slot": 0, "kv_watermark": 0,
+                              "round_barrier": 0}
 
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -101,9 +106,18 @@ class Scheduler:
     def active_slots(self) -> List[int]:
         return [i for i, s in enumerate(self.slots) if s.rid >= 0]
 
-    def admit(self, now: float = float("inf"), kv_ok=None) -> List[tuple]:
+    def admit(self, now: float = float("inf"), kv_ok=None,
+              hold: bool = False) -> List[tuple]:
         """Admit waiting requests (arrival <= now) into free slots.
         Returns [(slot, request, sid)] admissions.
+
+        This is the STEP-LEVEL admission primitive (DESIGN.md §15): the
+        engine calls it at the top of every decode step, so a slot freed
+        by EOS retirement, cancel or preemption is refilled on the very
+        next step. ``hold=True`` is the round-based baseline's barrier:
+        nothing is admitted, but an arrived request held back by the
+        barrier counts one ``admit_blocked['round_barrier']`` stall so
+        the A/B cost is auditable.
 
         Preempted requests resume FIRST (FIFO within the preempted queue)
         and reuse their swapped-out pager session (``req.swap_sid``); fresh
@@ -119,6 +133,11 @@ class Scheduler:
         An installed ``self.policy`` (§14) reorders the FRESH queue's
         consideration order; with the default identity policy the walk —
         and every counter — is bit-identical to the seed FIFO."""
+        if hold:
+            if any(r.arrival <= now for r in self.preempted) \
+                    or any(r.arrival <= now for r in self.waiting):
+                self.admit_blocked["round_barrier"] += 1
+            return []
         out = []
         free = self.free_slots()
         blocked = False

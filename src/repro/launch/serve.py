@@ -287,6 +287,19 @@ def build_arg_parser() -> argparse.ArgumentParser:
                          "grid step runs its block even when fully masked "
                          "— the always-run A/B baseline for the skip "
                          "identity gate (kernel_blocks_skipped audits 0)")
+    ap.add_argument("--continuous-batching", dest="continuous_batching",
+                    action="store_true", default=True,
+                    help="step-level admission (DESIGN.md §15, default on): "
+                         "a slot freed by EOS retirement, cancel or "
+                         "preemption is refilled at the very next decode "
+                         "step while surviving slots keep stepping; the "
+                         "gateway releases arrived requests immediately")
+    ap.add_argument("--no-continuous-batching", dest="continuous_batching",
+                    action="store_false",
+                    help="round-based A/B baseline (DESIGN.md §15): admit "
+                         "only once every active slot has drained — the "
+                         "head-of-line-blocking baseline for the TTFT gate "
+                         "(continuous_admits/slot_idle_steps_saved audit 0)")
     # --- on-device sampling + detected-EOS retirement (DESIGN.md §13).
     # Passing ANY of these switches the engine out of the legacy greedy
     # budget-EOS path (greedy=False); with none of them the run stays
@@ -376,7 +389,8 @@ def main(argv=None):
                           prefix_cache_blocks=args.prefix_cache_blocks,
                           kv_dtype=args.kv_dtype,
                           async_movement=not args.no_async_movement,
-                          kernel_skip_extent=not args.no_kernel_skip)
+                          kernel_skip_extent=not args.no_kernel_skip,
+                          continuous_batching=args.continuous_batching)
     tcfg = traces.TraceConfig(n_requests=args.requests,
                               vocab=engines[0].cfg.vocab_size,
                               token_scale=args.token_scale,

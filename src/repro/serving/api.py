@@ -221,6 +221,11 @@ class AuditReport:
     admit_blocked_no_slot: int
     admit_blocked_kv_watermark: int
     cancelled: int
+    # --- step-level (continuous) batching (§15) ---
+    continuous_batching: bool
+    continuous_admits: int
+    slot_idle_steps_saved: int
+    admit_blocked_round_barrier: int
     # --- radix prefix cache (§9) ---
     prefix_cache: bool
     prefix_hits: int

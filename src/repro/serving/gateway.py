@@ -140,7 +140,18 @@ class Gateway:
         return self._out_class.get(cls, 0)
 
     def tenant_queued(self, tenant: str) -> int:
-        return sum(len(qs[tenant]) for qs in self._queues if tenant in qs)
+        """Requests a tenant has pending BEFORE a decode slot: gateway
+        tenant queues plus the engines' own waiting queues (§15 —
+        continuous release hands arrived requests to the engine
+        immediately, so the engine-side queue must count toward the
+        per-tenant admission bound or it would never trip)."""
+        gw_q = sum(len(qs[tenant]) for qs in self._queues if tenant in qs)
+        eng_rids = set()
+        for eng in self.engines:
+            eng_rids.update(r.rid for r in eng.sched.waiting)
+        eng_q = sum(1 for rid, (greq, _r, _l) in self._greqs.items()
+                    if greq.tenant == tenant and rid in eng_rids)
+        return gw_q + eng_q
 
     def _lane_depth(self, lane: int) -> int:
         eng = self.engines[lane]
@@ -214,14 +225,20 @@ class Gateway:
 
     def _release(self, lane: int, now: float) -> None:
         """Move arrived requests from this lane's tenant queues into the
-        engine, one per tenant per pass (round-robin), while the engine's
-        own waiting queue is shallower than its slot width — deep enough
-        to keep slots fed, shallow enough that gateway fairness ordering
-        (not engine FIFO) decides who goes next."""
+        engine, one per tenant per pass (round-robin). With a
+        continuous-batching engine (§15) every arrived request is released
+        immediately — the engine refills freed slots at each step, so
+        holding requests at the gateway would only re-introduce the round
+        barrier one layer up; RR order still decides WHO goes first. With
+        the round-based baseline the release keeps the engine's waiting
+        queue shallower than its slot width — deep enough to keep slots
+        fed, shallow enough that gateway fairness ordering (not engine
+        FIFO) decides who goes next."""
         eng = self.engines[lane]
         qs = self._queues[lane]
         tenants = sorted(qs)
-        while tenants and len(eng.sched.waiting) < eng.e.batch:
+        cap = float("inf") if eng.e.continuous_batching else eng.e.batch
+        while tenants and len(eng.sched.waiting) < cap:
             released = False
             for k in range(len(tenants)):
                 t = tenants[(self._rr[lane] + k) % len(tenants)]

@@ -1,0 +1,276 @@
+"""Step-level (continuous) batching (DESIGN.md §15).
+
+* **identity matrix** — continuous vs round-based admission may only
+  move WHEN a request runs, never WHAT it computes: per-rid token
+  streams are bitwise identical between the two modes at pipeline
+  depths 0/1/2 across the feature matrix {prefix cache, fp8/int8
+  quantized KV, oversubscription + preemption, sampled stop-token
+  decode}, with the A/B counter witnesses checked on both arms
+  (``continuous_admits`` / ``slot_idle_steps_saved`` identically 0 on
+  the round arm, ``admit_blocked_round_barrier`` 0 on the continuous
+  arm).
+* **slot reuse inside the pipeline-lag window** — a slot retired by a
+  detected stop at depth 2 is re-admitted while its predecessor's
+  overshoot dispatches are still in flight; the §15 rid-stamped
+  ``eos_meta`` ownership assert in ``_scrub_overshoot`` guards the
+  successor from being scrubbed for the predecessor's overshoot.
+* **gateway cancel-then-immediate-readmit** — cancelling a mid-decode
+  request and submitting a replacement in the same pump cycle reuses
+  the freed slot with zero leaked blocks.
+* **round-barrier scheduler unit** — ``admit(hold=True)`` admits
+  nothing and audits a stall exactly when an arrived request exists.
+"""
+import asyncio
+
+import jax
+import numpy as np
+import pytest
+
+from repro import serving
+from repro.configs import get_reduced
+from repro.core.engine import EngineConfig, KVRMEngine
+from repro.core.scheduler import Request, Scheduler
+from repro.models import registry
+from repro.serving.factory import build
+
+BASE = dict(mode="paged_merge", batch=4, max_seq=64, block_tokens=8)
+
+
+@pytest.fixture(scope="module")
+def dense_setup():
+    cfg = get_reduced("qwen2.5-32b")
+    params = registry.init_params(jax.random.PRNGKey(7), cfg)
+    return cfg, params
+
+
+def _mixed_reqs(vocab, n=8, stops=(), shared_len=0, seed=5):
+    """Variable gen lengths on purpose: slots free at different steps, so
+    the continuous arm admits mid-round while the round arm barriers."""
+    lens = [(6, 20), (5, 3), (9, 12), (4, 2), (7, 8), (6, 2), (5, 5), (8, 3)]
+    rng = np.random.default_rng(seed)
+    shared = (rng.integers(0, vocab, size=shared_len).astype(np.int32)
+              if shared_len else None)
+    reqs = []
+    for i, (p, g) in enumerate(lens[:n]):
+        pr = rng.integers(0, vocab, size=p).astype(np.int32)
+        if shared is not None:
+            pr = np.concatenate([shared, pr])
+        reqs.append(Request(rid=i, prompt=pr, gen_len=g, stop_tokens=stops))
+    return reqs
+
+
+def _oversub_reqs(vocab):
+    # staggered lengths, tuned against the §8 watermark: the two 48s keep
+    # the 0.4-budget pool oversubscribed long enough to force preemption,
+    # while the mid-length requests retire one at a time so pressure
+    # relaxes below the admission gate WHILE the longs still run — the
+    # queued shorts then land mid-round (a uniform workload either drains
+    # all at once or stays pinned above the watermark, and never admits
+    # mid-round at all)
+    rng = np.random.default_rng(1)
+    lens = [48, 48, 36, 24, 12, 6, 6, 6]
+    return [Request(rid=i, prompt=rng.integers(0, vocab, size=4)
+                    .astype(np.int32), gen_len=g)
+            for i, g in enumerate(lens)]
+
+
+# the feature matrix: every stateful subsystem mid-round admission
+# intersects (§9 aliasing, §10 scale pools, §8 preemption, §13 readback
+# retirement). fp8 and int8 split across depths to bound suite time while
+# covering both storage widths.
+MATRIX = [
+    ("prefix_cache", 0, dict(prefix_cache=True)),
+    ("prefix_cache", 1, dict(prefix_cache=True)),
+    ("prefix_cache", 2, dict(prefix_cache=True)),
+    ("quant_fp8", 0, dict(kv_dtype="fp8_e4m3")),
+    ("quant_int8", 1, dict(kv_dtype="int8")),
+    ("quant_fp8", 2, dict(kv_dtype="fp8_e4m3")),
+    ("oversubscribe", 0, dict(near_window=32, pool_budget_frac=0.4,
+                              host_pool_blocks=40)),
+    ("oversubscribe", 1, dict(near_window=32, pool_budget_frac=0.4,
+                              host_pool_blocks=40)),
+    ("oversubscribe", 2, dict(near_window=32, pool_budget_frac=0.4,
+                              host_pool_blocks=40)),
+    ("sampled_stop", 0, dict(greedy=False, temperature=1.2, top_k=50,
+                             top_p=0.95, sample_seed=123)),
+    ("sampled_stop", 1, dict(greedy=False, temperature=1.2, top_k=50,
+                             top_p=0.95, sample_seed=123)),
+    ("sampled_stop", 2, dict(greedy=False, temperature=1.2, top_k=50,
+                             top_p=0.95, sample_seed=123)),
+]
+
+
+def _reqs_for(feature, vocab):
+    if feature == "oversubscribe":
+        return _oversub_reqs(vocab)
+    if feature == "prefix_cache":
+        return _mixed_reqs(vocab, shared_len=16)
+    if feature == "sampled_stop":
+        return _mixed_reqs(vocab, stops=(7,))
+    return _mixed_reqs(vocab)
+
+
+@pytest.mark.parametrize("feature,depth,kw",
+                         MATRIX, ids=[f"{f}-d{d}" for f, d, _ in MATRIX])
+def test_stream_identity_continuous_vs_round(dense_setup, feature, depth, kw):
+    cfg, params = dense_setup
+    streams, engines = {}, {}
+    for cb in (True, False):
+        eng = KVRMEngine(cfg, params, EngineConfig(
+            **BASE, pipeline_depth=depth, continuous_batching=cb, **kw))
+        for r in _reqs_for(feature, cfg.vocab_size):
+            eng.submit(r)
+        eng.run(max_steps=4000)
+        streams[cb] = {r.rid: list(map(int, r.generated))
+                       for r in eng.sched.finished}
+        engines[cb] = eng
+
+    n = len(_reqs_for(feature, cfg.vocab_size))
+    assert len(streams[True]) == len(streams[False]) == n
+    # same rid => same tokens: admission schedule moved, streams did not
+    assert streams[True] == streams[False], feature
+
+    ca, ra = engines[True].audit(), engines[False].audit()
+    assert ca["continuous_batching"] and not ra["continuous_batching"]
+    # the A/B witnesses: each arm's zero side proves its mode
+    assert ca["continuous_admits"] > 0, "no mid-round admission exercised"
+    assert ca["slot_idle_steps_saved"] > 0
+    assert ca["admit_blocked_round_barrier"] == 0
+    assert ra["continuous_admits"] == 0
+    assert ra["slot_idle_steps_saved"] == 0
+    assert ra["admit_blocked_round_barrier"] > 0, "barrier never held anyone"
+    if feature == "oversubscribe":
+        # the feature actually intersected mid-round admission: the pool
+        # really was oversubscribed in both arms
+        assert ca["preemptions"] >= 1 and ra["preemptions"] >= 1
+    for eng in engines.values():
+        eng.pager.check_invariants()
+        if feature != "prefix_cache":    # the radix index legitimately pins
+            assert eng.pager.reserved_blocks() == 0
+            assert eng.pager.host_used == 0
+
+
+# ---------------------------------------------------------------------------
+# slot reuse inside the pipeline-lag window (§15 scrub ownership)
+# ---------------------------------------------------------------------------
+
+def test_slot_reuse_inside_lag_window_never_scrubbed(dense_setup):
+    """rid 0 stops early at depth 2, so its slot retires at readback with
+    overshoot dispatches still in flight; the very next step admits a
+    successor into the SAME slot — inside the lag window. The §15 rid
+    stamp in ``eos_meta`` asserts the successor is never scrubbed for the
+    predecessor's overshoot, and the streams must equal the depth-0 run's."""
+    cfg, params = dense_setup
+
+    def _reqs(stop):
+        rng = np.random.default_rng(9)
+        # batch=2: rids 0/1 fill the round; 2/3 queue behind it
+        return [Request(rid=i, prompt=rng.integers(0, cfg.vocab_size, size=5)
+                        .astype(np.int32), gen_len=12,
+                        stop_tokens=(stop,) if i == 0 else ())
+                for i in range(4)]
+
+    # derive rid 0's early stop from its own argmax stream (temperature=0
+    # is the sampler's exact argmax branch, so the stop WILL be emitted)
+    probe = KVRMEngine(cfg, params, EngineConfig(
+        mode="paged_merge", batch=2, max_seq=64, block_tokens=8,
+        pipeline_depth=0, greedy=False, temperature=0.0))
+    for r in _reqs(stop=-1):
+        probe.submit(r)
+    probe.run(max_steps=500)
+    ref = {r.rid: list(map(int, r.generated)) for r in probe.sched.finished}
+    stop = ref[0][2]
+
+    outs = {}
+    for depth in (0, 2):
+        eng = KVRMEngine(cfg, params, EngineConfig(
+            mode="paged_merge", batch=2, max_seq=64, block_tokens=8,
+            pipeline_depth=depth, greedy=False, temperature=0.0))
+        for r in _reqs(stop):
+            eng.submit(r)
+        eng.run(max_steps=500)
+        outs[depth] = {r.rid: list(map(int, r.generated))
+                       for r in eng.sched.finished}
+        a = eng.audit()
+        assert a["continuous_admits"] >= 2      # rids 2/3 landed mid-round
+        if depth == 2:
+            # the hazard actually occurred: overshoot was in flight when
+            # the slot retired and the successor took it the next step
+            assert a["eos_detected"] == 1
+            assert a["eos_overshoot_tokens"] > 0
+            assert a["eos_reconciled_blocks"] >= 0
+        eng.pager.check_invariants()
+        assert eng.pager.reserved_blocks() == 0
+
+    cut = ref[0].index(stop) + 1
+    assert outs[0][0] == ref[0][:cut]
+    assert outs[2] == outs[0]     # depth changed nothing, scrub included
+
+
+# ---------------------------------------------------------------------------
+# gateway: cancel then immediate readmit reuses the slot, zero leaks
+# ---------------------------------------------------------------------------
+
+def test_gateway_cancel_then_immediate_readmit_zero_leak():
+    rng = np.random.default_rng(3)
+    engines = build("qwen2.5-32b", mode="paged_merge", batch=2, max_seq=64,
+                    block_tokens=8, lanes=1, pipeline_depth=1)
+    gw = serving.Gateway(engines)
+
+    def _greq(rid, gen_len):
+        return serving.GenerationRequest(
+            rid=rid, prompt=tuple(int(t) for t in rng.integers(0, 100, 6)),
+            gen_len=gen_len)
+
+    async def main():
+        s0 = gw.submit(_greq(0, 40))
+        s1 = gw.submit(_greq(1, 40))
+        ev = await s0.__anext__()
+        assert not ev.finished
+        # cancel rid 0 mid-decode and readmit a replacement IMMEDIATELY —
+        # the freed slot must be reused on the next pump step, while rid 1
+        # keeps decoding (no round drain in between)
+        assert gw.cancel(0)
+        s2 = gw.submit(_greq(2, 4))
+        t2 = [e async for e in s2]
+        t1 = [e async for e in s1]
+        t0 = [e async for e in s0]
+        await gw.drain()
+        gw.close()
+        return t0, t1, t2
+
+    t0, t1, t2 = asyncio.run(main())
+    assert t0[-1].finish_reason == "cancelled"
+    assert t1[-1].finish_reason == "budget"
+    assert len([e for e in t1 if e.token >= 0]) == 40
+    assert t2[-1].finish_reason == "budget"
+    assert len([e for e in t2 if e.token >= 0]) == 4
+    eng = engines[0]
+    a = eng.audit()
+    # rid 2 landed while rid 1 was mid-round: continuous admission at work
+    assert a["continuous_admits"] >= 1
+    assert a["cancelled"] == 1
+    eng.pager.check_invariants()
+    assert not eng.pager.sessions, "cancel-then-readmit leaked a session"
+    assert eng.pager.reserved_blocks() == 0
+    assert eng.pager.host_used == 0
+
+
+# ---------------------------------------------------------------------------
+# scheduler unit: the round barrier
+# ---------------------------------------------------------------------------
+
+def test_admit_hold_admits_nothing_and_audits_the_stall():
+    s = Scheduler(2)
+    assert s.admit(hold=True) == []
+    assert s.admit_blocked["round_barrier"] == 0    # nobody was held
+    s.submit(Request(rid=0, prompt=np.arange(4, dtype=np.int32), gen_len=3))
+    assert s.admit(hold=True) == []
+    assert s.admit_blocked["round_barrier"] == 1
+    assert s.free_slots() == [0, 1]                 # barrier placed nothing
+    # a not-yet-arrived request is not "held" by the barrier
+    s.waiting[0].arrival = 50.0
+    assert s.admit(now=10.0, hold=True) == []
+    assert s.admit_blocked["round_barrier"] == 1
+    (slot, req, sid), = s.admit(now=100.0)          # barrier lifted
+    assert slot == 0 and req.rid == 0

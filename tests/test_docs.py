@@ -75,6 +75,32 @@ def test_every_serve_flag_documented():
 
 
 # ---------------------------------------------------------------------------
+# benchmark hygiene: every bench engine goes through the serving factory
+# ---------------------------------------------------------------------------
+
+def test_no_benchmark_constructs_engine_directly():
+    """Benchmarks must build engines via ``serving.build`` (through
+    ``benchmarks.common.engine``), never hand-roll ``KVRMEngine(...)`` /
+    ``EngineConfig(...)`` — the factory is where params caching, lane
+    wiring and flag defaults live (§14), and a hand-rolled engine
+    silently diverges from what ``serve.py`` actually runs. common.py may
+    IMPORT the class for type annotations; nothing may instantiate it."""
+    errors = []
+    for py in sorted((REPO / "benchmarks").glob("*.py")):
+        text = py.read_text()
+        for pat in (r"\bKVRMEngine\s*\(", r"\bEngineConfig\s*\("):
+            for m in re.finditer(pat, text):
+                line = text.count("\n", 0, m.start()) + 1
+                errors.append(f"{py.relative_to(REPO)}:{line}: "
+                              f"direct {m.group(0).rstrip('(').strip()}() "
+                              f"construction — use benchmarks.common.engine")
+        if py.name != "common.py" and "core.engine" in text:
+            errors.append(f"{py.relative_to(REPO)}: imports repro.core."
+                          f"engine — route through benchmarks.common")
+    assert not errors, "\n".join(errors)
+
+
+# ---------------------------------------------------------------------------
 # markdown link check: relative links resolve, fragments match headings
 # ---------------------------------------------------------------------------
 

@@ -53,10 +53,10 @@ def _reqs(vocab):
             for i, (p, g) in enumerate(LENS)]
 
 
-def _run(cfg, params, depth):
+def _run(cfg, params, depth, **kw):
     eng = KVRMEngine(cfg, params, EngineConfig(
         mode="paged_merge", batch=4, max_seq=64, block_tokens=8,
-        pipeline_depth=depth))
+        pipeline_depth=depth, **kw))
     for r in _reqs(cfg.vocab_size):
         eng.submit(r)
     eng.run(max_steps=500)
@@ -86,5 +86,30 @@ def test_legacy_greedy_pinned_to_pr7_baseline(dense_setup):
         assert a["eos_reconciled_blocks"] == 0
         assert a["single_commit_per_step"]
         assert a["compilations"] in (-1, 1)
+        eng.pager.check_invariants()
+        assert eng.pager.reserved_blocks() == 0
+
+
+def test_round_based_baseline_pinned_to_same_golden_stream(dense_setup):
+    """--no-continuous-batching (DESIGN.md §15) moves WHEN the queued tail
+    of this 9-request trace runs (slots drain round-by-round, so more
+    engine steps), but per-rid token streams are schedule-invariant: the
+    round-based baseline must reproduce the exact golden digest at depths
+    0 and 1, with the barrier's cost audited and the continuous witnesses
+    identically zero."""
+    cfg, params = dense_setup
+    for depth in (0, 1):
+        eng, toks, digest = _run(cfg, params, depth,
+                                 continuous_batching=False)
+        assert len(toks) == len(LENS)
+        assert digest == GOLDEN_DIGEST, \
+            f"round-based stream drifted at depth {depth}: {digest}"
+        a = eng.audit()
+        assert a["continuous_batching"] is False
+        assert a["continuous_admits"] == 0
+        assert a["slot_idle_steps_saved"] == 0
+        # 9 requests on 4 slots: the round barrier held someone back
+        assert a["admit_blocked_round_barrier"] > 0
+        assert eng.steps_run > GOLDEN_STEPS_RUN
         eng.pager.check_invariants()
         assert eng.pager.reserved_blocks() == 0

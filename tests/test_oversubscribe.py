@@ -289,6 +289,148 @@ def test_kv_gate_blocks_fresh_behind_blocked_resume():
 
 
 # ---------------------------------------------------------------------------
+# coupled scheduler + pager + transport fuzz with mid-round admission (§15)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from(["submit", "admit", "append",
+                                           "retire", "preempt", "cancel",
+                                           "eos", "frame"]),
+                          st.integers(0, 7), st.integers(1, 48)),
+                min_size=1, max_size=80))
+def test_continuous_admission_invariants_fuzz(ops):
+    """Random interleavings of the engine's slot lifecycle verbs — with
+    ``admit`` callable at ANY point, i.e. step-level (continuous)
+    admission into mid-round freed slots (DESIGN.md §15) — preserve the
+    pager's two-tier invariants AND the slot<->session consistency the
+    engine relies on: every active slot's session is device-resident,
+    every preempted request's session is host-resident, and draining
+    everything empties both pools."""
+    sched = Scheduler(3)
+    p = BlockPager(48, 8, span_blocks=1, host_pool_blocks=24)
+    t = MergeStagedTransport(block_bytes=512, merge_threshold_bytes=4096,
+                             max_hold_steps=2, max_trains=8)
+    next_rid = [0]
+    bt = p.block_tokens
+
+    def kv_ok_gate():
+        # commit-on-accept, like the engine's §8 gate: later candidates in
+        # the same admit() call must see earlier ones' demand or a burst
+        # jointly overshoots the pool (swap_in_begin cannot roll back)
+        budget = {"free": p.free_blocks()}
+
+        def kv_ok(req, is_resume):
+            if is_resume:
+                s = p.sessions[req.swap_sid]
+                need = sum(1 for b in s.blocks if b < 0) + 2
+            else:
+                need = -(-(len(req.prompt) + 1) // bt) + 2
+            if budget["free"] < need:
+                return False
+            budget["free"] -= need
+            return True
+        return kv_ok
+
+    def check():
+        p.check_invariants()
+        for slot in sched.active_slots():
+            sid = sched.slots[slot].sid
+            assert sid in p.sessions, f"active slot {slot} lost session"
+            assert p.sessions[sid].swap_state == RES_DEVICE
+        for req in sched.preempted:
+            assert p.sessions[req.swap_sid].swap_state == RES_HOST
+        # a retired/cancelled request's session never lingers: live pager
+        # sessions are exactly the active + preempted ones
+        live = {sched.slots[s].sid for s in sched.active_slots()}
+        live |= {r.swap_sid for r in sched.preempted}
+        assert set(p.sessions) == live
+
+    def drop_active(slot):
+        p.trim(sched.slots[slot].sid, close=True)
+        sched.retire(slot)
+
+    for op, k, n in ops:
+        active = sched.active_slots()
+        try:
+            if op == "submit":
+                sched.submit(_req(next_rid[0], plen=1 + k % 6, gen=n))
+                next_rid[0] += 1
+            elif op == "admit":
+                # the §15 verb: admit with whatever mix of free/active
+                # slots this interleaving produced — mid-round included
+                for slot, req, sid in sched.admit(kv_ok=kv_ok_gate()):
+                    if req.swap_sid == sid:          # resume
+                        pairs = p.swap_in_begin(sid, 0)
+                        t.account_swap(pairs, direction="in")
+                        p.swap_in_commit(sid)
+                        req.swap_sid = -1
+                    else:                            # fresh
+                        p.open_session(sid)
+                        try:    # reserve rolls back on failure (§8); the
+                            #     open session stays, appends retry later
+                            p.reserve(sid, len(req.prompt) + 1)
+                            for _ in range(len(req.prompt)):
+                                p.append_token(sid)
+                        except MemoryError:
+                            pass
+            elif op == "append" and active:
+                sid = sched.slots[active[k % len(active)]].sid
+                s = p.sessions[sid]
+                if s.length >= len(s.blocks) * bt:
+                    p.reserve(sid, bt)
+                p.append_token(sid)
+            elif op == "retire" and active:
+                drop_active(active[k % len(active)])
+            elif op == "preempt" and active:
+                slot = active[k % len(active)]
+                sid = sched.slots[slot].sid
+                pairs = (p.swap_out_session(sid)
+                         if p.swap_eligible(sid) else None)
+                if pairs is not None:
+                    t.account_swap(pairs, direction="out")
+                    sched.preempt(slot).swap_sid = sid
+            elif op == "cancel":
+                # any lifecycle stage is cancellable: waiting (drop),
+                # preempted (free host blocks), active (free the slot)
+                pool = ([("w", r) for r in sched.waiting]
+                        + [("p", r) for r in sched.preempted]
+                        + [("a", s) for s in active])
+                if pool:
+                    kind, x = pool[k % len(pool)]
+                    if kind == "w":
+                        sched.waiting.remove(x)
+                    elif kind == "p":
+                        p.trim(x.swap_sid, close=True)
+                        sched.preempted.remove(x)
+                    else:
+                        drop_active(x)
+            elif op == "eos" and active:
+                # lagged-EOS overshoot scrub (§13) on a live mid-round slot
+                sid = sched.slots[active[k % len(active)]].sid
+                s = p.sessions[sid]
+                newb = p.reserve(sid, 1)
+                local = s.length - s.trimmed_prefix_blocks * bt
+                if s.blocks[local // bt] > 0:
+                    p.append_token(sid)
+                    p.reconcile_overshoot(sid, newb, 1)
+                else:
+                    p.reconcile_overshoot(sid, newb, 0)
+            elif op == "frame":
+                p.frame()
+        except MemoryError:
+            pass
+        check()
+    for slot in sched.active_slots():
+        drop_active(slot)
+    for req in list(sched.preempted):
+        p.trim(req.swap_sid, close=True)
+        sched.preempted.remove(req)
+    check()
+    assert p.reserved_blocks() == 0 and p.host_used == 0
+    assert sched.free_slots() == list(range(3))
+
+
+# ---------------------------------------------------------------------------
 # engine: preempt -> resume round-trip is bitwise identical
 # ---------------------------------------------------------------------------
 
